@@ -1,0 +1,27 @@
+"""Paper §VI future plans: the 'bandwidth map' — bandwidth vs working-set
+size, exposing the memory-hierarchy levels of the node.
+
+Two maps: (a) measured on this host (CPU caches show up as plateaus),
+(b) modeled for the TPU v5e target from the datasheet (VMEM / HBM levels).
+"""
+
+from repro.core import hwinfo
+from repro.core.bandwidth import measure_map, model_map, render_map
+
+
+def run(csv):
+    pts = measure_map(repeats=3)
+    print(render_map(pts, title="bandwidth map — this host (measured, CPU)"))
+    print()
+    chip = hwinfo.DEFAULT_CHIP
+    modeled = model_map(chip)
+    print(render_map(modeled,
+                     title=f"bandwidth map — {chip.name} (datasheet model)"))
+
+    peak = max(p.bandwidth for p in pts)
+    big = [p for p in pts if p.working_set_bytes >= 64 * 2 ** 20]
+    dram = min(big, key=lambda p: p.bandwidth).bandwidth if big else peak
+    print(f"\nhost cache peak {peak/1e9:.1f} GB/s, DRAM-ish {dram/1e9:.1f} GB/s")
+    assert peak >= dram > 0
+    csv.append(("bandwidth_map_host", 0.0,
+                f"peak_GBps={peak/1e9:.1f};dram_GBps={dram/1e9:.1f}"))

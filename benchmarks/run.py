@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run perfctr    # one
+
+Prints each bench's human-readable output, then a ``name,us_per_call,
+derived`` CSV block at the end.
+"""
+
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_bandwidth_map, bench_jacobi_traffic,
+                        bench_marker_overhead, bench_perfctr,
+                        bench_stencil_pinning, bench_stream_pinning)
+
+BENCHES = {
+    "perfctr": bench_perfctr,              # §II-A listing
+    "stream_pinning": bench_stream_pinning,  # Figs 4-10
+    "stencil_pinning": bench_stencil_pinning,  # Fig 11
+    "jacobi_traffic": bench_jacobi_traffic,  # Table I
+    "marker_overhead": bench_marker_overhead,  # zero-overhead claim
+    "bandwidth_map": bench_bandwidth_map,   # §VI future plans
+}
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    names = argv or list(BENCHES)
+    csv = []
+    failures = 0
+    for name in names:
+        mod = BENCHES[name]
+        print("=" * 72)
+        print(f"== bench: {name}   ({mod.__doc__.strip().splitlines()[0]})")
+        print("=" * 72)
+        t0 = time.perf_counter()
+        try:
+            mod.run(csv)
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+        print(f"[{name}] {time.perf_counter()-t0:.1f}s\n")
+
+    print("name,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.2f},{derived}")
+    print(f"\n[benchmarks] {len(names)} run, {failures} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

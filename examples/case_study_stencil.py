@@ -1,0 +1,81 @@
+"""Paper case studies 2+3 (§IV-V): topology-aware stencil + counter-
+quantified temporal blocking.
+
+Runs the Jacobi-7 kernels (naive vs wavefront-in-VMEM), validates them
+against the oracle, then reproduces Table I with perfctr: traffic counters
+explain WHY wavefront wins (and why the win is smaller than the traffic
+ratio — the paper's own observation).
+
+    PYTHONPATH=src python examples/case_study_stencil.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hwinfo
+from repro.core.perfctr import measure
+from repro.kernels import ref
+from repro.kernels.jacobi7 import jacobi7_naive, jacobi7_wavefront, \
+    traffic_model
+
+
+def main():
+    shape = (32, 34, 130)
+    sweeps = 2
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+
+    # -- correctness first (kernel vs oracle) -----------------------------
+    got = jacobi7_wavefront(x, sweeps=sweeps)
+    want = ref.jacobi7_valid(x, sweeps)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    print(f"wavefront kernel == {sweeps} oracle sweeps  (allclose OK)")
+
+    # -- case study 2: the 'wrong pinning' analogue -----------------------
+    chip = hwinfo.DEFAULT_CHIP
+    big = (64, 128, 256)
+    for bx in (8, 64):
+        slab = (bx + 2 * sweeps) * big[1] * big[2] * 4
+        verdict = "fits VMEM" if slab <= chip.vmem_bytes else \
+            "THRASHES (the Fig-11 2x loss)"
+        print(f"block_x={bx:<3} slab {slab/2**20:6.1f} MiB -> {verdict}")
+
+    # -- case study 3: Table I with perfctr -------------------------------
+    sds = jax.ShapeDtypeStruct(big, jnp.float32)
+
+    def threaded_nt(v):
+        # pad between sweeps keeps each sweep a separate memory pass (the
+        # paper's 'threaded' shape); without it XLA's fusion temporally
+        # blocks the chain on its own — fun fact the counters caught.
+        for _ in range(4):
+            v = jnp.pad(ref.jacobi7_sweep(v), 1)
+        return v
+
+    m_nt = measure(threaded_nt, sds, region="threaded-NT")
+    model = traffic_model(big, 4)
+    nt = m_nt.events["BYTES_ACCESSED"]
+    wf = model["wavefront"]
+    print(f"\ntraffic for 4 sweeps of {big}:")
+    print(f"  threaded (NT): {nt/1e9:6.2f} GB   [perfctr on the XLA program]")
+    print(f"  wavefront:     {wf/1e9:6.2f} GB   [BlockSpec model]"
+          f"   saving {nt/wf:.1f}x")
+    print("paper Table I: 43.97 -> 16.57 GB (2.7x); MLUPS only 1032->1331 —")
+    print("the counters explain it: one stream cannot saturate the bus, and")
+    print("the L3-vs-memory bandwidth gap is small (paper §V).")
+
+    # CPU wall-clock, labeled
+    f_naive = jax.jit(lambda v: ref.jacobi7_valid(v, sweeps))
+    f_naive(x).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(5):
+        out = f_naive(x)
+    out.block_until_ready()
+    print(f"\nnaive {sweeps}-sweep (XLA CPU): "
+          f"{(time.perf_counter()-t0)/5*1e3:.2f} ms  "
+          f"(wavefront kernel runs interpret-mode here; compiled on TPU)")
+
+
+if __name__ == "__main__":
+    main()

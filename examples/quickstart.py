@@ -1,0 +1,47 @@
+"""Quickstart: the four LIKWID-analogue tools in one minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. repro-topology  — probe + render the node/pod topology
+2. repro-pin       — choose a physical device order for the mesh
+3. repro-perfctr   — count hardware-truth events on a jitted function
+4. repro-features  — view/toggle the switchable compilation features
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pin, topology
+from repro.core.features import default_features, render_state
+from repro.core.perfctr import PerfCtr
+
+
+def main():
+    # -- 1. topology (likwid-topology) ------------------------------------
+    topo = topology.probe(spec=topology.PRODUCTION_SINGLE_POD)
+    print(topo.render())
+    print(topo.memory_table())
+
+    # -- 2. pin (likwid-pin) ----------------------------------------------
+    for name in ("compact", "scatter", "ring"):
+        print(pin.get_strategy(name)(topo).describe())
+    print(pin.get_strategy("0-7,12-15")(topo, skip=(13,)).describe())
+
+    # -- 3. perfctr (likwid-perfctr): marker mode -------------------------
+    a = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
+    ctr = PerfCtr(groups=("FLOPS_BF16", "HBM"))
+    with ctr.marker("Init"):
+        ctr.probe(lambda x: x * 0 + 1.0, a)
+    with ctr.marker("Benchmark"):
+        ctr.probe(lambda x: jnp.tanh(x @ x), a)
+    print(ctr.report())
+
+    # -- 4. features (likwid-features) ------------------------------------
+    feats = default_features()
+    print(render_state(feats))
+    print("\nflip remat off ->")
+    print(render_state(feats.with_(remat_policy="none")))
+
+
+if __name__ == "__main__":
+    main()

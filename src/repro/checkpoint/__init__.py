@@ -1,0 +1,3 @@
+from repro.checkpoint.store import (latest_step, list_steps,  # noqa: F401
+                                    restore_checkpoint, save_checkpoint,
+                                    wait_pending)

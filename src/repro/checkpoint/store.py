@@ -1,0 +1,173 @@
+"""Sharded numpy checkpoints: atomic commit, async save, retention, reshard.
+
+Layout::
+
+    <dir>/step_000100/
+        manifest.json      {step, leaf paths, shapes, dtypes, tree def hash}
+        leaf_00000.npy ... (one file per pytree leaf)
+    <dir>/step_000100.COMMITTED   (empty marker written LAST -> atomicity)
+
+* **Atomic**: writers fill a ``.tmp-`` dir, fsync, rename, then touch the
+  COMMITTED marker; readers ignore directories without a marker, so a
+  mid-crash save can never be restored.
+* **Async**: ``save_checkpoint(..., async_save=True)`` snapshots device
+  arrays to host (the only synchronous part) and writes on a daemon thread;
+  ``wait_pending()`` joins (called before process exit / next save).
+* **Resharding restore**: ``restore_checkpoint(target=...)`` device_puts
+  each leaf with the target leaf's sharding, so a checkpoint written on one
+  mesh restores onto another (the elastic-restart path in repro.ft).
+* **Retention**: keep the newest ``keep`` committed steps, delete older.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "list_steps", "wait_pending"]
+
+_PENDING: List[threading.Thread] = []
+
+
+def _np_dtype(name: str) -> np.dtype:
+    """Resolve a dtype string, falling back to ml_dtypes (bfloat16, fp8...)."""
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _step_dir(base: str, step: int) -> str:
+    return os.path.join(base, f"step_{step:09d}")
+
+
+def _marker(base: str, step: int) -> str:
+    return _step_dir(base, step) + ".COMMITTED"
+
+
+def list_steps(base: str) -> List[int]:
+    if not os.path.isdir(base):
+        return []
+    out = []
+    for name in os.listdir(base):
+        if name.startswith("step_") and name.endswith(".COMMITTED"):
+            out.append(int(name[len("step_"):-len(".COMMITTED")]))
+    return sorted(out)
+
+
+def latest_step(base: str) -> Optional[int]:
+    steps = list_steps(base)
+    return steps[-1] if steps else None
+
+
+def _write(base: str, step: int, host_leaves: List[np.ndarray],
+           paths: List[str], keep: Optional[int]) -> None:
+    final = _step_dir(base, step)
+    tmp = final + f".tmp-{os.getpid()}"
+    os.makedirs(tmp, exist_ok=True)
+    manifest = {"step": step, "leaves": []}
+    for i, (leaf, path) in enumerate(zip(host_leaves, paths)):
+        fname = f"leaf_{i:05d}.npy"
+        # store raw bytes (uint8 view): np.save cannot round-trip ml_dtypes
+        # like bfloat16; dtype+shape live in the manifest
+        raw = np.ascontiguousarray(leaf).reshape(-1)
+        np.save(os.path.join(tmp, fname),
+                raw.view(np.uint8) if raw.size else raw.astype(np.uint8))
+        manifest["leaves"].append({
+            "file": fname, "path": path,
+            "shape": list(leaf.shape), "dtype": str(leaf.dtype)})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    with open(_marker(base, step), "w"):
+        pass
+    if keep:
+        for old in list_steps(base)[:-keep]:
+            shutil.rmtree(_step_dir(base, old), ignore_errors=True)
+            try:
+                os.remove(_marker(base, old))
+            except OSError:
+                pass
+
+
+def _leaf_paths(tree: Any) -> Tuple[List[Any], List[str]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = [l for _, l in flat]
+    paths = [jax.tree_util.keystr(k) for k, _ in flat]
+    return leaves, paths
+
+
+def save_checkpoint(base: str, step: int, tree: Any, *,
+                    keep: Optional[int] = 3,
+                    async_save: bool = False) -> str:
+    """Write one checkpoint.  Returns the committed directory path."""
+    os.makedirs(base, exist_ok=True)
+    leaves, paths = _leaf_paths(tree)
+    # snapshot to host — for sharded arrays this gathers the addressable
+    # shards; single-process training sees the full array.
+    host_leaves = [np.asarray(x) for x in leaves]
+    if async_save:
+        t = threading.Thread(target=_write,
+                             args=(base, step, host_leaves, paths, keep),
+                             daemon=True)
+        t.start()
+        _PENDING.append(t)
+    else:
+        _write(base, step, host_leaves, paths, keep)
+    return _step_dir(base, step)
+
+
+def wait_pending() -> None:
+    while _PENDING:
+        _PENDING.pop().join()
+
+
+def restore_checkpoint(base: str, step: Optional[int] = None, *,
+                       target: Any) -> Tuple[Any, dict]:
+    """Restore into the structure (and shardings) of ``target``.
+
+    Each stored leaf is device_put with the corresponding target leaf's
+    sharding — this IS the resharding path: a checkpoint saved on mesh A
+    restores onto mesh B as long as shapes match.
+    """
+    wait_pending()
+    if step is None:
+        step = latest_step(base)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoints under {base}")
+    d = _step_dir(base, step)
+    if not os.path.exists(_marker(base, step)):
+        raise FileNotFoundError(f"checkpoint step {step} not committed")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    t_leaves, treedef = jax.tree_util.tree_flatten(target)
+    if len(t_leaves) != len(manifest["leaves"]):
+        raise ValueError(
+            f"checkpoint has {len(manifest['leaves'])} leaves, target has "
+            f"{len(t_leaves)} — structure mismatch")
+    out = []
+    for entry, tgt in zip(manifest["leaves"], t_leaves):
+        raw = np.load(os.path.join(d, entry["file"]))
+        arr = raw.view(_np_dtype(entry["dtype"])).reshape(entry["shape"])
+        if tuple(arr.shape) != tuple(tgt.shape):
+            raise ValueError(
+                f"leaf {entry['path']}: stored {arr.shape} != target "
+                f"{tgt.shape}")
+        sharding = getattr(tgt, "sharding", None)
+        if sharding is not None and hasattr(tgt, "devices"):
+            out.append(jax.device_put(arr.astype(tgt.dtype), sharding))
+        else:
+            out.append(jax.numpy.asarray(arr.astype(tgt.dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out), manifest

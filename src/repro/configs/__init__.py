@@ -1,0 +1,4 @@
+"""Per-architecture configs (one module per assigned arch) + shape registry."""
+
+from repro.configs.base import (ALL_ARCH_IDS, SHAPES, ArchSpec, Shape,
+                                get_arch, input_specs, list_archs)  # noqa: F401

@@ -1,0 +1,154 @@
+"""Architecture registry + input-shape catalogue (the 40 dry-run cells).
+
+Every assigned architecture registers an :class:`ArchSpec` holding its FULL
+config (exact dims from the assignment), a REDUCED smoke config (same
+family, tiny dims — what CPU tests instantiate), and its shape skips with
+reasons (recorded in EXPERIMENTS.md §Dry-run).
+
+Shapes (assignment):
+
+    train_4k      seq 4096,   global_batch 256   (train_step)
+    prefill_32k   seq 32768,  global_batch 32    (serve prefill)
+    decode_32k    seq 32768,  global_batch 128   (serve decode: 1 new token
+                                                  against a 32k KV cache)
+    long_500k     seq 524288, global_batch 1     (decode; sub-quadratic
+                                                  archs only)
+
+``input_specs`` builds ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, no allocation) for each cell — the dry-run compiles against
+these.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import DEFAULT_RULES, ShardingRules, logical_to_mesh
+from repro.models.lm import LMConfig
+
+__all__ = ["Shape", "SHAPES", "ArchSpec", "register", "get_arch",
+           "list_archs", "input_specs", "ALL_ARCH_IDS"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Shape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, Shape] = {
+    "train_4k": Shape("train_4k", 4096, 256, "train"),
+    "prefill_32k": Shape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": Shape("decode_32k", 32768, 128, "decode"),
+    "long_500k": Shape("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    arch_id: str
+    config: LMConfig
+    smoke: LMConfig
+    source: str                      # provenance tag from the assignment
+    skip_shapes: Tuple[Tuple[str, str], ...] = ()   # (shape, reason)
+
+    def skipped(self, shape_name: str) -> Optional[str]:
+        for s, reason in self.skip_shapes:
+            if s == shape_name:
+                return reason
+        return None
+
+
+_REGISTRY: Dict[str, ArchSpec] = {}
+
+ALL_ARCH_IDS = [
+    "xlstm-350m", "seamless-m4t-medium", "qwen2-moe-a2.7b",
+    "qwen3-moe-235b-a22b", "qwen1.5-0.5b", "qwen2-0.5b", "stablelm-3b",
+    "mistral-large-123b", "qwen2-vl-7b", "zamba2-1.2b",
+]
+
+_MODULE_FOR = {a: a.replace("-", "_").replace(".", "_") for a in ALL_ARCH_IDS}
+
+
+def register(spec: ArchSpec) -> ArchSpec:
+    _REGISTRY[spec.arch_id] = spec
+    return spec
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in _REGISTRY:
+        mod = _MODULE_FOR.get(arch_id)
+        if mod is None:
+            raise KeyError(f"unknown arch {arch_id!r}; known: {ALL_ARCH_IDS}")
+        importlib.import_module(f"repro.configs.{mod}")
+    return _REGISTRY[arch_id]
+
+
+def list_archs() -> List[ArchSpec]:
+    return [get_arch(a) for a in ALL_ARCH_IDS]
+
+
+# ---------------------------------------------------------------------------
+# the standard long_500k skip (pure full-attention archs)
+# ---------------------------------------------------------------------------
+
+LONG_SKIP = (
+    "long_500k",
+    "pure full-attention arch: 500k dense-KV decode is quadratic-cost and "
+    "cache-prohibitive; shape runs only for SSM/hybrid archs (DESIGN.md §5)",
+)
+
+
+# ---------------------------------------------------------------------------
+# input specs
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, mesh: Optional[Mesh], logical, rules: ShardingRules):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    spec = logical_to_mesh(logical, rules, mesh, dim_sizes=shape)
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def input_specs(cfg: LMConfig, shape: Shape, mesh: Optional[Mesh] = None,
+                rules: ShardingRules = DEFAULT_RULES,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell's data batch.
+
+    train:   {tokens, labels}           [B, S]
+    prefill: {tokens}                   [B, S]  (+ frontend stubs)
+    decode:  {tokens}                   [B, 1]  (state specs come from
+                                        eval_shape(init_decode_state))
+    Frontend STUBS (assignment): [audio] src_embeds = precomputed frame
+    embeddings [B, S/src_ratio, D]; [vlm] patch_embeds [B, n_patches, D].
+    """
+    b, s = shape.global_batch, shape.seq_len
+    tok_axes = ("batch", "seq")
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        out["tokens"] = _sds((b, s), jnp.int32, mesh, tok_axes, rules)
+        out["labels"] = _sds((b, s), jnp.int32, mesh, tok_axes, rules)
+    elif shape.kind == "prefill":
+        out["tokens"] = _sds((b, s), jnp.int32, mesh, tok_axes, rules)
+    else:  # decode: one new token
+        out["tokens"] = _sds((b, 1), jnp.int32, mesh, tok_axes, rules)
+
+    if shape.kind != "decode":
+        if cfg.family == "encdec":
+            out["src_embeds"] = _sds(
+                (b, max(s // cfg.src_ratio, 1), cfg.d_model), dtype, mesh,
+                ("batch", "seq", "act_embed"), rules)
+        if cfg.family == "vlm" and cfg.n_patches:
+            out["patch_embeds"] = _sds(
+                (b, cfg.n_patches, cfg.d_model), dtype, mesh,
+                ("batch", None, "act_embed"), rules)
+    return out

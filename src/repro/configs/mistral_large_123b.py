@@ -1,0 +1,33 @@
+"""mistral-large-123b [dense]: 88L d_model=12288 96H (kv=8) d_ff=28672
+vocab=32768 (hf:mistralai/Mistral-Large-Instruct-2407; unverified tier).
+
+The FSDP + remat stress cell: 123B params must shard across both mesh axes
+(bf16 weights + f32 master/Adam state ~ 8.6 GiB/chip on 256 chips) and
+activations need sequence-parallel saves (rules: act_seq -> model) plus
+grad-accumulation microbatching to fit 16 GiB v5e HBM.  head_dim=128.
+Full attention: long_500k skipped.
+"""
+
+from repro.configs.base import ArchSpec, LONG_SKIP, register
+from repro.models.lm import LMConfig
+
+CONFIG = LMConfig(
+    name="mistral-large-123b", family="dense",
+    vocab=32768, d_model=12288, n_layers=88,
+    num_heads=96, num_kv_heads=8, d_ff=28672, head_dim=128,
+    rope_theta=1e6,
+    chunk_size=512,
+)
+
+SMOKE = LMConfig(
+    name="mistral-large-123b-smoke", family="dense",
+    vocab=256, d_model=96, n_layers=3,
+    num_heads=6, num_kv_heads=2, d_ff=224, head_dim=16,
+    chunk_size=16,
+)
+
+register(ArchSpec(
+    arch_id="mistral-large-123b", config=CONFIG, smoke=SMOKE,
+    source="hf:mistralai/Mistral-Large-Instruct-2407; unverified",
+    skip_shapes=(LONG_SKIP,),
+))

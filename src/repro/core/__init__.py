@@ -1,0 +1,23 @@
+"""repro.core — the paper's contribution, adapted to TPU pods.
+
+LIKWID's four tools, one module each (see DESIGN.md §2 for the mapping):
+
+==================  ========================================================
+paper tool          module
+==================  ========================================================
+likwid-topology     :mod:`repro.core.topology` (+ :mod:`repro.core.hwinfo`)
+likwid-pin          :mod:`repro.core.pin`
+likwid-perfCtr      :mod:`repro.core.perfctr` (events / groups / marker)
+likwid-features     :mod:`repro.core.features`
+==================  ========================================================
+
+plus the §VI future-plan deliverables the paper sketches:
+:mod:`repro.core.roofline` (the model the perf loop iterates on) and
+:mod:`repro.core.bandwidth` (the "bandwidth map").
+"""
+
+from repro.core import hwinfo, topology, pin, events, groups, perfctr, \
+    marker, features, roofline, bandwidth  # noqa: F401
+
+__all__ = ["hwinfo", "topology", "pin", "events", "groups", "perfctr",
+           "marker", "features", "roofline", "bandwidth"]

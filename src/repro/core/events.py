@@ -1,0 +1,331 @@
+"""Raw hardware events from compiled XLA artifacts (the MSR layer of perfctr).
+
+likwid-perfctr programs model-specific registers and reads event counts that
+the hardware produces anyway, at zero overhead.  The TPU/XLA analogue of
+"counts the hardware produces anyway" is the **compiled executable**:
+
+* ``compiled.cost_analysis()``  -> FLOPs, transcendentals, bytes accessed
+  (per-device, since the SPMD-partitioned module is a per-device program);
+* ``compiled.memory_analysis()`` -> HBM footprint split into argument /
+  output / temp / generated-code bytes;
+* ``compiled.as_text()``        -> the post-partitioning HLO, from which we
+  count **collective bytes** (all-gather / all-reduce / reduce-scatter /
+  all-to-all / collective-permute operand sizes and group sizes), fusion
+  counts, and remat-duplicated ops.
+
+Event names follow the paper's convention of matching the vendor manuals:
+we name events after what XLA itself calls things (``flops``,
+``all-reduce``), uppercased in LIKWID style.
+
+Zero overhead is literal: nothing here executes the program.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import Counter
+from typing import Dict, List, Optional, Tuple
+
+__all__ = [
+    "CollectiveOp",
+    "EventCounts",
+    "parse_shape_bytes",
+    "parse_collectives",
+    "extract_events",
+    "ALL_EVENTS",
+]
+
+
+# ---------------------------------------------------------------------------
+# HLO text parsing
+# ---------------------------------------------------------------------------
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1, "f8e5m2fnuz": 1,
+    "f8e4m3fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+# One HLO instruction line:  %name = <shape-or-tuple> op-name(...), attrs
+_COLLECTIVE_RE = re.compile(
+    r"=\s*(?P<shape>\([^)]*\)|[\w]+\[[\d,]*\](?:\{[^}]*\})?)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?P<async>-start)?\(",
+)
+
+_REPLICA_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_REPLICA_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string, incl. tuples: ``f32[8,128]{1,0}`` -> 4096."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dtype, dims = m.group(1), m.group(2)
+        if dtype not in _DTYPE_BYTES:
+            continue  # token[] etc.
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _parse_group_size(line: str, default: int) -> int:
+    m = _REPLICA_GROUPS_IOTA_RE.search(line)
+    if m:
+        # iota format [num_groups, group_size]<=[N...]
+        return int(m.group(2))
+    m = _REPLICA_GROUPS_LIST_RE.search(line)
+    if m:
+        first = [g for g in m.group(1).split(",") if g.strip() != ""]
+        return max(len(first), 1)
+    return default
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    """One collective instruction found in the partitioned HLO."""
+
+    kind: str            # all-gather | all-reduce | reduce-scatter | all-to-all | collective-permute
+    result_bytes: int    # bytes of the (per-device) result buffer
+    group_size: int      # devices participating in each replica group
+    is_async: bool       # *-start form (overlappable with compute)
+    line_no: int
+
+    @property
+    def wire_bytes(self) -> int:
+        """Bytes this device sends over links for this op (ring-algorithm model).
+
+        =====================  =================================================
+        all-gather             result is the full gathered buffer; each device
+                               receives (g-1)/g of it -> sends the same amount.
+        all-reduce             ring = reduce-scatter + all-gather:
+                               2*(g-1)/g * buffer.
+        reduce-scatter         result is the scattered shard; the *input* was
+                               g*result; wire = (g-1) * result.
+        all-to-all             each device keeps 1/g: (g-1)/g * buffer.
+        collective-permute     whole buffer, one hop.
+        =====================  =================================================
+        """
+        g = max(self.group_size, 1)
+        b = self.result_bytes
+        if self.kind == "all-gather":
+            return b * (g - 1) // g
+        if self.kind == "all-reduce":
+            return 2 * b * (g - 1) // g
+        if self.kind == "reduce-scatter":
+            return b * (g - 1)
+        if self.kind == "all-to-all":
+            return b * (g - 1) // g
+        return b  # collective-permute
+
+
+def parse_collectives(hlo_text: str, num_devices: int = 1) -> List[CollectiveOp]:
+    """Find every collective in post-partitioning HLO text.
+
+    ``*-done`` ops are skipped (the matching ``*-start`` already carries the
+    shape), so async pairs are counted once.
+    """
+    ops: List[CollectiveOp] = []
+    for i, line in enumerate(hlo_text.splitlines()):
+        if "-done" in line and ("all-" in line or "collective-" in line or "reduce-scatter" in line):
+            continue
+        m = _COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        shape = m.group("shape")
+        # async-start shapes are tuples (operand, result, ...); the gathered
+        # result is the largest member — use it.
+        if shape.startswith("("):
+            parts = [parse_shape_bytes(p) for p in shape.strip("()").split(",")]
+            result_bytes = max(parts) if parts else 0
+        else:
+            result_bytes = parse_shape_bytes(shape)
+        ops.append(CollectiveOp(
+            kind=m.group("op"),
+            result_bytes=result_bytes,
+            group_size=_parse_group_size(line, num_devices),
+            is_async=bool(m.group("async")),
+            line_no=i,
+        ))
+    return ops
+
+
+# Fusion / remat / layout events -------------------------------------------
+
+_OP_NAME_RE = re.compile(r'metadata=\{op_name="([^"]+)"')
+_FUSION_RE = re.compile(r"=\s*[\w\[\]{},() ]+\sfusion\(")
+_WHILE_RE = re.compile(r"=\s*[\w\[\]{},() ]+\swhile\(")
+_CONVERT_RE = re.compile(r"\bconvert\(")
+_TRANSPOSE_RE = re.compile(r"\btranspose\(")
+_DOT_RE = re.compile(r"=\s*[\w\[\]{},() ]*\s(?:dot|custom-call)\(")
+
+
+def _remat_duplicates(hlo_text: str) -> int:
+    """Count recompute introduced by remat: identical op_name metadata appearing
+    on >1 *dot/fusion* instruction is almost always checkpoint-driven
+    recomputation (XLA copies the metadata when it duplicates the subgraph)."""
+    names = Counter()
+    for line in hlo_text.splitlines():
+        if " dot(" not in line and " fusion(" not in line:
+            continue
+        m = _OP_NAME_RE.search(line)
+        if m:
+            names[m.group(1)] += 1
+    return sum(c - 1 for c in names.values() if c > 1)
+
+
+# ---------------------------------------------------------------------------
+# Event assembly
+# ---------------------------------------------------------------------------
+
+ALL_EVENTS: Tuple[str, ...] = (
+    # while-aware static analysis (per-device, dynamic execution counts —
+    # scan bodies multiplied by their trip counts; see repro.core.hlo_cost)
+    "FLOPS_TOTAL", "TRANSCENDENTALS", "BYTES_ACCESSED",
+    # raw XLA cost_analysis numbers (count every computation ONCE — kept
+    # for transparency; the ratio to the corrected events shows how much
+    # of the program lives inside scan loops)
+    "FLOPS_XLA_RAW", "TRANSCENDENTALS_XLA_RAW", "BYTES_XLA_RAW",
+    # memory_analysis (per-device, bytes)
+    "HBM_ARG_BYTES", "HBM_OUT_BYTES", "HBM_TEMP_BYTES", "HBM_CODE_BYTES",
+    "HBM_ALIAS_BYTES", "HBM_PEAK_BYTES",
+    # collectives (per-device wire bytes + DYNAMIC op counts)
+    "ICI_AG_BYTES", "ICI_AR_BYTES", "ICI_RS_BYTES", "ICI_A2A_BYTES",
+    "ICI_CP_BYTES", "ICI_TOTAL_BYTES",
+    "ICI_AG_COUNT", "ICI_AR_COUNT", "ICI_RS_COUNT", "ICI_A2A_COUNT",
+    "ICI_CP_COUNT", "ICI_ASYNC_COUNT",
+    # program structure (static instruction counts)
+    "FUSION_COUNT", "WHILE_COUNT", "CONVERT_COUNT", "TRANSPOSE_COUNT",
+    "DOT_COUNT", "REMAT_DUP_OPS", "HLO_LINES", "WHILE_TRIP_TOTAL",
+)
+
+
+@dataclasses.dataclass
+class EventCounts:
+    """A bag of raw event counts for one compiled program (one 'core')."""
+
+    counts: Dict[str, float]
+    collectives: List[CollectiveOp] = dataclasses.field(default_factory=list)
+
+    def __getitem__(self, k: str) -> float:
+        return self.counts.get(k, 0.0)
+
+    def get(self, k: str, default: float = 0.0) -> float:
+        return self.counts.get(k, default)
+
+    def table(self, events: Optional[List[str]] = None) -> str:
+        """Paper-style raw-event listing."""
+        events = events or sorted(self.counts)
+        w = max((len(e) for e in events), default=10) + 2
+        lines = [f"| {'Event':<{w}} | {'count':>14} |",
+                 f"|{'-'*(w+2)}|{'-'*16}|"]
+        for e in events:
+            v = self.counts.get(e, 0.0)
+            vs = f"{v:.6g}" if v < 1e6 else f"{v:.5e}"
+            lines.append(f"| {e:<{w}} | {vs:>14} |")
+        return "\n".join(lines)
+
+
+_ZERO_IF_MISSING = ("transcendentals",)
+
+
+def extract_events(compiled=None, *, hlo_text: Optional[str] = None,
+                   cost: Optional[dict] = None, memstats=None,
+                   num_devices: int = 1) -> EventCounts:
+    """Read every raw event from a compiled executable (or its pieces).
+
+    Pass either ``compiled`` (a ``jax.stages.Compiled``) or the individual
+    ``hlo_text`` / ``cost`` / ``memstats`` pieces (used by tests and by the
+    dry-run which caches artifacts).
+    """
+    if compiled is not None:
+        if hlo_text is None:
+            hlo_text = compiled.as_text()
+        if cost is None:
+            cost = compiled.cost_analysis() or {}
+        if memstats is None:
+            memstats = compiled.memory_analysis()
+    hlo_text = hlo_text or ""
+    cost = cost or {}
+
+    from repro.core.hlo_cost import analyze_text
+    dyn = analyze_text(hlo_text)
+
+    c: Dict[str, float] = {}
+    # corrected (while-aware) events — the roofline reads these
+    c["FLOPS_TOTAL"] = dyn.flops
+    c["TRANSCENDENTALS"] = dyn.transcendentals
+    c["BYTES_ACCESSED"] = dyn.bytes_accessed
+    # raw XLA numbers (every computation counted once) for transparency
+    c["FLOPS_XLA_RAW"] = float(cost.get("flops", 0.0))
+    c["TRANSCENDENTALS_XLA_RAW"] = float(cost.get("transcendentals", 0.0))
+    c["BYTES_XLA_RAW"] = float(cost.get("bytes accessed", 0.0))
+    c["WHILE_TRIP_TOTAL"] = float(sum(dyn.while_trips.values()))
+
+    if memstats is not None:
+        c["HBM_ARG_BYTES"] = float(getattr(memstats, "argument_size_in_bytes", 0))
+        c["HBM_OUT_BYTES"] = float(getattr(memstats, "output_size_in_bytes", 0))
+        c["HBM_TEMP_BYTES"] = float(getattr(memstats, "temp_size_in_bytes", 0))
+        c["HBM_CODE_BYTES"] = float(getattr(memstats, "generated_code_size_in_bytes", 0))
+        c["HBM_ALIAS_BYTES"] = float(getattr(memstats, "alias_size_in_bytes", 0))
+        # Peak = args + outputs + temps - aliased (donated args overlap outputs)
+        c["HBM_PEAK_BYTES"] = (c["HBM_ARG_BYTES"] + c["HBM_OUT_BYTES"]
+                               + c["HBM_TEMP_BYTES"] - c["HBM_ALIAS_BYTES"])
+
+    # collectives: dynamic execution counts from the while-aware call graph
+    # (an all-gather inside a scanned layer loop fires n_layers times)
+    kind_key = {"all-gather": "AG", "all-reduce": "AR", "reduce-scatter": "RS",
+                "all-to-all": "A2A", "ragged-all-to-all": "A2A",
+                "collective-permute": "CP"}
+    for short in ("AG", "AR", "RS", "A2A", "CP"):
+        c[f"ICI_{short}_BYTES"] = 0.0
+        c[f"ICI_{short}_COUNT"] = 0.0
+    c["ICI_ASYNC_COUNT"] = 0.0
+    colls: List[CollectiveOp] = []
+    for ins, n in dyn.collectives:
+        kind = ins.op.replace("-start", "")
+        if kind not in kind_key:
+            continue
+        shape = ins.shape
+        if shape.startswith("("):
+            parts = [parse_shape_bytes(p)
+                     for p in shape.strip("()").split(",")]
+            result_bytes = max(parts) if parts else 0
+        else:
+            result_bytes = parse_shape_bytes(shape)
+        op = CollectiveOp(
+            kind="all-to-all" if kind == "ragged-all-to-all" else kind,
+            result_bytes=result_bytes,
+            group_size=_parse_group_size(ins.attrs, num_devices),
+            is_async=ins.op.endswith("-start"),
+            line_no=ins.line_no)
+        colls.append(op)
+        short = kind_key[kind]
+        c[f"ICI_{short}_BYTES"] += op.wire_bytes * n
+        c[f"ICI_{short}_COUNT"] += n
+        if op.is_async:
+            c["ICI_ASYNC_COUNT"] += n
+    c["ICI_TOTAL_BYTES"] = sum(c[f"ICI_{s}_BYTES"]
+                               for s in ("AG", "AR", "RS", "A2A", "CP"))
+
+    # structure (static instruction counts from the parsed module)
+    oc = dyn.op_counts
+    c["FUSION_COUNT"] = float(oc.get("fusion", 0))
+    c["WHILE_COUNT"] = float(oc.get("while", 0))
+    c["CONVERT_COUNT"] = float(oc.get("convert", 0))
+    c["TRANSPOSE_COUNT"] = float(oc.get("transpose", 0))
+    c["DOT_COUNT"] = float(oc.get("dot", 0))
+    c["REMAT_DUP_OPS"] = float(_remat_duplicates(hlo_text))
+    c["HLO_LINES"] = float(hlo_text.count("\n"))
+
+    return EventCounts(counts=c, collectives=colls)

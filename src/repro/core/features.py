@@ -1,0 +1,151 @@
+"""repro-features: view/toggle switchable compilation features (likwid-features).
+
+likwid-features flips hardware prefetcher bits in ``IA32_MISC_ENABLE`` and
+reports switchable CPU feature state.  TPUs expose no user-space MSRs; the
+switchable state that changes a program's performance the same way lives in
+the **compiler/runtime configuration**:
+
+=========================  ==================================================
+x86 feature bit            repro feature
+=========================  ==================================================
+HW_PREFETCHER              ``async_collectives`` (latency hiding by the
+                           scheduler — the closest semantic match)
+ADJ_CACHE_LINE_PREFETCH    ``scan_unroll`` (fetch-ahead across layer steps)
+DCU_PREFETCHER             ``prefetch_to_vmem`` (Pallas double-buffering in
+                           kernels/, toggled per kernel call)
+IP_PREFETCHER              ``collective_matmul`` (overlap AG with partial dots)
+SPEEDSTEP (report-only)    ``matmul_precision``, ``remat_policy``, ``donation``
+=========================  ==================================================
+
+Exactly like the paper's tool: every feature can be *viewed* (current state
+as a bit-style table) and *toggled* per run; the rest of the stack
+(:mod:`repro.train`, :mod:`repro.launch.dryrun`) reads the active
+:class:`FeatureSet`, so one flag flip is one experiment.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional
+
+__all__ = ["FeatureSet", "FEATURE_DOC", "default_features", "from_env",
+           "render_state", "xla_flags_for"]
+
+
+REMAT_POLICIES = ("none", "dots", "dots_no_batch", "full")
+PRECISIONS = ("default", "high", "highest")
+
+
+@dataclasses.dataclass
+class FeatureSet:
+    """The switchable state.  Defaults = production training configuration."""
+
+    # -- memory/compute trade (activation checkpointing) --
+    remat_policy: str = "dots_no_batch"  # none | dots | dots_no_batch | full
+    # -- layer loop codegen --
+    scan_layers: bool = True             # lax.scan over stacked layers
+    scan_unroll: int = 1                 # unroll factor inside the scan
+    # -- buffer/donation --
+    donate_state: bool = True            # donate params/opt-state to the step
+    # -- collective scheduling --
+    async_collectives: bool = True       # XLA latency-hiding scheduler flags
+    collective_matmul: bool = True       # overlap all-gather with partial matmul
+    # -- numerics --
+    matmul_precision: str = "default"    # default | high | highest
+    compute_dtype: str = "bfloat16"
+    # -- distributed-optimization tricks --
+    grad_compression: str = "none"       # none | int8_ef (error feedback)
+    # -- kernels --
+    prefetch_to_vmem: bool = True        # double-buffered Pallas pipelines
+    # -- decode --
+    # carry-threaded in-place KV cache (§Perf hillclimb 3, iteration 2):
+    # REFUTED on the CPU artifact (XLA CPU double-buffers the carried
+    # stack); kept opt-in for TPU measurement where while-carries alias.
+    decode_inplace_cache: bool = False
+
+    def validate(self) -> "FeatureSet":
+        if self.remat_policy not in REMAT_POLICIES:
+            raise ValueError(f"remat_policy {self.remat_policy!r} not in {REMAT_POLICIES}")
+        if self.matmul_precision not in PRECISIONS:
+            raise ValueError(f"matmul_precision {self.matmul_precision!r} not in {PRECISIONS}")
+        if self.grad_compression not in ("none", "int8_ef"):
+            raise ValueError(f"grad_compression {self.grad_compression!r}")
+        if self.scan_unroll < 1:
+            raise ValueError("scan_unroll must be >= 1")
+        return self
+
+    def with_(self, **kw) -> "FeatureSet":
+        return dataclasses.replace(self, **kw).validate()
+
+
+FEATURE_DOC: Dict[str, str] = {
+    "remat_policy": "activation checkpointing: none|dots|dots_no_batch|full",
+    "scan_layers": "lax.scan over stacked layer weights (compact HLO)",
+    "scan_unroll": "unroll factor for the layer scan",
+    "donate_state": "donate params+opt state buffers to train_step",
+    "async_collectives": "XLA latency-hiding scheduler (overlap comm/compute)",
+    "collective_matmul": "SPMD all-gather <-> matmul overlap rewrite",
+    "matmul_precision": "jax.default_matmul_precision",
+    "compute_dtype": "activation compute dtype",
+    "grad_compression": "int8 error-feedback compression of DP grad reduce",
+    "prefetch_to_vmem": "double-buffered HBM->VMEM pipelines in Pallas kernels",
+    "decode_inplace_cache": "carry-threaded in-place KV cache decode path",
+}
+
+
+def default_features() -> FeatureSet:
+    return FeatureSet().validate()
+
+
+_ENV_PREFIX = "REPRO_FEATURE_"
+
+
+def from_env(base: Optional[FeatureSet] = None) -> FeatureSet:
+    """Read feature overrides from REPRO_FEATURE_<NAME> env vars (CLI surface)."""
+    fs = base or default_features()
+    kw = {}
+    for f in dataclasses.fields(FeatureSet):
+        env = os.environ.get(_ENV_PREFIX + f.name.upper())
+        if env is None:
+            continue
+        if f.type == "bool" or isinstance(getattr(fs, f.name), bool):
+            kw[f.name] = env.lower() in ("1", "true", "on", "yes")
+        elif isinstance(getattr(fs, f.name), int):
+            kw[f.name] = int(env)
+        else:
+            kw[f.name] = env
+    return fs.with_(**kw) if kw else fs
+
+
+def render_state(fs: FeatureSet) -> str:
+    """The paper's bit-table view of switchable feature state."""
+    lines = ["Switchable features (repro-features)", "-" * 60]
+    for f in dataclasses.fields(FeatureSet):
+        v = getattr(fs, f.name)
+        state = ("ON" if v else "off") if isinstance(v, bool) else str(v)
+        lines.append(f"  {f.name:<20} {state:<14} {FEATURE_DOC[f.name]}")
+    return "\n".join(lines)
+
+
+def xla_flags_for(fs: FeatureSet) -> List[str]:
+    """XLA flags implied by the feature set (applied by launchers on TPU).
+
+    On the CPU dry-run these are recorded (EXPERIMENTS.md) rather than
+    applied — the CPU backend ignores TPU scheduler flags.
+    """
+    flags = []
+    if fs.async_collectives:
+        flags += [
+            "--xla_tpu_enable_async_collective_fusion=true",
+            "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true",
+            "--xla_tpu_overlap_compute_collective_tc=true",
+            "--xla_enable_async_all_gather=true",
+            "--xla_enable_async_collective_permute=true",
+        ]
+    if fs.collective_matmul:
+        flags += [
+            "--xla_tpu_decompose_all_gather_einsum=true",
+            "--xla_tpu_spmd_threshold_for_allgather_cse=10000",
+        ]
+    return flags

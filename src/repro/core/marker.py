@@ -1,0 +1,46 @@
+"""Marker API (paper §II-A marker mode) — public re-export.
+
+The marker implementation lives on :class:`repro.core.perfctr.PerfCtr`
+(regions accumulate across calls, exactly the paper's semantics).  This
+module keeps the tool-per-file layout of DESIGN.md and offers a
+module-level convenience for scripts that want a process-global counter::
+
+    from repro.core import marker
+    with marker.region("attention"):
+        marker.probe(attn_fn, q, k, v)
+    print(marker.report())
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence
+
+from repro.core.perfctr import Measurement, PerfCtr
+
+__all__ = ["global_perfctr", "region", "probe", "report", "reset"]
+
+_GLOBAL: Optional[PerfCtr] = None
+
+
+def global_perfctr() -> PerfCtr:
+    global _GLOBAL
+    if _GLOBAL is None:
+        _GLOBAL = PerfCtr()
+    return _GLOBAL
+
+
+def region(name: str):
+    return global_perfctr().marker(name)
+
+
+def probe(fn: Callable, *args, **kwargs) -> Measurement:
+    return global_perfctr().probe(fn, *args, **kwargs)
+
+
+def report(groups: Optional[Sequence[str]] = None) -> str:
+    return global_perfctr().report(groups)
+
+
+def reset() -> None:
+    global _GLOBAL
+    _GLOBAL = None

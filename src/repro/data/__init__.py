@@ -1,0 +1,2 @@
+from repro.data.pipeline import (DataConfig, MemmapTokens,  # noqa: F401
+                                 SyntheticTokens, make_source)

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+========================  ===================================================
+kernel                    role
+========================  ===================================================
+stream_triad.py           paper case study 1 (STREAM triad, §III)
+jacobi7.py                paper case studies 2+3 (stencil + temporal
+                          blocking in VMEM, §IV-§V, Table I)
+flash_attention.py        32k-prefill hot-spot for the LM zoo (blockwise
+                          online-softmax GQA)
+ssd_scan.py               mLSTM / Mamba2 chunked gated linear attention
+========================  ===================================================
+
+ops.py holds the jit'd layout adapters; ref.py the pure-jnp oracles every
+kernel is allclose-tested against (interpret=True on this CPU container).
+"""
+
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function is the semantic contract of its kernel twin:
+
+* :func:`stream_triad`      <- kernels/stream_triad.py
+* :func:`jacobi7_valid`     <- kernels/jacobi7.py (T valid-mode sweeps)
+* :func:`flash_attention`   <- kernels/flash_attention.py (causal GQA)
+* :func:`ssd_scan`          <- kernels/ssd_scan.py (gated linear attention)
+
+All are deliberately naive/obvious implementations — correctness over
+speed; tests sweep shapes/dtypes and assert_allclose kernels against these.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.linear_scan import sequential_linear_attention
+
+__all__ = ["stream_triad", "jacobi7_sweep", "jacobi7_valid",
+           "flash_attention", "ssd_scan"]
+
+
+def stream_triad(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
+                 s: float = 2.5) -> jnp.ndarray:
+    """STREAM triad a = b + s*c (a participates only as the write stream)."""
+    del a
+    return b + s * c
+
+
+def jacobi7_sweep(x: jnp.ndarray, omega: float = 1.0 / 6.0) -> jnp.ndarray:
+    """One valid-mode 7-point Jacobi sweep: [X,Y,Z] -> [X-2,Y-2,Z-2]."""
+    return omega * (
+        x[:-2, 1:-1, 1:-1] + x[2:, 1:-1, 1:-1] +
+        x[1:-1, :-2, 1:-1] + x[1:-1, 2:, 1:-1] +
+        x[1:-1, 1:-1, :-2] + x[1:-1, 1:-1, 2:]
+    )
+
+
+def jacobi7_valid(x: jnp.ndarray, sweeps: int = 1,
+                  omega: float = 1.0 / 6.0) -> jnp.ndarray:
+    """T valid-mode sweeps (the wavefront kernel's contract): domain
+    shrinks by 2 per dim per sweep — no boundary special cases."""
+    for _ in range(sweeps):
+        x = jacobi7_sweep(x, omega)
+    return x
+
+
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                    causal: bool = True) -> jnp.ndarray:
+    """Causal GQA attention.  q: [B,Sq,H,Dh]; k,v: [B,Sk,KVH,Dh]."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(dh)
+    if causal:
+        sk = k.shape[1]
+        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
+        scores = jnp.where(mask[None, None, None], scores, -2.0e38)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, dh)
+
+
+def ssd_scan(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+             log_f: jnp.ndarray, log_i: jnp.ndarray, *,
+             normalize: bool = False,
+             initial_state: Optional[Tuple] = None
+             ) -> Tuple[jnp.ndarray, Tuple]:
+    """Gated linear attention, O(S) sequential oracle.
+
+    q,k: [B,S,H,dk]; v: [B,S,H,dv]; log_f/log_i: [B,S,H] (<= 0).
+    Returns (y [B,S,H,dv], final_state (C [B,H,dk,dv], n [B,H,dk])).
+    """
+    return sequential_linear_attention(q, k, v, log_f, log_i,
+                                       normalize=normalize,
+                                       initial_state=initial_state)

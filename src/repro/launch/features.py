@@ -1,0 +1,60 @@
+"""repro-features CLI (likwid-features): view/toggle switchable features.
+
+    python -m repro.launch.features                       # view state
+    python -m repro.launch.features --set remat_policy=full scan_unroll=2
+    python -m repro.launch.features --xla-flags           # implied XLA flags
+
+Settings persist for child runs via REPRO_FEATURE_* environment exports
+(print eval-able shell lines with --export).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core.features import (default_features, from_env, render_state,
+                                 xla_flags_for)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--set", nargs="*", default=[],
+                    metavar="NAME=VALUE",
+                    help="toggle features, e.g. remat_policy=full")
+    ap.add_argument("--xla-flags", action="store_true")
+    ap.add_argument("--export", action="store_true",
+                    help="print shell export lines for --set values")
+    args = ap.parse_args(argv)
+
+    fs = from_env(default_features())
+    overrides = {}
+    for item in args.set:
+        if "=" not in item:
+            ap.error(f"--set needs NAME=VALUE, got {item!r}")
+        k, v = item.split("=", 1)
+        cur = getattr(fs, k, None)
+        if cur is None:
+            ap.error(f"unknown feature {k!r}")
+        if isinstance(cur, bool):
+            overrides[k] = v.lower() in ("1", "true", "on", "yes")
+        elif isinstance(cur, int):
+            overrides[k] = int(v)
+        else:
+            overrides[k] = v
+    if overrides:
+        fs = fs.with_(**overrides)
+
+    print(render_state(fs))
+    if args.xla_flags:
+        print("\nImplied XLA flags (applied on TPU launches):")
+        for f in xla_flags_for(fs):
+            print(f"  {f}")
+    if args.export:
+        print()
+        for k, v in overrides.items():
+            print(f"export REPRO_FEATURE_{k.upper()}={v}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,124 @@
+"""Aggregate dry-run records into the EXPERIMENTS.md §Roofline table.
+
+    PYTHONPATH=src python -m repro.launch.roofline_report \
+        --records experiments/dryrun --mesh 16x16 [--markdown]
+
+Per (arch x shape) cell: the three roofline terms, the bottleneck, the
+MODEL_FLOPS/HLO_FLOPS usefulness ratio, HBM fit, and a one-line 'what would
+move the dominant term down' derived from the event profile.
+"""
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def _advice(rec: Dict) -> str:
+    """One sentence: what would move the dominant term down."""
+    r = rec["roofline"]
+    c = rec["collectives"]
+    s = rec["structure"]
+    kind = rec["kind"]
+    bound = r["bound"]
+    if bound == "memory":
+        if kind == "train" and r["useful_flops_ratio"] < 0.8:
+            return ("recompute traffic: relax remat / chunk attention so "
+                    "score tensors never round-trip HBM")
+        if kind == "decode":
+            return ("decode is KV-cache streaming: shrink cache reads "
+                    "(GQA width, quantized KV) or batch more tokens/step")
+        return ("blockwise-fuse attention (flash kernel) so [B,H,S,S] "
+                "scores stay in VMEM")
+    if bound == "ici":
+        ag = c["ICI_AG_BYTES"]
+        ar = c["ICI_AR_BYTES"]
+        if ar >= ag:
+            return ("grad all-reduce dominates: reduce-scatter to shards "
+                    "(ZeRO), overlap with bwd, or int8-EF compress")
+        return ("weight all-gathers dominate: widen FSDP prefetch overlap "
+                "or re-shard so gathers ride contiguous ICI rings")
+    # compute-bound: the good case
+    if r["useful_flops_ratio"] < 0.7:
+        return ("compute-bound but 30%+ of FLOPs are remat recompute: "
+                "save dots selectively")
+    return "near roofline: only kernel-level MXU utilization left"
+
+
+def load_records(records_dir: str, mesh: str,
+                 include_tagged: bool = False) -> List[Dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(records_dir, "*.json"))):
+        rec = json.load(open(f))
+        if rec.get("mesh") != mesh or rec.get("status") != "ok":
+            continue
+        if "@" in rec.get("cell", "") and not include_tagged:
+            continue          # §Perf hillclimb variants, not baselines
+        out.append(rec)
+    return out
+
+
+def render(records: List[Dict], markdown: bool = False) -> str:
+    rows = []
+    hdr = ("cell", "Tc ms", "Tm ms", "Ti ms", "bound", "mfu_bound",
+           "useful", "HBM x", "next move")
+    for rec in sorted(records, key=lambda r: r["cell"]):
+        r = rec["roofline"]
+        rows.append((
+            rec["cell"].rsplit("/", 1)[0],
+            f"{r['t_compute_s']*1e3:9.2f}",
+            f"{r['t_memory_s']*1e3:9.2f}",
+            f"{r['t_ici_s']*1e3:9.2f}",
+            r["bound"],
+            f"{r['mfu_bound']:.3f}",
+            f"{r['useful_flops_ratio']:.2f}",
+            f"{rec['memory_analysis']['hbm_fraction']:.2f}",
+            _advice(rec),
+        ))
+    if markdown:
+        lines = ["| " + " | ".join(hdr) + " |",
+                 "|" + "---|" * len(hdr)]
+        lines += ["| " + " | ".join(row) + " |" for row in rows]
+        return "\n".join(lines)
+    w = [max(len(str(r[i])) for r in rows + [hdr]) for i in range(len(hdr) - 1)]
+    lines = ["  ".join(h.ljust(w[i]) for i, h in enumerate(hdr[:-1])) + "  " + hdr[-1]]
+    lines.append("-" * 120)
+    for row in rows:
+        lines.append("  ".join(str(row[i]).ljust(w[i])
+                               for i in range(len(hdr) - 1)) + "  " + row[-1])
+    return "\n".join(lines)
+
+
+def pick_hillclimb(records: List[Dict]) -> Dict[str, str]:
+    """The three §Perf picks: worst mfu ceiling, most collective-bound,
+    most representative (largest ICI+memory product on a train cell)."""
+    train = [r for r in records if r["kind"] == "train"]
+    worst = min(records, key=lambda r: r["roofline"]["mfu_bound"])
+    coll = max(records, key=lambda r: r["roofline"]["t_ici_s"]
+               / max(r["roofline"]["t_compute_s"], 1e-12))
+    rep = max(train, key=lambda r: r["n_params"]) if train else worst
+    return {"worst_mfu_bound": worst["cell"],
+            "most_collective_bound": coll["cell"],
+            "most_representative": rep["cell"]}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--records", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args(argv)
+    records = load_records(args.records, args.mesh)
+    if not records:
+        print(f"no records for mesh {args.mesh} under {args.records}")
+        return 1
+    print(render(records, markdown=args.markdown))
+    print()
+    for k, v in pick_hillclimb(records).items():
+        print(f"{k}: {v}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

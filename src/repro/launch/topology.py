@@ -1,0 +1,36 @@
+"""repro-topology CLI (likwid-topology).
+
+    PYTHONPATH=src python -m repro.launch.topology            # tables
+    PYTHONPATH=src python -m repro.launch.topology -g         # + ASCII art
+    PYTHONPATH=src python -m repro.launch.topology --production --multi-pod
+"""
+
+from __future__ import annotations
+
+import argparse
+
+from repro.core import topology as topo_mod
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("-g", "--graphical", action="store_true",
+                    help="ASCII-art pod/chip grid (the paper's -g)")
+    ap.add_argument("--production", action="store_true",
+                    help="describe the modeled production pod instead of "
+                         "probing local devices")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.production:
+        spec = (topo_mod.PRODUCTION_MULTI_POD if args.multi_pod
+                else topo_mod.PRODUCTION_SINGLE_POD)
+        topo = topo_mod.synthesize(spec)
+    else:
+        topo = topo_mod.probe()
+    print(topo.render(graphical=args.graphical))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

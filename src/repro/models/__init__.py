@@ -1,0 +1,3 @@
+"""Model zoo substrate: the 10 assigned architectures behind one LM API."""
+
+from repro.models.lm import LM, LMConfig  # noqa: F401

@@ -1,0 +1,481 @@
+"""GQA attention: init, train/prefill forward (full or Q-chunked), decode.
+
+Three execution paths, chosen by config (all numerically equivalent; the
+chunked path is the memory-safe default above ``chunk_threshold`` tokens and
+doubles as the pure-jnp oracle for the Pallas flash kernel):
+
+* ``full``     — materializes [B,H,Sq,Sk] scores (small sequences only).
+* ``chunked``  — lax.scan over query chunks; [B,H,C,Sk] live at once.
+* ``decode``   — one new token against a KV cache; supports caches whose
+                 sequence dim is sharded (softmax reductions over the
+                 sharded axis become small all-reduces under SPMD).
+
+GQA grouping: q heads H = KVH * G.  KV caches are stored [B, S, KVH, Dh].
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (Params, Specs, apply_mrope, apply_rope,
+                                 dense_init, truncated_normal_init)
+
+__all__ = ["AttnConfig", "init_attn", "attn_specs", "attention",
+           "KVCache", "init_kv_cache", "decode_attention", "prefill_into_cache"]
+
+NEG_INF = -2.0e38
+
+
+class AttnConfig(NamedTuple):
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    qkv_bias: bool = False
+    causal: bool = True
+    use_rope: bool = True
+    rope_theta: float = 10000.0
+    mrope_sections: Optional[Tuple[int, int, int]] = None  # Qwen2-VL
+    chunk_size: int = 512
+    chunk_threshold: int = 2048   # use chunked path above this many q tokens
+    # softmax_mode: "naive" = textbook mask->softmax(f32)->cast (the paper-
+    # faithful baseline); "fused" = scale folded into q, mask folded into the
+    # reductions, probs stored in compute dtype, 1/denom applied to the PV
+    # output — ~2.3x less HBM traffic over the [B,H,Sq,Sk] tensors
+    # (EXPERIMENTS.md §Perf hillclimb 1)
+    softmax_mode: str = "naive"
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg: AttnConfig, dtype=jnp.float32) -> Params:
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, kvh, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    std = 1.0 / np.sqrt(d)
+    p = {
+        "wq": truncated_normal_init(kq, (d, h, dh), dtype, std),
+        "wk": truncated_normal_init(kk, (d, kvh, dh), dtype, std),
+        "wv": truncated_normal_init(kv, (d, kvh, dh), dtype, std),
+        "wo": truncated_normal_init(ko, (h, dh, d), dtype, 1.0 / np.sqrt(h * dh)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, dh), dtype)
+        p["bk"] = jnp.zeros((kvh, dh), dtype)
+        p["bv"] = jnp.zeros((kvh, dh), dtype)
+    return p
+
+
+def attn_specs(cfg: AttnConfig) -> Specs:
+    s = {
+        "wq": ("embed", "heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "embed"),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ("heads", "head_dim")
+        s["bk"] = ("kv_heads", "head_dim")
+        s["bv"] = ("kv_heads", "head_dim")
+    return s
+
+
+# ---------------------------------------------------------------------------
+# projections + rope
+# ---------------------------------------------------------------------------
+
+def _project_qkv(p: Params, x: jnp.ndarray, cfg: AttnConfig,
+                 positions: jnp.ndarray,
+                 positions3: Optional[jnp.ndarray] = None):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    if not cfg.use_rope:
+        return q, k, v
+    if cfg.mrope_sections is not None and positions3 is not None:
+        q = apply_mrope(q, positions3, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions3, cfg.mrope_sections, cfg.rope_theta)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q: [B,Sq,H,Dh], k: [B,Sk,KVH,Dh] -> scores [B,KVH,G,Sq,Sk]."""
+    b, sq, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, dh)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / np.sqrt(dh)
+
+
+def _gqa_out(probs: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
+    """probs: [B,KVH,G,Sq,Sk], v: [B,Sk,KVH,Dh] -> [B,Sq,H,Dh]."""
+    b, kvh, g, sq, _ = probs.shape
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, kvh * g, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _full_attention(q, k, v, q_offset: int = 0, causal: bool = True,
+                    softmax_mode: str = "naive") -> jnp.ndarray:
+    return _full_attention_offset(q, k, v, q_offset, causal, softmax_mode)
+
+
+def _chunked_attention(q, k, v, chunk: int, causal: bool = True,
+                       softmax_mode: str = "naive") -> jnp.ndarray:
+    """Q-chunked causal attention: scan over query chunks, full K/V.
+
+    Live intermediates are [B,KVH,G,chunk,Sk] — the 32k-prefill-safe path.
+    """
+    b, sq, h, dh = q.shape
+    pad = (-sq) % chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = q.shape[1] // chunk
+    qs = q.reshape(b, nq, chunk, h, dh).transpose(1, 0, 2, 3, 4)
+
+    def body(carry, args):
+        i, qc = args
+        out = _full_attention_offset(qc, k, v, i * chunk, causal,
+                                     softmax_mode)
+        return carry, out
+
+    _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qs))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(b, nq * chunk, h, dh)
+    return out[:, :sq]
+
+
+def _full_attention_offset(qc, k, v, q_offset, causal: bool = True,
+                           softmax_mode: str = "naive") -> jnp.ndarray:
+    if softmax_mode == "fused":
+        return _fused_attention_offset(qc, k, v, q_offset, causal)
+    if softmax_mode == "kernel":
+        return _flash_attention_offset(qc, k, v, q_offset, causal)
+    sq, sk = qc.shape[1], k.shape[1]
+    scores = _gqa_scores(qc, k).astype(jnp.float32)
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = kpos[None, :] <= qpos[:, None]
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(qc.dtype)
+    return _gqa_out(probs, v)
+
+
+def _fused_attention_offset(qc, k, v, q_offset, causal: bool = True
+                            ) -> jnp.ndarray:
+    """Traffic-lean attention (§Perf hillclimb 1).
+
+    Same math as the naive path, restructured so XLA materializes the
+    [B,KVH,G,Sq,Sk] tensor family 2.3x cheaper:
+
+    * 1/sqrt(dh) multiplies q ([B,S,H,dh]) instead of the scores (S^2);
+    * the causal mask is folded into the max/exp *reductions* (fuses into
+      their input) instead of a standalone select pass;
+    * un-normalized probs are stored in compute dtype (bf16 in prod);
+    * the 1/denominator lands on the PV output ([...,Sq,dh], 1/64th the
+      bytes of the probs tensor).
+
+    f32 is kept where accumulation accuracy lives: the QK^T accumulator,
+    the running max, and the denominator sum.
+    """
+    b, sq, h, dh = qc.shape
+    sk = k.shape[1]
+    qs = qc * jnp.asarray(1.0 / np.sqrt(dh), qc.dtype)
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = qs.reshape(b, sq, kvh, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                        preferred_element_type=jnp.float32)
+    if causal:
+        # ADDITIVE mask: the add input-fuses into both reductions below, so
+        # no masked-scores tensor is ever materialized (a select/where is
+        # materialized once per consumer — 2 extra S^2 passes)
+        qpos = jnp.arange(sq) + q_offset
+        bias = jnp.where(
+            (jnp.arange(sk)[None, :] <= qpos[:, None]),
+            0.0, NEG_INF).astype(jnp.float32)[None, None, None]
+        masked = scores + bias
+    else:
+        masked = scores
+    m = jax.lax.stop_gradient(
+        jnp.max(masked, axis=-1, keepdims=True))          # f32 [.,Sq,1]
+    p = jnp.exp(masked - m).astype(qc.dtype)              # stored compute-dtype
+    denom = jnp.sum(p.astype(jnp.float32), axis=-1)       # f32 [.,Sq]
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v,
+                     preferred_element_type=jnp.float32)
+    denom_q = jnp.moveaxis(denom, 3, 1)                   # -> [b,Sq,kvh,g]
+    out = out / jnp.maximum(denom_q, 1e-37)[..., None]
+    return out.astype(qc.dtype).reshape(b, sq, h, v.shape[-1])
+
+
+def _tile_bias(qpos, kpos, causal: bool, sk_valid: int) -> jnp.ndarray:
+    ok = kpos[None, :] < sk_valid                 # mask k-padding
+    if causal:
+        ok = ok & (kpos[None, :] <= qpos[:, None])
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[None, None, None]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _flash_core(qs, k, v, qpos, causal: bool, k_chunk: int, sk_valid: int):
+    out, _ = _flash_fwd_loop(qs, k, v, qpos, causal, k_chunk, sk_valid)
+    return out
+
+
+def _flash_fwd_loop(qs, k, v, qpos, causal, k_chunk, sk_valid):
+    """Online-softmax forward: returns (out [b,kvh,g,sq,dh], L [.,sq])."""
+    b, sq, kvh, g, dh = qs.shape
+    nk = k.shape[1] // k_chunk
+    with jax.named_scope("vmem_kernel_flash_fwd"):
+        kt = k.reshape(b, nk, k_chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+        vt = v.reshape(b, nk, k_chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+
+        def body(carry, args):
+            acc, m, l = carry
+            i, kc, vc = args
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qs, kc,
+                           preferred_element_type=jnp.float32)
+            s = s + _tile_bias(qpos, i * k_chunk + jnp.arange(k_chunk),
+                               causal, sk_valid)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(qs.dtype), vc,
+                            preferred_element_type=jnp.float32)
+            acc = acc * alpha[..., None] + pv
+            return (acc, m_new, l), None
+
+        acc0 = jnp.zeros((b, kvh, g, sq, dh), jnp.float32)
+        m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            body, (acc0, m0, l0), (jnp.arange(nk), kt, vt))
+        l_safe = jnp.maximum(l, 1e-37)
+        out = (acc / l_safe[..., None]).astype(qs.dtype)
+        lse = m + jnp.log(l_safe)                  # logsumexp residual
+    return out, lse
+
+
+def _flash_fwd(qs, k, v, qpos, causal, k_chunk, sk_valid):
+    out, lse = _flash_fwd_loop(qs, k, v, qpos, causal, k_chunk, sk_valid)
+    return out, (qs, k, v, qpos, out, lse)
+
+
+def _flash_bwd(causal, k_chunk, sk_valid, res, dout):
+    """Flash backward: per-tile recompute of p = exp(s - lse); never saves
+    the [.,Sq,Sk] tensors (exactly what the Pallas bwd kernel does).
+
+    Layouts: out/dout are [b,kvh,g,sq,dh]; qs is [b,sq,kvh,g,dh]."""
+    qs, k, v, qpos, out, lse = res
+    b, sq, kvh, g, dh = qs.shape
+    nk = k.shape[1] // k_chunk
+    with jax.named_scope("vmem_kernel_flash_bwd"):
+        kt = k.reshape(b, nk, k_chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+        vt = v.reshape(b, nk, k_chunk, kvh, dh).transpose(1, 0, 2, 3, 4)
+        dout32 = dout.astype(jnp.float32)
+        out32 = out.astype(jnp.float32)
+        # D = sum_d dout*out  [b,kvh,g,sq]  (the softmax-jvp row term)
+        d_row = jnp.einsum("bkgqd,bkgqd->bkgq", dout32, out32)
+
+        def body(dq_acc, args):
+            i, kc, vc = args
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qs, kc,
+                           preferred_element_type=jnp.float32)
+            s = s + _tile_bias(qpos, i * k_chunk + jnp.arange(k_chunk),
+                               causal, sk_valid)
+            p = jnp.exp(s - lse[..., None])                  # normalized
+            dp = jnp.einsum("bkgqd,bskd->bkgqs", dout32, vc)
+            dv_c = jnp.einsum("bkgqs,bkgqd->bskd", p, dout32)
+            ds = p * (dp - d_row[..., None])
+            dq_c = jnp.einsum("bkgqs,bskd->bqkgd", ds, kc)
+            dk_c = jnp.einsum("bkgqs,bqkgd->bskd", ds,
+                              qs.astype(jnp.float32))
+            return dq_acc + dq_c, (dk_c, dv_c)
+
+        dq0 = jnp.zeros((b, sq, kvh, g, dh), jnp.float32)
+        dq, (dk_t, dv_t) = jax.lax.scan(
+            body, dq0, (jnp.arange(nk), kt, vt))
+        dk = dk_t.transpose(1, 0, 2, 3, 4).reshape(b, nk * k_chunk, kvh, dh)
+        dv = dv_t.transpose(1, 0, 2, 3, 4).reshape(b, nk * k_chunk, kvh, dh)
+    return (dq.astype(qs.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
+            None)
+
+
+_flash_core.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _flash_attention_offset(qc, k, v, q_offset, causal: bool = True,
+                            k_chunk: int = 1024) -> jnp.ndarray:
+    """Flash attention for one q-chunk (§Perf hillclimb 1, iteration 3).
+
+    The k/v loops run under the ``vmem_kernel`` scope: on TPU these loops
+    ARE kernels/flash_attention.py (pallas_call, tiles resident in VMEM;
+    the model zoo swaps it in via ``use_kernel_fn``); the jnp form here is
+    its oracle twin, with a custom_vjp whose backward recomputes p per tile
+    (the flash-bwd contract — scan autodiff would otherwise save the full
+    [.,Sq,Sk] stack).  The scope marker lets the roofline byte model charge
+    the loops' *external* traffic (q,k,v in, out/grads out) instead of
+    per-iteration HBM round-trips; FLOPs remain counted per-iteration.
+    """
+    b, sq, h, dh = qc.shape
+    sk = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    k_chunk = min(k_chunk, max(sk, 128))
+    pad = (-sk) % k_chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qs = (qc * jnp.asarray(1.0 / np.sqrt(dh), qc.dtype)
+          ).reshape(b, sq, kvh, g, dh)
+    qpos = jnp.arange(sq) + q_offset
+    out = _flash_core(qs, k, v, qpos, causal, k_chunk, sk)
+    # [b,kvh,g,sq,dh] -> [b,sq,h,dh]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh)
+
+
+def attention(p: Params, x: jnp.ndarray, cfg: AttnConfig, *,
+              positions: Optional[jnp.ndarray] = None,
+              positions3: Optional[jnp.ndarray] = None,
+              use_kernel_fn=None) -> jnp.ndarray:
+    """Causal self-attention over x [B,S,D] -> [B,S,D]."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(p, x, cfg, positions, positions3)
+    if use_kernel_fn is not None:
+        out = use_kernel_fn(q, k, v)
+    elif s > cfg.chunk_threshold:
+        out = _chunked_attention(q, k, v, cfg.chunk_size, cfg.causal,
+                                 cfg.softmax_mode)
+    else:
+        out = _full_attention(q, k, v, causal=cfg.causal,
+                              softmax_mode=cfg.softmax_mode)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# KV cache + decode
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray          # [B, Smax, KVH, Dh]
+    v: jnp.ndarray          # [B, Smax, KVH, Dh]
+    length: jnp.ndarray     # [] int32 — tokens filled so far
+
+
+def init_kv_cache(batch: int, max_seq: int, cfg: AttnConfig,
+                  dtype=jnp.bfloat16) -> KVCache:
+    shape = (batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def cache_specs() -> Specs:
+    return {"k": ("batch", "cache_seq", "kv_heads", "head_dim"),
+            "v": ("batch", "cache_seq", "kv_heads", "head_dim"),
+            "length": ()}
+
+
+def prefill_into_cache(p: Params, x: jnp.ndarray, cfg: AttnConfig,
+                       cache: KVCache,
+                       positions3: Optional[jnp.ndarray] = None
+                       ) -> Tuple[jnp.ndarray, KVCache]:
+    """Run prefill attention AND populate the cache with this segment's K/V."""
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _project_qkv(p, x, cfg, positions, positions3)
+    out = (_chunked_attention(q, k, v, cfg.chunk_size,
+                              softmax_mode=cfg.softmax_mode)
+           if s > cfg.chunk_threshold
+           else _full_attention(q, k, v, softmax_mode=cfg.softmax_mode))
+    newk = jax.lax.dynamic_update_slice(
+        cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
+    newv = jax.lax.dynamic_update_slice(
+        cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0))
+    new_cache = KVCache(k=newk, v=newv,
+                        length=jnp.asarray(s, jnp.int32))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def decode_attention_token(p: Params, x: jnp.ndarray, cfg: AttnConfig,
+                           k_cache: jnp.ndarray, v_cache: jnp.ndarray,
+                           length: jnp.ndarray,
+                           positions3: Optional[jnp.ndarray] = None
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One-token decode against a READ-ONLY cache slice (§Perf hillclimb 3).
+
+    Unlike :func:`decode_attention` this never materializes an updated
+    [B,S,KVH,Dh] cache: the new token's K/V are returned for the caller to
+    dynamic-update-slice into its (scan-carried, in-place-aliased) stacked
+    cache, and attention runs as a two-part softmax over (cache, new token)
+    — the 67 MB-per-layer cache rewrite a stacked-ys decode pays becomes a
+    16 KB token write.
+    """
+    b = x.shape[0]
+    positions = jnp.broadcast_to(jnp.asarray(length)[None], (b, 1))
+    q, k, v = _project_qkv(p, x, cfg, positions, positions3)
+    smax = k_cache.shape[1]
+    s_c = _gqa_scores(q, k_cache.astype(q.dtype)).astype(jnp.float32)
+    valid = jnp.arange(smax) < length                 # strictly the past
+    s_c = jnp.where(valid[None, None, None, None, :], s_c, NEG_INF)
+    s_t = _gqa_scores(q, k.astype(q.dtype)).astype(jnp.float32)  # [.,1,1]
+    m = jnp.maximum(jnp.max(s_c, -1, keepdims=True), s_t)
+    p_c = jnp.exp(s_c - m)
+    p_t = jnp.exp(s_t - m)
+    denom = jnp.sum(p_c, -1, keepdims=True) + p_t
+    out_c = _gqa_out((p_c / denom).astype(q.dtype),
+                     v_cache.astype(q.dtype))          # [b,1,h,dh]
+    w_t = (p_t / denom).astype(q.dtype)                # [b,kvh,g,1,1]
+    # token contribution: broadcast v [b,1,kvh,dh] over the g groups
+    vt = v.transpose(0, 2, 1, 3)[:, :, None, :, :]     # [b,kvh,1,1,dh]
+    out_t = w_t * vt                                   # [b,kvh,g,1,dh]
+    kvh, g = w_t.shape[1], w_t.shape[2]
+    out_t = out_t.transpose(0, 3, 1, 2, 4).reshape(b, 1, kvh * g, -1)
+    y = jnp.einsum("bshk,hkd->bsd", out_c + out_t, p["wo"].astype(x.dtype))
+    return y, k, v
+
+
+def decode_attention(p: Params, x: jnp.ndarray, cfg: AttnConfig,
+                     cache: KVCache,
+                     positions3: Optional[jnp.ndarray] = None
+                     ) -> Tuple[jnp.ndarray, KVCache]:
+    """One-token decode: x [B,1,D], cache holds `length` past tokens.
+
+    The new token's K/V are written at index `length`; attention spans the
+    whole cache buffer with positions >= length masked out (so a
+    sequence-sharded cache needs no gather — masking + all-reduce softmax).
+    """
+    b = x.shape[0]
+    positions = jnp.broadcast_to(cache.length[None], (b, 1))
+    q, k, v = _project_qkv(p, x, cfg, positions, positions3)
+    newk = jax.lax.dynamic_update_slice(
+        cache.k, k.astype(cache.k.dtype), (0, cache.length, 0, 0))
+    newv = jax.lax.dynamic_update_slice(
+        cache.v, v.astype(cache.v.dtype), (0, cache.length, 0, 0))
+
+    scores = _gqa_scores(q, newk.astype(q.dtype)).astype(jnp.float32)
+    smax = newk.shape[1]
+    valid = jnp.arange(smax) <= cache.length          # includes the new token
+    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = _gqa_out(probs, newv.astype(q.dtype))
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, KVCache(k=newk, v=newv, length=cache.length + 1)

@@ -1,0 +1,167 @@
+"""Encoder-decoder backbone (seamless-m4t-medium, arXiv:2308.11596).
+
+Backbone only, per the assignment: the speech/vision frontend is a STUB —
+``input_specs()`` provides precomputed frame embeddings [B, S_src, D] as the
+encoder input.  12 bidirectional encoder layers + 12 causal decoder layers
+with cross-attention, GELU FFN (d_ff 4096), LayerNorm, MHA 16 heads
+(kv=16), vocab 256206.
+
+Cross-attention carries no RoPE (positions live in the self-attention);
+encoder K/V memory is computed once at prefill and cached.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.features import FeatureSet
+from repro.models import attention as attn_mod
+from repro.models.attention import AttnConfig, KVCache
+from repro.models.layers import (Params, Specs, gelu_mlp, layer_norm,
+                                 layernorm_init, truncated_normal_init)
+from repro.models.transformer import remat_policy_fn
+
+__all__ = ["CrossAttnBlockConfig", "init_encoder_block", "init_decoder_block",
+           "encoder_block_specs", "decoder_block_specs",
+           "apply_encoder_block", "apply_decoder_block",
+           "apply_decoder_block_decode", "cross_memory", "memory_specs"]
+
+
+class CrossAttnBlockConfig(NamedTuple):
+    attn: AttnConfig              # self-attention config (causal for decoder)
+    d_ff: int
+    norm_eps: float = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# encoder block: bidirectional self-attn + GELU FFN
+# ---------------------------------------------------------------------------
+
+def init_encoder_block(key, cfg: CrossAttnBlockConfig, dtype=jnp.float32
+                       ) -> Params:
+    ka, k1, k2 = jax.random.split(key, 3)
+    d = cfg.attn.d_model
+    std = 1.0 / np.sqrt(d)
+    return {
+        "ln1": layernorm_init(d),
+        "attn": attn_mod.init_attn(ka, cfg.attn, dtype),
+        "ln2": layernorm_init(d),
+        "mlp": {
+            "w_up": truncated_normal_init(k1, (d, cfg.d_ff), dtype, std),
+            "b_up": jnp.zeros((cfg.d_ff,), dtype),
+            "w_down": truncated_normal_init(k2, (cfg.d_ff, d), dtype,
+                                            1.0 / np.sqrt(cfg.d_ff)),
+            "b_down": jnp.zeros((d,), dtype),
+        },
+    }
+
+
+def encoder_block_specs(cfg: CrossAttnBlockConfig) -> Specs:
+    ln = {"scale": ("act_embed",), "bias": ("act_embed",)}
+    return {
+        "ln1": dict(ln),
+        "attn": attn_mod.attn_specs(cfg.attn),
+        "ln2": dict(ln),
+        "mlp": {"w_up": ("embed", "ff"), "b_up": ("ff",),
+                "w_down": ("ff", "embed"), "b_down": ("act_embed",)},
+    }
+
+
+def apply_encoder_block(p: Params, x: jnp.ndarray, cfg: CrossAttnBlockConfig
+                        ) -> jnp.ndarray:
+    h = x + attn_mod.attention(p["attn"], layer_norm(x, p["ln1"], cfg.norm_eps),
+                               cfg.attn)
+    m = gelu_mlp(layer_norm(h, p["ln2"], cfg.norm_eps),
+                 p["mlp"]["w_up"].astype(x.dtype), p["mlp"]["b_up"].astype(x.dtype),
+                 p["mlp"]["w_down"].astype(x.dtype), p["mlp"]["b_down"].astype(x.dtype))
+    return h + m
+
+
+# ---------------------------------------------------------------------------
+# decoder block: causal self-attn + cross-attn + GELU FFN
+# ---------------------------------------------------------------------------
+
+def init_decoder_block(key, cfg: CrossAttnBlockConfig, dtype=jnp.float32
+                       ) -> Params:
+    ka, kc, k1, k2 = jax.random.split(key, 4)
+    d = cfg.attn.d_model
+    std = 1.0 / np.sqrt(d)
+    cross_cfg = cfg.attn._replace(causal=False, use_rope=False)
+    return {
+        "ln1": layernorm_init(d),
+        "attn": attn_mod.init_attn(ka, cfg.attn, dtype),
+        "ln_cross": layernorm_init(d),
+        "cross": attn_mod.init_attn(kc, cross_cfg, dtype),
+        "ln2": layernorm_init(d),
+        "mlp": {
+            "w_up": truncated_normal_init(k1, (d, cfg.d_ff), dtype, std),
+            "b_up": jnp.zeros((cfg.d_ff,), dtype),
+            "w_down": truncated_normal_init(k2, (cfg.d_ff, d), dtype,
+                                            1.0 / np.sqrt(cfg.d_ff)),
+            "b_down": jnp.zeros((d,), dtype),
+        },
+    }
+
+
+def decoder_block_specs(cfg: CrossAttnBlockConfig) -> Specs:
+    ln = {"scale": ("act_embed",), "bias": ("act_embed",)}
+    return {
+        "ln1": dict(ln),
+        "attn": attn_mod.attn_specs(cfg.attn),
+        "ln_cross": dict(ln),
+        "cross": attn_mod.attn_specs(cfg.attn),
+        "ln2": dict(ln),
+        "mlp": {"w_up": ("embed", "ff"), "b_up": ("ff",),
+                "w_down": ("ff", "embed"), "b_down": ("act_embed",)},
+    }
+
+
+def cross_memory(p_cross: Params, enc_out: jnp.ndarray, cfg: AttnConfig
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Precompute encoder K/V once per sequence (cached for decode)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p_cross["wk"].astype(enc_out.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p_cross["wv"].astype(enc_out.dtype))
+    return k, v
+
+
+def memory_specs() -> Specs:
+    return (("batch", "seq", "kv_heads", "head_dim"),
+            ("batch", "seq", "kv_heads", "head_dim"))
+
+
+def _cross_attend(p_cross: Params, x: jnp.ndarray, mem_k, mem_v,
+                  cfg: AttnConfig) -> jnp.ndarray:
+    q = jnp.einsum("bsd,dhk->bshk", x, p_cross["wq"].astype(x.dtype))
+    out = attn_mod._full_attention(q, mem_k.astype(x.dtype),
+                                   mem_v.astype(x.dtype), causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p_cross["wo"].astype(x.dtype))
+
+
+def apply_decoder_block(p: Params, x: jnp.ndarray, mem_k, mem_v,
+                        cfg: CrossAttnBlockConfig) -> jnp.ndarray:
+    h = x + attn_mod.attention(p["attn"], layer_norm(x, p["ln1"], cfg.norm_eps),
+                               cfg.attn)
+    h = h + _cross_attend(p["cross"], layer_norm(h, p["ln_cross"], cfg.norm_eps),
+                          mem_k, mem_v, cfg.attn)
+    m = gelu_mlp(layer_norm(h, p["ln2"], cfg.norm_eps),
+                 p["mlp"]["w_up"].astype(x.dtype), p["mlp"]["b_up"].astype(x.dtype),
+                 p["mlp"]["w_down"].astype(x.dtype), p["mlp"]["b_down"].astype(x.dtype))
+    return h + m
+
+
+def apply_decoder_block_decode(p: Params, x: jnp.ndarray, mem_k, mem_v,
+                               cache: KVCache, cfg: CrossAttnBlockConfig
+                               ) -> Tuple[jnp.ndarray, KVCache]:
+    a, new_cache = attn_mod.decode_attention(
+        p["attn"], layer_norm(x, p["ln1"], cfg.norm_eps), cfg.attn, cache)
+    h = x + a
+    h = h + _cross_attend(p["cross"], layer_norm(h, p["ln_cross"], cfg.norm_eps),
+                          mem_k, mem_v, cfg.attn)
+    m = gelu_mlp(layer_norm(h, p["ln2"], cfg.norm_eps),
+                 p["mlp"]["w_up"].astype(x.dtype), p["mlp"]["b_up"].astype(x.dtype),
+                 p["mlp"]["w_down"].astype(x.dtype), p["mlp"]["b_down"].astype(x.dtype))
+    return h + m, new_cache

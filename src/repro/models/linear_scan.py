@@ -1,0 +1,154 @@
+"""Chunked gated linear attention — the shared recurrence of mLSTM and Mamba2.
+
+Both xLSTM's mLSTM (matrix memory + scalar gates + normalizer) and Mamba2's
+SSD (state-space dual with scalar-per-head decay) are instances of::
+
+    C_t = f_t * C_{t-1} + i_t * k_t v_t^T          C: [dk, dv] per (b, h)
+    n_t = f_t * n_{t-1} + i_t * k_t                n: [dk]      (normalizer)
+    y_t = q_t @ C_t     [ / max(|q_t @ n_t|, eps)  if normalize ]
+
+with f_t = exp(log_f_t) in (0,1], i_t = exp(log_i_t).
+
+The **chunkwise** evaluation (this module; also the contract of the Pallas
+kernel kernels/ssd_scan.py) splits S into chunks of size c and computes, per
+chunk, an intra-chunk attention-like term plus an inter-chunk state
+contribution — O(S*c*d + S*d^2/c*...) instead of a length-S sequential scan,
+mapping onto MXU matmuls.  :func:`sequential_linear_attention` is the
+O(S) scan oracle used by tests.
+
+Stability: log_f <= 0 (gates through log-sigmoid) and log_i <= 0 keep every
+exponent <= 0, so no running-max stabilizer is needed (a documented
+simplification vs. the xLSTM paper's exp input gate — structure preserved,
+see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["chunked_linear_attention", "sequential_linear_attention"]
+
+
+def sequential_linear_attention(q, k, v, log_f, log_i, *,
+                                normalize: bool = False, eps: float = 1e-6,
+                                initial_state=None):
+    """O(S) scan oracle.  q,k: [B,S,H,dk]; v: [B,S,H,dv]; log_f/i: [B,S,H].
+
+    Returns (y [B,S,H,dv], (C [B,H,dk,dv], n [B,H,dk])).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    if initial_state is None:
+        c0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+    else:
+        c0, n0 = initial_state
+
+    def step(carry, xs):
+        C, n = carry
+        qt, kt, vt, lft, lit = xs                     # [B,H,dk] etc.
+        f = jnp.exp(lft)[..., None]                   # [B,H,1]
+        i = jnp.exp(lit)[..., None]
+        C = f[..., None] * C + (i * kt)[..., None] * vt[..., None, :]
+        n = f * n + i * kt
+        y = jnp.einsum("bhk,bhkv->bhv", qt, C)
+        if normalize:
+            denom = jnp.abs(jnp.einsum("bhk,bhk->bh", qt, n))
+            y = y / jnp.maximum(denom, eps)[..., None]
+        return (C, n), y
+
+    xs = tuple(jnp.moveaxis(a.astype(jnp.float32), 1, 0)
+               for a in (q, k, v, log_f, log_i))
+    (C, n), ys = jax.lax.scan(step, (c0, n0), xs)
+    return jnp.moveaxis(ys, 0, 1).astype(v.dtype), (C, n)
+
+
+def chunked_linear_attention(q, k, v, log_f, log_i, *, chunk_size: int = 128,
+                             normalize: bool = False, eps: float = 1e-6,
+                             initial_state=None, use_kernel_fn=None):
+    """Chunk-parallel evaluation (matches the sequential oracle to ~1e-5).
+
+    q,k: [B,S,H,dk]; v: [B,S,H,dv]; log_f, log_i: [B,S,H] (both <= 0).
+    Returns (y [B,S,H,dv], final_state (C, n)).
+    """
+    if use_kernel_fn is not None:
+        return use_kernel_fn(q, k, v, log_f, log_i)
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk_size, s)
+    pad = (-s) % c
+    if pad:
+        zf = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        q, k, v = zf(q), zf(k), zf(v)
+        log_f, log_i = zf(log_f), zf(log_i)   # pad gates: log_f=0 (f=1) ok,
+        # but log_i=0 means i=1 -> padded tokens would write state.  Mask:
+        mask = jnp.arange(s + pad) < s
+        log_i = jnp.where(mask[None, :, None], log_i, -1e9)
+    nc = (s + pad) // c
+
+    # reshape to chunks, f32 math throughout the recurrence
+    def rs(a):
+        return (a.astype(jnp.float32)
+                .reshape(b, nc, c, *a.shape[2:]).swapaxes(0, 1))
+    qc, kc, vc = rs(q), rs(k), rs(v)          # [nc,B,c,H,*]
+    lfc, lic = rs(log_f), rs(log_i)           # [nc,B,c,H]
+
+    if initial_state is None:
+        C0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+        n0 = jnp.zeros((b, h, dk), jnp.float32)
+    else:
+        C0 = initial_state[0].astype(jnp.float32)
+        n0 = initial_state[1].astype(jnp.float32)
+
+    def chunk_step(carry, xs):
+        C, n = carry                           # [B,H,dk,dv], [B,H,dk]
+        qt, kt, vt, lf, li = xs                # [B,c,H,*], [B,c,H]
+        Bc = jnp.cumsum(lf, axis=1)            # inclusive cumsum [B,c,H]
+        total = Bc[:, -1]                      # [B,H]
+        # --- inter-chunk: y_inter_t = exp(B_t) q_t @ C_prev
+        qdec = qt * jnp.exp(Bc)[..., None]
+        y_inter = jnp.einsum("bchk,bhkv->bchv", qdec, C)
+        n_inter = jnp.einsum("bchk,bhk->bch", qdec, n)
+        # --- intra-chunk: A[t,j] = exp(B_t - B_j + li_j) for j<=t
+        gap = Bc[:, :, None, :] - Bc[:, None, :, :] + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        A = jnp.where(tri[None, :, :, None], jnp.exp(gap), 0.0)  # [B,c,c,H]
+        scores = jnp.einsum("bchk,bghk->bcgh", qt, kt) * A        # g = j index
+        y_intra = jnp.einsum("bcgh,bghv->bchv", scores, vt)
+        # q_t . n_intra_t = sum_j A[t,j] (q_t . k_j) = row-sum of scores
+        n_intra_dot = jnp.sum(scores, axis=2)                     # [B,c,H]
+        # --- state update: C_new = exp(total) C + sum_j exp(total-B_j+li_j) k_j v_j^T
+        wj = jnp.exp(total[:, None] - Bc + li)                    # [B,c,H]
+        kw = kt * wj[..., None]
+        C_new = jnp.exp(total)[..., None, None] * C + \
+            jnp.einsum("bchk,bchv->bhkv", kw, vt)
+        n_new = jnp.exp(total)[..., None] * n + jnp.sum(kw, axis=1)
+        y = y_inter + y_intra
+        if normalize:
+            denom = jnp.abs(n_inter + n_intra_dot)
+            y = y / jnp.maximum(denom, eps)[..., None]
+        return (C_new, n_new), y
+
+    (C, n), ys = jax.lax.scan(chunk_step, (C0, n0), (qc, kc, vc, lfc, lic))
+    y = ys.swapaxes(0, 1).reshape(b, nc * c, h, dv)[:, :s]
+    return y.astype(v.dtype), (C, n)
+
+
+def decode_step_linear_attention(q, k, v, log_f, log_i, state, *,
+                                 normalize: bool = False, eps: float = 1e-6
+                                 ) -> Tuple[jnp.ndarray, Tuple]:
+    """Single-token recurrent update (serving).  q,k,v: [B,H,d*]; gates [B,H]."""
+    C, n = state
+    f = jnp.exp(log_f.astype(jnp.float32))[..., None]
+    i = jnp.exp(log_i.astype(jnp.float32))[..., None]
+    k32, v32, q32 = (a.astype(jnp.float32) for a in (k, v, q))
+    C = f[..., None] * C + (i * k32)[..., None] * v32[..., None, :]
+    n = f * n + i * k32
+    y = jnp.einsum("bhk,bhkv->bhv", q32, C)
+    if normalize:
+        denom = jnp.abs(jnp.einsum("bhk,bhk->bh", q32, n))
+        y = y / jnp.maximum(denom, eps)[..., None]
+    return y.astype(v.dtype), (C, n)

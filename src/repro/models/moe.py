@@ -1,0 +1,184 @@
+"""Mixture-of-Experts MLP: top-k router, capacity dispatch, shared experts.
+
+Covers qwen2-moe-a2.7b (60 routed top-4 + 4 shared-expert "always on" FFNs)
+and qwen3-moe-235b (128 routed top-8, no shared experts).
+
+Dispatch is **capacity-based scatter/gather** (GShard-style but without the
+[T,E,C] one-hot tensor — positions are computed with a cumsum over the [T,E]
+assignment matrix and tokens are scattered into the [E,C,D] expert buffer).
+With experts sharded over the ``model`` axis (EP), XLA SPMD turns the
+scatter/gather resharding into all-to-all — the collective the MOE perfctr
+group reports on.  Tokens beyond capacity are dropped (weights renormalized);
+capacity_factor >= E/topk makes dispatch lossless for testing.
+
+Router runs in f32 (numerics), experts in compute dtype.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import Params, Specs, truncated_normal_init
+
+__all__ = ["MoEConfig", "init_moe", "moe_specs", "moe_mlp"]
+
+
+class MoEConfig(NamedTuple):
+    d_model: int
+    d_ff_expert: int            # per-expert FFN width
+    num_experts: int            # routed experts
+    top_k: int
+    num_shared_experts: int = 0 # always-on experts (qwen2-moe: 4)
+    d_ff_shared: int = 0        # width of the fused shared-expert FFN
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.001
+
+
+def init_moe(key, cfg: MoEConfig, dtype=jnp.float32) -> Params:
+    kr, k1, k2, k3, s1, s2, s3 = jax.random.split(key, 7)
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.num_experts
+    std = 1.0 / np.sqrt(d)
+    p = {
+        "router": truncated_normal_init(kr, (d, e), jnp.float32, std),
+        "w_gate": truncated_normal_init(k1, (e, d, f), dtype, std),
+        "w_up": truncated_normal_init(k2, (e, d, f), dtype, std),
+        "w_down": truncated_normal_init(k3, (e, f, d), dtype, 1.0 / np.sqrt(f)),
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.d_ff_shared or cfg.d_ff_expert * cfg.num_shared_experts
+        p["shared_gate"] = truncated_normal_init(s1, (d, fs), dtype, std)
+        p["shared_up"] = truncated_normal_init(s2, (d, fs), dtype, std)
+        p["shared_down"] = truncated_normal_init(s3, (fs, d), dtype,
+                                                 1.0 / np.sqrt(fs))
+        p["shared_coef"] = truncated_normal_init(key, (d, 1), jnp.float32, std)
+    return p
+
+
+def moe_specs(cfg: MoEConfig) -> Specs:
+    s = {
+        "router": ("embed", "experts"),
+        "w_gate": ("experts", "embed", "expert_ff"),
+        "w_up": ("experts", "embed", "expert_ff"),
+        "w_down": ("experts", "expert_ff", "embed"),
+    }
+    if cfg.num_shared_experts:
+        s["shared_gate"] = ("embed", "ff")
+        s["shared_up"] = ("embed", "ff")
+        s["shared_down"] = ("ff", "embed")
+        s["shared_coef"] = ("embed", None)
+    return s
+
+
+def _capacity(tokens: int, cfg: MoEConfig) -> int:
+    cap = int(np.ceil(tokens * cfg.top_k * cfg.capacity_factor
+                      / cfg.num_experts))
+    return max(cap, cfg.top_k)
+
+
+def _block_cumsum_positions(flat: jnp.ndarray, n_blocks: int = 256
+                            ) -> jnp.ndarray:
+    """Exclusive cumsum over the token axis of a [T*K, E] assignment matrix,
+    computed hierarchically: per-block cumsums (parallel, token-shardable
+    under SPMD) + a tiny [n_blocks, E] block-offset pass.  Identical result
+    to the flat cumsum, without the O(T*K x E) sequential reduce_window the
+    flat form lowers to (the qwen3-moe §Perf finding: that op replicated
+    1.7 TB of s32 traffic per step).
+    """
+    tk, e = flat.shape
+    blk = -(-tk // n_blocks)
+    pad = n_blocks * blk - tk
+    fp = jnp.pad(flat, ((0, pad), (0, 0)))
+    fb = fp.reshape(n_blocks, blk, e)
+    within = jnp.cumsum(fb, axis=1) - fb                     # exclusive
+    block_tot = jnp.sum(fb, axis=1)                          # [Nblk, E]
+    offs = jnp.cumsum(block_tot, axis=0) - block_tot         # exclusive
+    pos = within + offs[:, None, :]
+    return pos.reshape(n_blocks * blk, e)[:tk]
+
+
+def moe_mlp(p: Params, x: jnp.ndarray, cfg: MoEConfig,
+            constrain_fn=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B,S,D] -> (out [B,S,D], aux_loss scalar f32).
+
+    ``constrain_fn(arr, logical_axes)`` (optional) pins the dispatch
+    tensors' shardings: token-major arrays over the data axes, the
+    [E, C, D] capacity buffers over (experts -> model, capacity -> data).
+    """
+    b, s, d = x.shape
+    t = b * s
+    cap = _capacity(t, cfg)
+    xt = x.reshape(t, d)
+    cst = constrain_fn or (lambda a, axes: a)
+
+    # ---- router (f32) ----
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                       # [T,E]
+    gate_vals, idx = jax.lax.top_k(probs, cfg.top_k)              # [T,K]
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)  # renorm
+
+    # ---- load-balancing aux loss (Switch-style) ----
+    me = jnp.mean(probs, axis=0)                                   # [E]
+    assign = jax.nn.one_hot(idx[:, 0], cfg.num_experts)            # top-1 share
+    ce = jnp.mean(assign, axis=0)
+    aux = cfg.router_aux_weight * cfg.num_experts * jnp.sum(me * ce)
+
+    # ---- positions within each expert's capacity buffer ----
+    # (flat cumsum on purpose: the blocked variant of
+    # _block_cumsum_positions lowers to a [blk,blk] triangular matmul and
+    # breaks SPMD sharding propagation — §Perf hillclimb 2, iteration 2b,
+    # REFUTED with a 6x FLOP regression)
+    onehot = jax.nn.one_hot(idx, cfg.num_experts, dtype=jnp.int32)  # [T,K,E]
+    flat = cst(onehot.reshape(t * cfg.top_k, cfg.num_experts),
+               ("moe_tokens", None))
+    pos_in_expert = jnp.cumsum(flat, axis=0) - flat                 # [T*K,E]
+    pos = jnp.sum(pos_in_expert * flat, axis=-1)                    # [T*K]
+    eid = idx.reshape(t * cfg.top_k)
+    keep = pos < cap
+    # routing weights combine in COMPUTE dtype: an f32 gate here upcasts
+    # every [T*K, D] dispatch array to f32 (2x traffic — §Perf finding)
+    w = (gate_vals.reshape(t * cfg.top_k) * keep).astype(x.dtype)
+
+    # ---- scatter tokens into [E, C, D] buffers ----
+    src = cst(jnp.repeat(xt, cfg.top_k, axis=0), ("moe_tokens", "embed"))
+    pos_c = jnp.where(keep, pos, cap - 1)                           # clamp
+    buf = jnp.zeros((cfg.num_experts, cap, d), x.dtype)
+    buf = buf.at[eid, pos_c].add(src * keep[:, None].astype(x.dtype))
+    buf = cst(buf, ("experts", "moe_capacity", "embed"))
+
+    # ---- expert FFNs (einsum over stacked expert weights; EP-sharded) ----
+    g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"].astype(x.dtype))
+    out_buf = cst(out_buf, ("experts", "moe_capacity", "embed"))
+
+    # ---- gather back + combine with gate weights ----
+    gathered = cst(out_buf[eid, pos_c], ("moe_tokens", "embed"))       # [T*K,D]
+    combined = gathered * w[:, None]
+    out = jnp.sum(combined.reshape(t, cfg.top_k, d), axis=1)
+
+    # ---- shared experts (dense SwiGLU, gated residual: qwen2-moe) ----
+    if cfg.num_shared_experts:
+        sg = jnp.einsum("td,df->tf", xt, p["shared_gate"].astype(x.dtype))
+        su = jnp.einsum("td,df->tf", xt, p["shared_up"].astype(x.dtype))
+        sh = jnp.einsum("tf,fd->td", jax.nn.silu(sg) * su,
+                        p["shared_down"].astype(x.dtype))
+        coef = jax.nn.sigmoid(
+            jnp.einsum("td,dz->tz", xt.astype(jnp.float32), p["shared_coef"]))
+        out = out + sh * coef.astype(x.dtype)
+
+    return out.reshape(b, s, d), aux.astype(jnp.float32)
+
+
+def count_active_params(cfg: MoEConfig) -> int:
+    """Per-token active params in this MoE layer (for 6*N_active*D)."""
+    per_expert = 3 * cfg.d_model * cfg.d_ff_expert
+    active = cfg.top_k * per_expert + cfg.d_model * cfg.num_experts
+    if cfg.num_shared_experts:
+        fs = cfg.d_ff_shared or cfg.d_ff_expert * cfg.num_shared_experts
+        active += 3 * cfg.d_model * fs + cfg.d_model
+    return active

@@ -1,0 +1,207 @@
+"""Mamba2 (SSD) blocks — the zamba2-1.2b backbone (arXiv:2411.15242).
+
+The SSD recurrence per head (state N=64, head dim P):
+
+    h_t = exp(-dt_t * exp(A_log)) h_{t-1} + dt_t * (B_t x_t^T)
+    y_t = C_t @ h_t + D * x_t
+
+is gated linear attention with q=C, k=B, v=dt*x, log_f=-dt*exp(A_log),
+log_i=0 — evaluated with the shared chunkwise primitive
+(:mod:`repro.models.linear_scan`, also the ssd_scan Pallas kernel contract).
+
+Block layout follows Mamba2: in_proj -> (z, x, B, C, dt); short causal
+conv1d over (x,B,C); SSD; gated RMSNorm(y * silu(z)); out_proj.
+
+Decode state per layer: SSD state (C [B,H,N,P], n unused) + conv tail
+[B, K-1, conv_channels] — O(1) in sequence length (long_500k runs).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import (Params, Specs, rms_norm, rmsnorm_init,
+                                 truncated_normal_init)
+from repro.models.linear_scan import (chunked_linear_attention,
+                                      decode_step_linear_attention)
+
+__all__ = ["Mamba2Config", "init_mamba2_block", "mamba2_block_specs",
+           "apply_mamba2_block", "mamba2_decode", "init_mamba2_state"]
+
+
+class Mamba2Config(NamedTuple):
+    d_model: int
+    d_state: int = 64            # N
+    head_dim: int = 64           # P
+    expand: int = 2
+    conv_kernel: int = 4
+    n_groups: int = 1
+    chunk_size: int = 128
+    norm_eps: float = 1e-6
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def num_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.n_groups * self.d_state
+
+    @property
+    def in_proj_out(self) -> int:
+        # z, x, B, C, dt
+        return 2 * self.d_inner + 2 * self.n_groups * self.d_state + self.num_heads
+
+
+def init_mamba2_block(key, cfg: Mamba2Config, dtype=jnp.float32) -> Params:
+    ki, kc, ko, kd = jax.random.split(key, 4)
+    d = cfg.d_model
+    std = 1.0 / np.sqrt(d)
+    # dt bias: softplus^-1 of dt uniform in [dt_min, dt_max] (mamba init)
+    u = jax.random.uniform(kd, (cfg.num_heads,))
+    dt = jnp.exp(u * (np.log(cfg.dt_max) - np.log(cfg.dt_min))
+                 + np.log(cfg.dt_min))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))  # inverse softplus
+    return {
+        "ln": rmsnorm_init(d),
+        "in_proj": truncated_normal_init(ki, (d, cfg.in_proj_out), dtype, std),
+        "conv_w": truncated_normal_init(kc, (cfg.conv_kernel,
+                                             cfg.conv_channels),
+                                        jnp.float32, 0.5),
+        "conv_b": jnp.zeros((cfg.conv_channels,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, cfg.num_heads)),
+        "D": jnp.ones((cfg.num_heads,)),
+        "dt_bias": dt_bias,
+        "ln_gate": rmsnorm_init(cfg.d_inner),
+        "out_proj": truncated_normal_init(ko, (cfg.d_inner, d), dtype,
+                                          1.0 / np.sqrt(cfg.d_inner)),
+    }
+
+
+def mamba2_block_specs(cfg: Mamba2Config) -> Specs:
+    return {
+        "ln": {"scale": ("act_embed",)},
+        "in_proj": ("embed", "ff"),
+        "conv_w": ("conv", "ff"),
+        "conv_b": ("ff",),
+        "A_log": ("heads",),
+        "D": ("heads",),
+        "dt_bias": ("heads",),
+        "ln_gate": {"scale": ("ff",)},
+        "out_proj": ("ff", "embed"),
+    }
+
+
+def _split_proj(proj: jnp.ndarray, cfg: Mamba2Config):
+    di, gn, h = cfg.d_inner, cfg.n_groups * cfg.d_state, cfg.num_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * gn]
+    dt = proj[..., di + di + 2 * gn:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 tail: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Depthwise causal conv1d.  xbc: [B,S,C]; w: [K,C].  tail: [B,K-1,C]
+    carries state across segments (decode)."""
+    k = w.shape[0]
+    w = w.astype(xbc.dtype)
+    if tail is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = tail.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)           # [B, S+K-1, C]
+    out = sum(xp[:, i:i + xbc.shape[1]] * w[i] for i in range(k))
+    return jax.nn.silu(out + b.astype(xbc.dtype))
+
+
+def _ssd_qkv(xbc: jnp.ndarray, dt_pre: jnp.ndarray, p: Params,
+             cfg: Mamba2Config):
+    """xbc (post-conv) [B,S,C'] -> (q=C, k=B, v=dt*x, log_f) per head."""
+    b, s, _ = xbc.shape
+    di, gn = cfg.d_inner, cfg.n_groups * cfg.d_state
+    x = xbc[..., :di].reshape(b, s, cfg.num_heads, cfg.head_dim)
+    Bmat = xbc[..., di:di + gn].reshape(b, s, cfg.n_groups, cfg.d_state)
+    Cmat = xbc[..., di + gn:].reshape(b, s, cfg.n_groups, cfg.d_state)
+    # broadcast groups over heads
+    rep = cfg.num_heads // cfg.n_groups
+    k = jnp.repeat(Bmat, rep, axis=2)                  # [B,S,H,N]
+    q = jnp.repeat(Cmat, rep, axis=2)
+    dt = jax.nn.softplus(dt_pre.astype(jnp.float32) + p["dt_bias"])  # [B,S,H]
+    log_f = -dt * jnp.exp(p["A_log"])                  # <= 0
+    v = x * dt[..., None].astype(x.dtype)              # fold i_t = dt into v
+    return q, k, v, log_f, x
+
+
+def apply_mamba2_block(p: Params, x_in: jnp.ndarray, cfg: Mamba2Config,
+                       use_kernel_fn=None, initial_state=None,
+                       return_state: bool = False):
+    xn = rms_norm(x_in, p["ln"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", xn, p["in_proj"].astype(x_in.dtype))
+    z, xbc_pre, dt_pre = _split_proj(proj, cfg)
+    conv_tail = initial_state["conv"] if initial_state is not None else None
+    xbc = _causal_conv(xbc_pre, p["conv_w"], p["conv_b"], tail=conv_tail)
+    q, k, v, log_f, xh = _ssd_qkv(xbc, dt_pre, p, cfg)
+    ssd0 = initial_state["ssd"] if initial_state is not None else None
+    y, ssd = chunked_linear_attention(q, k, v, log_f,
+                                      jnp.zeros_like(log_f),
+                                      chunk_size=cfg.chunk_size,
+                                      normalize=False,
+                                      initial_state=ssd0,
+                                      use_kernel_fn=use_kernel_fn)
+    y = y + xh * p["D"].astype(y.dtype)[None, None, :, None]   # skip
+    b, s = x_in.shape[:2]
+    y = y.reshape(b, s, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["ln_gate"], cfg.norm_eps)
+    out = x_in + jnp.einsum("bse,ed->bsd", y,
+                            p["out_proj"].astype(x_in.dtype))
+    if not return_state:
+        return out
+    kk = cfg.conv_kernel - 1
+    new_conv = xbc_pre[:, -kk:].astype(jnp.float32)
+    return out, {"ssd": ssd, "conv": new_conv}
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def init_mamba2_state(batch: int, cfg: Mamba2Config):
+    ssd = (jnp.zeros((batch, cfg.num_heads, cfg.d_state, cfg.head_dim),
+                     jnp.float32),
+           jnp.zeros((batch, cfg.num_heads, cfg.d_state), jnp.float32))
+    conv_tail = jnp.zeros((batch, cfg.conv_kernel - 1, cfg.conv_channels),
+                          jnp.float32)
+    return {"ssd": ssd, "conv": conv_tail}
+
+
+def mamba2_decode(p: Params, x_in: jnp.ndarray, cfg: Mamba2Config, state
+                  ) -> Tuple[jnp.ndarray, dict]:
+    """x_in: [B,1,D]."""
+    xn = rms_norm(x_in, p["ln"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,de->bse", xn, p["in_proj"].astype(x_in.dtype))
+    z, xbc, dt_pre = _split_proj(proj, cfg)
+    new_conv = jnp.concatenate([state["conv"][:, 1:],
+                                xbc.astype(jnp.float32)], axis=1)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"], tail=state["conv"])
+    q, k, v, log_f, xh = _ssd_qkv(xbc, dt_pre, p, cfg)
+    y, new_ssd = decode_step_linear_attention(
+        q[:, 0], k[:, 0], v[:, 0], log_f[:, 0],
+        jnp.zeros_like(log_f[:, 0]), state["ssd"], normalize=False)
+    y = y[:, None] + xh * p["D"].astype(y.dtype)[None, None, :, None]
+    b = x_in.shape[0]
+    y = y.reshape(b, 1, cfg.d_inner)
+    y = rms_norm(y * jax.nn.silu(z), p["ln_gate"], cfg.norm_eps)
+    return x_in + jnp.einsum("bse,ed->bsd", y,
+                             p["out_proj"].astype(x_in.dtype)), \
+        {"ssd": new_ssd, "conv": new_conv}

@@ -1,0 +1,283 @@
+"""Transformer decoder blocks + the weight-stacked scan machinery.
+
+One :class:`BlockConfig` describes a block (attention flavor + MLP flavor);
+``init_stacked``/``apply_stack`` stack L of them on a leading "layers" axis
+and run them under ``lax.scan`` (features.scan_layers) with the remat policy
+from :class:`repro.core.features.FeatureSet` — this is what keeps the
+88-layer mistral-large HLO compact enough to dry-run.
+
+The same block machinery serves dense archs, MoE archs (mlp="moe"), the
+VLM backbone (mrope in AttnConfig) and the enc-dec decoder (cross-attention
+block in encdec.py composes these pieces).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.features import FeatureSet
+from repro.models import attention as attn_mod
+from repro.models.attention import AttnConfig, KVCache
+from repro.models.layers import (DEFAULT_RULES, Params, ShardingRules, Specs,
+                                 constrain, dense_init, layer_norm,
+                                 layernorm_init, rms_norm, rmsnorm_init,
+                                 swiglu, truncated_normal_init)
+from repro.models.moe import MoEConfig, init_moe, moe_mlp, moe_specs
+
+__all__ = ["BlockConfig", "init_block", "block_specs", "apply_block",
+           "init_stacked", "stacked_specs", "apply_stack",
+           "apply_stack_decode", "remat_policy_fn"]
+
+
+class BlockConfig(NamedTuple):
+    attn: AttnConfig
+    d_ff: int
+    norm: str = "rmsnorm"        # rmsnorm | layernorm
+    mlp: str = "swiglu"          # swiglu | moe
+    moe: Optional[MoEConfig] = None
+    norm_eps: float = 1e-6
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: BlockConfig, dtype=jnp.float32) -> Params:
+    ka, km = jax.random.split(key)
+    d = cfg.attn.d_model
+    norm_init = rmsnorm_init if cfg.norm == "rmsnorm" else layernorm_init
+    p: Params = {
+        "ln1": norm_init(d),
+        "attn": attn_mod.init_attn(ka, cfg.attn, dtype),
+        "ln2": norm_init(d),
+    }
+    if cfg.mlp == "moe":
+        assert cfg.moe is not None
+        p["moe"] = init_moe(km, cfg.moe, dtype)
+    else:
+        k1, k2, k3 = jax.random.split(km, 3)
+        import numpy as np
+        std = 1.0 / np.sqrt(d)
+        p["mlp"] = {
+            "w_gate": truncated_normal_init(k1, (d, cfg.d_ff), dtype, std),
+            "w_up": truncated_normal_init(k2, (d, cfg.d_ff), dtype, std),
+            "w_down": truncated_normal_init(k3, (cfg.d_ff, d), dtype,
+                                            1.0 / np.sqrt(cfg.d_ff)),
+        }
+    return p
+
+
+def block_specs(cfg: BlockConfig) -> Specs:
+    norm_spec = ({"scale": ("act_embed",)} if cfg.norm == "rmsnorm"
+                 else {"scale": ("act_embed",), "bias": ("act_embed",)})
+    s: Specs = {
+        "ln1": dict(norm_spec),
+        "attn": attn_mod.attn_specs(cfg.attn),
+        "ln2": dict(norm_spec),
+    }
+    if cfg.mlp == "moe":
+        s["moe"] = moe_specs(cfg.moe)
+    else:
+        s["mlp"] = {"w_gate": ("embed", "ff"), "w_up": ("embed", "ff"),
+                    "w_down": ("ff", "embed")}
+    return s
+
+
+def _norm(x, p, cfg: BlockConfig):
+    return (rms_norm(x, p, cfg.norm_eps) if cfg.norm == "rmsnorm"
+            else layer_norm(x, p, cfg.norm_eps))
+
+
+def apply_block(p: Params, x: jnp.ndarray, cfg: BlockConfig, *,
+                rules: ShardingRules = DEFAULT_RULES, mesh=None,
+                positions3=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pre-norm block, train/prefill path.  Returns (y, aux_loss)."""
+    x = constrain(x, ("batch", "act_seq", "act_embed"), rules, mesh)
+    h = x + attn_mod.attention(p["attn"], _norm(x, p["ln1"], cfg), cfg.attn,
+                               positions3=positions3)
+    h = constrain(h, ("batch", "act_seq", "act_embed"), rules, mesh)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.mlp == "moe":
+        cst = (lambda a, axes: constrain(a, axes, rules, mesh, soft=True))
+        m, aux = moe_mlp(p["moe"], _norm(h, p["ln2"], cfg), cfg.moe,
+                         constrain_fn=cst)
+    else:
+        mp = p["mlp"]
+        m = swiglu(_norm(h, p["ln2"], cfg), mp["w_gate"].astype(x.dtype),
+                   mp["w_up"].astype(x.dtype), mp["w_down"].astype(x.dtype))
+    y = h + m
+    y = constrain(y, ("batch", "act_seq", "act_embed"), rules, mesh)
+    return y, aux
+
+
+def apply_block_decode(p: Params, x: jnp.ndarray, cfg: BlockConfig,
+                       cache: KVCache, *, rules=DEFAULT_RULES, mesh=None,
+                       positions3=None) -> Tuple[jnp.ndarray, KVCache]:
+    a, new_cache = attn_mod.decode_attention(
+        p["attn"], _norm(x, p["ln1"], cfg), cfg.attn, cache,
+        positions3=positions3)
+    h = x + a
+    if cfg.mlp == "moe":
+        cst = (lambda a, axes: constrain(a, axes, rules, mesh, soft=True))
+        m, _ = moe_mlp(p["moe"], _norm(h, p["ln2"], cfg), cfg.moe,
+                       constrain_fn=cst)
+    else:
+        mp = p["mlp"]
+        m = swiglu(_norm(h, p["ln2"], cfg), mp["w_gate"].astype(x.dtype),
+                   mp["w_up"].astype(x.dtype), mp["w_down"].astype(x.dtype))
+    return h + m, new_cache
+
+
+def apply_block_prefill(p: Params, x: jnp.ndarray, cfg: BlockConfig,
+                        cache: KVCache, *, rules=DEFAULT_RULES, mesh=None,
+                        positions3=None) -> Tuple[jnp.ndarray, KVCache]:
+    a, new_cache = attn_mod.prefill_into_cache(
+        p["attn"], _norm(x, p["ln1"], cfg), cfg.attn, cache,
+        positions3=positions3)
+    h = x + a
+    if cfg.mlp == "moe":
+        cst = (lambda a, axes: constrain(a, axes, rules, mesh, soft=True))
+        m, _ = moe_mlp(p["moe"], _norm(h, p["ln2"], cfg), cfg.moe,
+                       constrain_fn=cst)
+    else:
+        mp = p["mlp"]
+        m = swiglu(_norm(h, p["ln2"], cfg), mp["w_gate"].astype(x.dtype),
+                   mp["w_up"].astype(x.dtype), mp["w_down"].astype(x.dtype))
+    return h + m, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stacking
+# ---------------------------------------------------------------------------
+
+def init_stacked(key, n_layers: int, init_one: Callable[[Any], Params]
+                 ) -> Params:
+    """vmap the per-layer init over layer keys -> leading 'layers' axis."""
+    keys = jax.random.split(key, n_layers)
+    return jax.vmap(init_one)(keys)
+
+
+def stacked_specs(one: Specs) -> Specs:
+    """Prepend the 'layers' logical axis to every leaf spec."""
+    return jax.tree.map(lambda ax: ("layers",) + tuple(ax), one,
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def remat_policy_fn(features: FeatureSet):
+    cp = jax.checkpoint_policies
+    return {
+        "none": None,
+        "dots": cp.checkpoint_dots,
+        "dots_no_batch": cp.checkpoint_dots_with_no_batch_dims,
+        "full": cp.nothing_saveable,
+    }[features.remat_policy]
+
+
+def apply_stack(stacked: Params, x: jnp.ndarray, cfg: BlockConfig,
+                features: FeatureSet, *, rules=DEFAULT_RULES, mesh=None,
+                positions3=None,
+                block_fn=apply_block) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Run L stacked blocks; returns (y, summed aux loss)."""
+
+    def one(layer_p, h):
+        return block_fn(layer_p, h, cfg, rules=rules, mesh=mesh,
+                        positions3=positions3)
+
+    policy = remat_policy_fn(features)
+    if features.remat_policy != "none":
+        one = jax.checkpoint(one, policy=policy)
+
+    if features.scan_layers:
+        def body(carry, layer_p):
+            h, aux = carry
+            y, a = one(layer_p, h)
+            return (y, aux + a), None
+        (y, aux), _ = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), stacked,
+            unroll=features.scan_unroll)
+        return y, aux
+    # unrolled python loop (debug / tiny configs)
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    aux = jnp.zeros((), jnp.float32)
+    h = x
+    for i in range(n):
+        layer_p = jax.tree.map(lambda a: a[i], stacked)
+        h, a = one(layer_p, h)
+        aux = aux + a
+    return h, aux
+
+
+def apply_stack_decode(stacked: Params, x: jnp.ndarray, cfg: BlockConfig,
+                       caches: KVCache, features: FeatureSet, *,
+                       rules=DEFAULT_RULES, mesh=None, positions3=None,
+                       block_fn=apply_block_decode
+                       ) -> Tuple[jnp.ndarray, KVCache]:
+    """Decode through stacked blocks; caches carry a leading layers axis.
+
+    The scan path threads the WHOLE stacked cache through the carry and
+    writes one token per layer with an in-place dynamic-update-slice (while
+    -loop aliasing).  Scanning caches as xs and re-stacking them as ys — the
+    obvious form — rewrites each layer's full [B,S,KVH,Dh] slice every
+    decoded token (§Perf hillclimb 3: 53 GB/step on mistral-large).
+    """
+    if features.scan_layers and features.decode_inplace_cache \
+            and block_fn is apply_block_decode:
+        length = (caches.length[0] if caches.length.ndim
+                  else caches.length)
+        n = jax.tree.leaves(stacked)[0].shape[0]
+
+        def body(carry, scanned):
+            h, kst, vst = carry
+            i, layer_p = scanned
+            k_l = jax.lax.dynamic_index_in_dim(kst, i, 0, keepdims=False)
+            v_l = jax.lax.dynamic_index_in_dim(vst, i, 0, keepdims=False)
+            a, k_t, v_t = attn_mod.decode_attention_token(
+                layer_p["attn"], _norm(h, layer_p["ln1"], cfg), cfg.attn,
+                k_l, v_l, length, positions3=positions3)
+            h2 = h + a
+            if cfg.mlp == "moe":
+                cst = (lambda a_, axes: constrain(a_, axes, rules, mesh,
+                                                  soft=True))
+                m, _ = moe_mlp(layer_p["moe"], _norm(h2, layer_p["ln2"], cfg),
+                               cfg.moe, constrain_fn=cst)
+            else:
+                mp = layer_p["mlp"]
+                hn = _norm(h2, layer_p["ln2"], cfg)
+                m = swiglu(hn, mp["w_gate"].astype(h2.dtype),
+                           mp["w_up"].astype(h2.dtype),
+                           mp["w_down"].astype(h2.dtype))
+            y = h2 + m
+            kst = jax.lax.dynamic_update_slice(
+                kst, k_t.astype(kst.dtype)[None], (i, 0, length, 0, 0))
+            vst = jax.lax.dynamic_update_slice(
+                vst, v_t.astype(vst.dtype)[None], (i, 0, length, 0, 0))
+            return (y, kst, vst), None
+
+        (y, kst, vst), _ = jax.lax.scan(
+            body, (x, caches.k, caches.v), (jnp.arange(n), stacked))
+        return y, KVCache(k=kst, v=vst, length=caches.length + 1)
+
+    def body(h, scanned):
+        layer_p, layer_cache = scanned
+        y, new_cache = block_fn(layer_p, h, cfg, layer_cache,
+                                rules=rules, mesh=mesh, positions3=positions3)
+        return y, new_cache
+
+    if features.scan_layers:
+        y, new_caches = jax.lax.scan(body, x, (stacked, caches))
+        return y, new_caches
+    n = jax.tree.leaves(stacked)[0].shape[0]
+    h = x
+    outs = []
+    for i in range(n):
+        layer_p = jax.tree.map(lambda a: a[i], stacked)
+        layer_cache = jax.tree.map(lambda a: a[i], caches)
+        h, nc = block_fn(layer_p, h, cfg, layer_cache, rules=rules,
+                         mesh=mesh, positions3=positions3)
+        outs.append(nc)
+    new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    return h, new_caches

@@ -1,0 +1,3 @@
+from repro.optim.adamw import (AdamWConfig, OptState, apply_updates,  # noqa
+                               global_norm, init_opt_state)
+from repro.optim.schedule import ScheduleConfig, lr_at  # noqa: F401

@@ -1,0 +1,93 @@
+"""AdamW with global-norm clipping and optional int8 error-feedback grad
+compression (the distributed-optimization trick; see compress.py).
+
+Params live in f32 (models cast to bf16 at the use site), so no separate
+master copy is needed; optimizer state = (m, v) in f32, sharded like the
+params (same logical axes -> same PartitionSpecs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compress import (CompressState, compress_decompress,
+                                  init_compress_state)
+
+__all__ = ["AdamWConfig", "OptState", "init_opt_state", "apply_updates",
+           "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    grad_compression: str = "none"    # none | int8_ef
+    moment_dtype: str = "float32"     # float32 | bfloat16 (HBM knob for the
+                                      # 123B/235B cells: halves m+v footprint)
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    step: jnp.ndarray
+    ef: Optional[Any] = None          # error-feedback residuals (int8_ef)
+
+
+def init_opt_state(params: Any, cfg: AdamWConfig) -> OptState:
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, mdt), params)
+    ef = (init_compress_state(params) if cfg.grad_compression == "int8_ef"
+          else None)
+    return OptState(m=zeros(), v=zeros(), step=jnp.zeros((), jnp.int32),
+                    ef=ef)
+
+
+def global_norm(tree: Any) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params: Any, grads: Any, opt: OptState, lr: jnp.ndarray,
+                  cfg: AdamWConfig) -> Tuple[Any, OptState, Dict[str, Any]]:
+    """One AdamW step.  Returns (params', opt', metrics)."""
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    ef = opt.ef
+    if cfg.grad_compression == "int8_ef":
+        grads, ef = compress_decompress(grads, ef)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g * scale, grads)
+
+    step = opt.step + 1
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    mdt = jnp.dtype(cfg.moment_dtype)
+    new_m = jax.tree.map(
+        lambda m, g: (cfg.b1 * m.astype(jnp.float32)
+                      + (1 - cfg.b1) * g).astype(mdt), opt.m, grads)
+    new_v = jax.tree.map(
+        lambda v, g: (cfg.b2 * v.astype(jnp.float32)
+                      + (1 - cfg.b2) * g * g).astype(mdt), opt.v, grads)
+
+    def upd(p, m, v):
+        mhat = m.astype(jnp.float32) / b1c
+        vhat = v.astype(jnp.float32) / b2c
+        u = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:   # no decay on norms/bias
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, OptState(new_m, new_v, step, ef), metrics

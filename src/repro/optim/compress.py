@@ -1,0 +1,60 @@
+"""int8 error-feedback gradient compression (distributed-optimization trick).
+
+Before the data-parallel reduce, each gradient tensor is quantized to int8
+with a per-tensor scale; the quantization residual is kept locally and added
+back into the next step's gradient (error feedback, Karimireddy et al. 2019)
+so the scheme is unbiased over time.
+
+On a real pod the int8 tensors are what crosses the wire (4x less DP reduce
+traffic — the roofline ICI term shrinks accordingly; recorded as a feature
+experiment in EXPERIMENTS.md).  Under XLA SPMD autodiff the reduce itself is
+compiler-inserted, so this module implements the *numerics* (quantize ->
+dequantize with EF residual); the wire format is modeled, not re-plumbed —
+see DESIGN.md §9.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_compress_state", "compress_decompress", "quantize_int8",
+           "dequantize_int8"]
+
+CompressState = Any  # pytree of f32 residuals, like params
+
+
+def init_compress_state(params: Any) -> CompressState:
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-tensor int8 quantization: returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_decompress(grads: Any, ef: CompressState
+                        ) -> Tuple[Any, CompressState]:
+    """Apply EF-int8 to every gradient leaf.  Returns (grads', ef')."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, scale = quantize_int8(corrected)
+        deq = dequantize_int8(q, scale)
+        return deq, corrected - deq
+
+    flat = jax.tree.map(one, grads, ef)
+    new_grads = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    new_ef = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, new_ef

@@ -1,0 +1,34 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["ScheduleConfig", "lr_at"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_ratio: float = 0.1
+    kind: str = "cosine"          # cosine | linear | constant
+
+
+def lr_at(step: jnp.ndarray, cfg: ScheduleConfig) -> jnp.ndarray:
+    s = step.astype(jnp.float32)
+    warm = cfg.peak_lr * jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((s - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    if cfg.kind == "cosine":
+        decay = cfg.min_ratio + (1 - cfg.min_ratio) * 0.5 * \
+            (1 + jnp.cos(jnp.pi * frac))
+    elif cfg.kind == "linear":
+        decay = cfg.min_ratio + (1 - cfg.min_ratio) * (1 - frac)
+    else:
+        decay = jnp.ones(())
+    return jnp.where(s < cfg.warmup_steps, warm, cfg.peak_lr * decay)

@@ -1,0 +1,2 @@
+from repro.serve.engine import (BatchScheduler, Engine, Request,  # noqa
+                                ServeConfig)

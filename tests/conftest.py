@@ -1,0 +1,50 @@
+"""Shared fixtures.
+
+NOTE: no XLA_FLAGS / device-count forcing here on purpose — smoke tests and
+benches must see the 1 real CPU device; only launch/dryrun.py (a separate
+process) forces 512 placeholder devices.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.features import default_features
+from repro.models.lm import LM, LMConfig
+
+
+@pytest.fixture(scope="session")
+def tiny_dense_cfg():
+    return LMConfig(name="tiny-dense", family="dense", vocab=128, d_model=32,
+                    n_layers=2, num_heads=4, num_kv_heads=2, d_ff=64)
+
+
+@pytest.fixture(scope="session")
+def tiny_lm(tiny_dense_cfg):
+    return LM(tiny_dense_cfg, default_features().with_(remat_policy="none"))
+
+
+@pytest.fixture(scope="session")
+def tiny_params(tiny_lm):
+    return tiny_lm.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture()
+def rng():
+    return jax.random.PRNGKey(42)
+
+
+def tiny_batch(cfg, batch=2, seq=16, key=0):
+    k = jax.random.PRNGKey(key)
+    kt, kl = jax.random.split(k)
+    b = {
+        "tokens": jax.random.randint(kt, (batch, seq), 0, cfg.vocab),
+        "labels": jax.random.randint(kl, (batch, seq), 0, cfg.vocab),
+    }
+    if cfg.family == "encdec":
+        b["src_embeds"] = jnp.ones(
+            (batch, max(seq // cfg.src_ratio, 1), cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm" and cfg.n_patches:
+        b["patch_embeds"] = jnp.ones(
+            (batch, cfg.n_patches, cfg.d_model), jnp.bfloat16)
+    return b

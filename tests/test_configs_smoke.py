@@ -1,0 +1,129 @@
+"""Per-architecture smoke tests (assignment: REDUCED config, one forward /
+train step on CPU, assert output shapes + no NaNs).
+
+The FULL configs are exercised only by launch/dryrun.py (no allocation).
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from conftest import tiny_batch
+from repro.configs import ALL_ARCH_IDS, SHAPES, get_arch, input_specs
+from repro.core.features import default_features
+from repro.models.lm import LM
+
+FEATS = default_features().with_(remat_policy="none")
+
+
+@pytest.fixture(scope="module", params=ALL_ARCH_IDS)
+def arch(request):
+    return get_arch(request.param)
+
+
+@pytest.fixture(scope="module")
+def smoke_lm(arch):
+    lm = LM(arch.smoke, FEATS)
+    return lm, lm.init(jax.random.PRNGKey(0))
+
+
+def test_full_config_matches_assignment(arch):
+    """The registered FULL config carries the exact assigned dimensions."""
+    expected = {
+        "xlstm-350m": (24, 1024, 4, 4, 50304),
+        "seamless-m4t-medium": (12, 1024, 16, 16, 256206),
+        "qwen2-moe-a2.7b": (24, 2048, 16, 16, 151936),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 151936),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 151936),
+        "qwen2-0.5b": (24, 896, 14, 2, 151936),
+        "stablelm-3b": (32, 2560, 32, 32, 50304),
+        "mistral-large-123b": (88, 12288, 96, 8, 32768),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 152064),
+        "zamba2-1.2b": (38, 2048, 32, 32, 32000),
+    }[arch.arch_id]
+    c = arch.config
+    got = (c.n_layers, c.d_model, c.num_heads, c.num_kv_heads, c.vocab)
+    assert got == expected
+
+
+def test_moe_configs():
+    q2 = get_arch("qwen2-moe-a2.7b").config
+    assert (q2.moe_experts, q2.moe_top_k, q2.moe_shared_experts) == (60, 4, 4)
+    assert q2.d_ff == 1408
+    q3 = get_arch("qwen3-moe-235b-a22b").config
+    assert (q3.moe_experts, q3.moe_top_k) == (128, 8)
+    assert q3.d_ff == 1536
+
+
+def test_smoke_forward_shapes_no_nans(arch, smoke_lm):
+    lm, p = smoke_lm
+    cfg = arch.smoke
+    batch = tiny_batch(cfg, batch=2, seq=16)
+    logits = lm.forward(p, batch)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert not jnp.isnan(logits.astype(jnp.float32)).any()
+
+
+def test_smoke_train_step(arch, smoke_lm):
+    """One real optimizer step: loss finite, params change, no NaNs."""
+    from repro.optim import AdamWConfig, ScheduleConfig
+    from repro.train.step import init_train_state, make_train_step
+    lm, _ = smoke_lm
+    cfg = arch.smoke
+    step_fn = make_train_step(lm, AdamWConfig(), ScheduleConfig(
+        peak_lr=1e-3, warmup_steps=0, total_steps=10))
+    state = init_train_state(lm, jax.random.PRNGKey(1), AdamWConfig())
+    batch = tiny_batch(cfg, batch=2, seq=16)
+    new_state, metrics = step_fn(state, batch)
+    assert jnp.isfinite(metrics["loss"])
+    leaves_old = jax.tree.leaves(state.params)
+    leaves_new = jax.tree.leaves(new_state.params)
+    changed = any(
+        not jnp.array_equal(a, b) for a, b in zip(leaves_old, leaves_new))
+    assert changed
+    assert not any(jnp.isnan(x.astype(jnp.float32)).any()
+                   for x in leaves_new)
+
+
+def test_smoke_prefill_decode(arch, smoke_lm):
+    lm, p = smoke_lm
+    cfg = arch.smoke
+    batch = tiny_batch(cfg, batch=2, seq=16)
+    state = lm.init_decode_state(2, 32)
+    logits, state = lm.prefill(p, batch, state)
+    assert logits.shape == (2, cfg.vocab)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, _ = lm.decode_step(p, tok, state)
+    assert logits2.shape == (2, cfg.vocab)
+    assert not jnp.isnan(logits2.astype(jnp.float32)).any()
+
+
+def test_shape_catalogue():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].kind == "decode"
+
+
+def test_long500k_skips_follow_design(arch):
+    """long_500k runs only for the sub-quadratic (SSM/hybrid) archs."""
+    sub_q = arch.config.sub_quadratic
+    skipped = arch.skipped("long_500k") is not None
+    if arch.arch_id in ("xlstm-350m", "zamba2-1.2b"):
+        assert sub_q and not skipped
+    else:
+        assert skipped or not sub_q
+
+
+def test_input_specs_cover_frontend_stubs():
+    enc = get_arch("seamless-m4t-medium").config
+    specs = input_specs(enc, SHAPES["prefill_32k"])
+    assert "src_embeds" in specs      # audio frontend stub
+    vlm = get_arch("qwen2-vl-7b").config
+    specs = input_specs(vlm, SHAPES["train_4k"])
+    assert "patch_embeds" in specs    # vision frontend stub
+    dense = get_arch("qwen2-0.5b").config
+    specs = input_specs(dense, SHAPES["decode_32k"])
+    assert specs["tokens"].shape == (128, 1)   # decode = 1 new token

@@ -1,0 +1,159 @@
+"""Fault tolerance: checkpoint store, straggler detection, heartbeats,
+elastic re-mesh planning (the pin skip-mask consumer)."""
+
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import (latest_step, list_steps,
+                                    restore_checkpoint, save_checkpoint,
+                                    wait_pending)
+from repro.core import topology as topo_mod
+from repro.ft.elastic import build_mesh_from_plan, plan_remesh
+from repro.ft.heartbeat import HeartbeatMonitor
+from repro.ft.straggler import StragglerDetector
+
+
+# ---------------------------------------------------------------------------
+# checkpoint store
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4)},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    base = str(tmp_path)
+    t = _tree()
+    save_checkpoint(base, 7, t)
+    restored, meta = restore_checkpoint(base, target=t)
+    np.testing.assert_array_equal(restored["params"]["w"], t["params"]["w"])
+    assert latest_step(base) == 7
+
+
+def test_checkpoint_retention(tmp_path):
+    base = str(tmp_path)
+    for s in range(6):
+        save_checkpoint(base, s, _tree(), keep=3)
+    assert list_steps(base) == [3, 4, 5]
+
+
+def test_checkpoint_async_and_atomic(tmp_path):
+    base = str(tmp_path)
+    save_checkpoint(base, 1, _tree(), async_save=True)
+    wait_pending()
+    assert latest_step(base) == 1
+    # atomicity: no tmp/partial dirs left behind
+    leftovers = [d for d in os.listdir(base) if "tmp" in d or "partial" in d]
+    assert not leftovers
+
+
+def test_checkpoint_restore_latest_of_many(tmp_path):
+    base = str(tmp_path)
+    for s in (2, 5, 9):
+        t = _tree()
+        t["step"] = jnp.asarray(s, jnp.int32)
+        save_checkpoint(base, s, t)
+    restored, _ = restore_checkpoint(base, target=_tree())
+    assert int(restored["step"]) == 9
+    restored5, _ = restore_checkpoint(base, step=5, target=_tree())
+    assert int(restored5["step"]) == 5
+
+
+def test_checkpoint_dtype_and_shape_preserved(tmp_path):
+    t = {"a": jnp.ones((4,), jnp.bfloat16), "b": jnp.zeros((2, 2), jnp.int8)}
+    save_checkpoint(str(tmp_path), 0, t)
+    r, _ = restore_checkpoint(str(tmp_path), target=t)
+    assert r["a"].dtype == jnp.bfloat16 and r["b"].dtype == jnp.int8
+
+
+# ---------------------------------------------------------------------------
+# straggler detection
+# ---------------------------------------------------------------------------
+
+def test_straggler_flags_slow_step():
+    det = StragglerDetector(alpha=0.3, threshold=3.0, warmup=3)
+    for _ in range(10):
+        v = det.record(1.0)
+        assert not v.is_straggler
+    v = det.record(10.0)          # 10x the EMA
+    assert v.is_straggler
+    assert v.deviation > 3.0
+
+
+def test_straggler_warmup_never_flags():
+    det = StragglerDetector(warmup=5)
+    for dt in (1.0, 50.0, 1.0, 80.0, 1.0):
+        assert not det.record(dt).is_straggler
+
+
+def test_straggler_adapts_to_new_baseline():
+    det = StragglerDetector(alpha=0.5, threshold=4.0, warmup=2)
+    for _ in range(5):
+        det.record(1.0)
+    for _ in range(20):           # sustained slowdown becomes the new normal
+        det.record(2.0)
+    assert not det.record(2.2).is_straggler
+
+
+# ---------------------------------------------------------------------------
+# heartbeats
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_missing_hosts():
+    mon = HeartbeatMonitor(num_hosts=4, timeout_steps=2)
+    for h in range(4):
+        mon.report(h, step=10, wall_time=1.0)
+    assert mon.healthy() and not mon.missing_hosts()
+    for h in (0, 1, 2):
+        mon.report(h, step=13, wall_time=1.0)
+    assert mon.missing_hosts() == {3}
+    assert not mon.healthy()
+
+
+def test_heartbeat_slow_hosts():
+    mon = HeartbeatMonitor(num_hosts=3)
+    for h in range(3):
+        mon.report(h, step=5, wall_time=1.0 if h else 9.0)
+    assert 0 in mon.slow_hosts()
+
+
+# ---------------------------------------------------------------------------
+# elastic re-mesh (failures -> pin skip mask -> smaller mesh)
+# ---------------------------------------------------------------------------
+
+TOPO = topo_mod.probe(spec=topo_mod.PRODUCTION_SINGLE_POD)
+
+
+def test_plan_remesh_excludes_failed_host_chips():
+    failed = [0]   # device 0 -> its whole host is drained
+    plan = plan_remesh(TOPO, failed, axis_names=("data", "model"),
+                       axis_sizes=(16, 16), shrink_axis="data")
+    host = TOPO.chip_by_id(0).host
+    drained = {c.device_id for c in TOPO.chips if c.host == host}
+    assert drained.isdisjoint(plan.device_ids)
+    # data axis shrank, model axis intact
+    assert plan.axis_sizes[1] == 16
+    assert plan.axis_sizes[0] < 16
+    assert len(plan.device_ids) == plan.axis_sizes[0] * plan.axis_sizes[1]
+
+
+def test_plan_remesh_multiple_failures():
+    plan = plan_remesh(TOPO, [0, 100, 200], axis_names=("data", "model"),
+                       axis_sizes=(16, 16))
+    assert len(plan.device_ids) == plan.axis_sizes[0] * 16
+    assert len(set(plan.device_ids)) == len(plan.device_ids)
+
+
+def test_plan_remesh_unrecoverable():
+    # fail a device on every host -> nothing left
+    one_per_host = [TOPO.chips_in_pod(0)[i * 4].device_id
+                    for i in range(64)]
+    with pytest.raises(ValueError):
+        plan_remesh(TOPO, one_per_host, axis_names=("data", "model"),
+                    axis_sizes=(16, 16))

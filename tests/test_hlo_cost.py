@@ -1,0 +1,179 @@
+"""The while-aware HLO static analyzer — the 'MSR read' layer of perfctr.
+
+The critical properties:
+
+1. on scan-free programs our FLOPs/bytes match XLA's own cost_analysis;
+2. a scanned program and its unrolled twin get the SAME dynamic cost
+   (XLA's raw numbers differ by the trip count — the bug this module fixes);
+3. collectives inside scan bodies are counted trip_count times.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.hlo_cost import (analyze_text, parse_module, shape_bytes,
+                                 shape_elems)
+
+
+# ---------------------------------------------------------------------------
+# shape parsing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,elems,bytes_", [
+    ("f32[8,128]{1,0}", 1024, 4096),
+    ("bf16[2,3,4]", 24, 48),
+    ("pred[]", 1, 1),
+    ("s32[]", 1, 4),
+    ("(f32[8]{0}, bf16[4])", 12, 40),
+    ("u8[16]", 16, 16),
+])
+def test_shape_parsing(s, elems, bytes_):
+    assert shape_elems(s) == elems
+    assert shape_bytes(s) == bytes_
+
+
+def test_parse_module_tuple_shapes_with_index_comments():
+    # the /*index=N*/ comments inside tuple shapes broke a regex once
+    txt = """
+HloModule m
+
+ENTRY %main (a: f32[4]) -> f32[4] {
+  %a = f32[4]{0} parameter(0)
+  %t = (f32[4]{0}, /*index=1*/s32[], f32[2,2]{1,0}) tuple(%a, %a, %a)
+  ROOT %r = f32[4]{0} get-tuple-element(%t), index=0
+}
+"""
+    mod = parse_module(txt)
+    assert mod.entry == "main"
+    comp = mod.computations["main"]
+    ops = [i.op for i in comp.instructions]
+    assert ops == ["parameter", "tuple", "get-tuple-element"]
+    assert comp.instructions[1].shape.startswith("(f32[4]")
+
+
+# ---------------------------------------------------------------------------
+# agreement with XLA on scan-free programs
+# ---------------------------------------------------------------------------
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_matches_xla_on_unrolled_matmul_chain():
+    def f(x, w):
+        y = x
+        for i in range(w.shape[0]):
+            y = jnp.maximum(y @ w[i], 0.0)
+        return y.sum()
+
+    x = jnp.ones((16, 64), jnp.float32)
+    w = jnp.ones((6, 64, 64), jnp.float32)
+    c = _compile(f, x, w)
+    got = analyze_text(c.as_text())
+    ca = c.cost_analysis()
+    assert got.flops == pytest.approx(ca["flops"], rel=0.01)
+    assert got.bytes_accessed == pytest.approx(ca["bytes accessed"], rel=0.05)
+
+
+def test_matches_xla_dot_flops_batched():
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    a = jnp.ones((4, 8, 16), jnp.float32)
+    b = jnp.ones((4, 16, 32), jnp.float32)
+    c = _compile(f, a, b)
+    got = analyze_text(c.as_text())
+    # 2 * B*M*N*K
+    assert got.flops == pytest.approx(2 * 4 * 8 * 32 * 16, rel=0.05)
+    assert got.flops == pytest.approx(c.cost_analysis()["flops"], rel=0.05)
+
+
+# ---------------------------------------------------------------------------
+# the while fix itself
+# ---------------------------------------------------------------------------
+
+def _scan_fn(x, w):
+    def body(c, wi):
+        return jnp.maximum(c @ wi, 0.0), None
+    y, _ = jax.lax.scan(body, x, w)
+    return y.sum()
+
+
+def _unroll_fn(x, w):
+    y = x
+    for i in range(w.shape[0]):
+        y = jnp.maximum(y @ w[i], 0.0)
+    return y.sum()
+
+
+def test_scanned_equals_unrolled_dynamic_cost():
+    x = jnp.ones((16, 64), jnp.float32)
+    w = jnp.ones((24, 64, 64), jnp.float32)
+    ds = analyze_text(_compile(_scan_fn, x, w).as_text())
+    du = analyze_text(_compile(_unroll_fn, x, w).as_text())
+    assert ds.flops == pytest.approx(du.flops, rel=0.02)
+    assert ds.bytes_accessed == pytest.approx(du.bytes_accessed, rel=0.05)
+
+
+def test_xla_raw_undercounts_scan_ours_does_not():
+    """Documents the bug being fixed: XLA counts the while body once."""
+    x = jnp.ones((16, 64), jnp.float32)
+    w = jnp.ones((24, 64, 64), jnp.float32)
+    c = _compile(_scan_fn, x, w)
+    raw = c.cost_analysis()["flops"]
+    dyn = analyze_text(c.as_text())
+    assert dyn.flops > 10 * raw          # 24 iterations vs 1
+    assert any(t == 24.0 for t in dyn.while_trips.values())
+
+
+def test_trip_count_from_backend_config():
+    x = jnp.ones((4, 8), jnp.float32)
+    w = jnp.ones((7, 8, 8), jnp.float32)
+    dyn = analyze_text(_compile(_scan_fn, x, w).as_text())
+    assert 7.0 in dyn.while_trips.values()
+
+
+def test_nested_scan_multiplies():
+    def f(x, w):
+        def outer(c, wi):
+            def inner(ci, _):
+                return jnp.maximum(ci @ wi, 0.0), None
+            y, _ = jax.lax.scan(inner, c, None, length=5)
+            return y, None
+        y, _ = jax.lax.scan(outer, x, w)
+        return y.sum()
+
+    x = jnp.ones((16, 32), jnp.float32)
+    w = jnp.ones((3, 32, 32), jnp.float32)
+    dyn = analyze_text(_compile(f, x, w).as_text())
+    # 3 * 5 matmuls of 2*16*32*32
+    assert dyn.flops == pytest.approx(15 * 2 * 16 * 32 * 32, rel=0.10)
+
+
+def test_transcendentals_counted():
+    def f(x):
+        return jnp.exp(x).sum()
+
+    x = jnp.ones((128,), jnp.float32)
+    c = _compile(f, x)
+    dyn = analyze_text(c.as_text())
+    assert dyn.transcendentals == pytest.approx(128, rel=0.01)
+
+
+def test_op_counts_sees_whiles_and_dots():
+    x = jnp.ones((16, 64), jnp.float32)
+    w = jnp.ones((4, 64, 64), jnp.float32)
+    dyn = analyze_text(_compile(_scan_fn, x, w).as_text())
+    assert dyn.op_counts.get("while", 0) >= 1
+    assert dyn.op_counts.get("dot", 0) >= 1
+
+
+def test_slice_charged_at_window_not_operand():
+    def f(w):
+        return w[3].sum()           # slices one [64,64] out of [24,64,64]
+
+    w = jnp.ones((24, 64, 64), jnp.float32)
+    dyn = analyze_text(_compile(f, w).as_text())
+    # traffic must be ~2x the 16 KiB window + reduction, nowhere near 393 KiB
+    assert dyn.bytes_accessed < 100_000

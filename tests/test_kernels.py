@@ -1,0 +1,168 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (ref.py).
+
+All kernels run in interpret mode here (CPU container); on TPU the same
+pallas_call compiles (REPRO_KERNEL_COMPILE=1).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.jacobi7 import jacobi7_naive, jacobi7_wavefront
+from repro.kernels.ssd_scan import ssd_scan_flat
+from repro.kernels.stream_triad import stream_triad, triad_bytes
+
+TOL = {jnp.float32: dict(rtol=2e-4, atol=2e-5),
+       jnp.bfloat16: dict(rtol=3e-2, atol=3e-2)}
+
+
+def _rand(key, shape, dtype=jnp.float32):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# STREAM triad (paper case study 1)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n", [128, 4096, 128 * 513])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("pipelined", [True, False])
+def test_stream_triad_sweep(n, dtype, pipelined):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n))
+    b, c = _rand(k1, (n,), dtype), _rand(k2, (n,), dtype)
+    out = stream_triad(b, c, s=2.5, pipelined=pipelined)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32),
+        np.asarray(ref.stream_triad(None, b, c, 2.5), np.float32),
+        **TOL[dtype])
+
+
+def test_stream_triad_rejects_unaligned():
+    with pytest.raises(AssertionError):
+        stream_triad(jnp.ones((100,)), jnp.ones((100,)))
+
+
+def test_triad_bytes_model():
+    assert triad_bytes(1024) == 3 * 1024 * 4
+
+
+# ---------------------------------------------------------------------------
+# Jacobi 7-point stencil (paper case studies 2+3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(10, 18, 130), (18, 34, 130), (12, 20, 258)])
+def test_jacobi7_naive_sweep(shape):
+    x = _rand(jax.random.PRNGKey(1), shape)
+    np.testing.assert_allclose(jacobi7_naive(x), ref.jacobi7_sweep(x),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("sweeps", [1, 2, 3])
+def test_jacobi7_wavefront_temporal_blocking(sweeps):
+    """The wavefront kernel fuses `sweeps` Jacobi iterations in VMEM —
+    results must equal `sweeps` separate naive sweeps (oracle)."""
+    x = _rand(jax.random.PRNGKey(2), (16, 26, 130))
+    got = jacobi7_wavefront(x, sweeps=sweeps)
+    np.testing.assert_allclose(got, ref.jacobi7_valid(x, sweeps),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_jacobi7_wavefront_equals_composed_naive():
+    x = _rand(jax.random.PRNGKey(3), (14, 22, 130))
+    two_naive = jacobi7_naive(jacobi7_naive(x))
+    np.testing.assert_allclose(jacobi7_wavefront(x, sweeps=2), two_naive,
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (blockwise; LM hot spot)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,kvh,dh", [
+    (1, 128, 4, 4, 32),     # MHA
+    (2, 256, 4, 2, 32),     # GQA 2:1
+    (1, 256, 8, 1, 64),     # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(b, s, h, kvh, dh, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(s + h), 3)
+    q = _rand(ks[0], (b, s, h, dh), dtype)
+    k = _rand(ks[1], (b, s, kvh, dh), dtype)
+    v = _rand(ks[2], (b, s, kvh, dh), dtype)
+    got = ops.flash_attention(q, k, v, causal=True, bq=64, bk=64)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_flash_attention_noncausal():
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = _rand(ks[0], (1, 128, 2, 32))
+    k = _rand(ks[1], (1, 128, 2, 32))
+    v = _rand(ks[2], (1, 128, 2, 32))
+    got = ops.flash_attention(q, k, v, causal=False, bq=64, bk=64)
+    want = ref.flash_attention(q, k, v, causal=False)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 32), (64, 128), (128, 64)])
+def test_flash_attention_block_shape_invariance(bq, bk):
+    """Block shape is a perf knob, never a semantics knob."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = _rand(ks[0], (1, 256, 2, 32))
+    k = _rand(ks[1], (1, 256, 2, 32))
+    v = _rand(ks[2], (1, 256, 2, 32))
+    got = ops.flash_attention(q, k, v, causal=True, bq=bq, bk=bk)
+    want = ref.flash_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+# ---------------------------------------------------------------------------
+# SSD / gated linear-attention chunk scan (Mamba2 + mLSTM hot spot)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,dk,dv,chunk", [
+    (1, 128, 2, 16, 16, 32),
+    (2, 256, 2, 16, 32, 64),
+    (1, 64, 4, 32, 32, 64),    # chunk == seq
+])
+def test_ssd_scan_sweep(b, s, h, dk, dv, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(s + dk), 5)
+    q = _rand(ks[0], (b, s, h, dk))
+    k = _rand(ks[1], (b, s, h, dk))
+    v = _rand(ks[2], (b, s, h, dv))
+    log_f = -jax.nn.softplus(_rand(ks[3], (b, s, h)))
+    log_i = -jax.nn.softplus(_rand(ks[4], (b, s, h)))
+    y, (C, n) = ops.ssd_scan(q, k, v, log_f, log_i, chunk=chunk)
+    y_ref, (C_ref, n_ref) = ref.ssd_scan(q, k, v, log_f, log_i)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(C, C_ref, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(n, n_ref, rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_scan_chunk_invariance():
+    """Chunk size must not change semantics (associativity of the scan)."""
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    b, s, h, d = 1, 128, 2, 16
+    q = _rand(ks[0], (b, s, h, d)); k = _rand(ks[1], (b, s, h, d))
+    v = _rand(ks[2], (b, s, h, d))
+    lf = -jax.nn.softplus(_rand(ks[3], (b, s, h)))
+    li = -jax.nn.softplus(_rand(ks[4], (b, s, h)))
+    y32, _ = ops.ssd_scan(q, k, v, lf, li, chunk=32)
+    y64, _ = ops.ssd_scan(q, k, v, lf, li, chunk=64)
+    np.testing.assert_allclose(y32, y64, rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_scan_normalized_mode():
+    ks = jax.random.split(jax.random.PRNGKey(13), 5)
+    b, s, h, d = 1, 64, 2, 16
+    q = _rand(ks[0], (b, s, h, d)); k = _rand(ks[1], (b, s, h, d))
+    v = _rand(ks[2], (b, s, h, d))
+    lf = -jax.nn.softplus(_rand(ks[3], (b, s, h)))
+    li = -jax.nn.softplus(_rand(ks[4], (b, s, h)))
+    y, _ = ops.ssd_scan(q, k, v, lf, li, chunk=32, normalize=True)
+    y_ref, _ = ref.ssd_scan(q, k, v, lf, li, normalize=True)
+    np.testing.assert_allclose(y, y_ref, rtol=2e-3, atol=2e-3)

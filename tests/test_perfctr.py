@@ -1,0 +1,118 @@
+"""likwid-perfctr analogue: wrapper / marker / multiplex modes."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import marker as marker_mod
+from repro.core.groups import GROUPS, get_group
+from repro.core.perfctr import Measurement, PerfCtr, measure
+
+
+def _mm(a, b):
+    return a @ b
+
+
+A = jnp.ones((64, 64), jnp.float32)
+B = jnp.ones((64, 64), jnp.float32)
+
+
+def test_wrapper_mode_counts_flops():
+    m = measure(_mm, A, B, region="mm")
+    assert m.events["FLOPS_TOTAL"] == pytest.approx(2 * 64**3, rel=0.02)
+    assert m.region == "mm"
+    assert m.calls == 1
+
+
+def test_wrapper_mode_zero_overhead():
+    """The measured program is never executed — measure() works on
+    ShapeDtypeStructs, which cannot be executed at all."""
+    sds = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    m = measure(_mm, sds, sds, region="abstract")
+    assert m.events["FLOPS_TOTAL"] == pytest.approx(2 * 64**3, rel=0.02)
+    assert not m.wall_times          # nothing ran
+
+
+def test_marker_mode_accumulates_across_calls():
+    ctr = PerfCtr()
+    with ctr.marker("region-a"):
+        ctr.probe(_mm, A, B)
+        ctr.probe(_mm, A, B)
+    m = ctr.regions["region-a"]
+    assert m.calls == 2
+    assert m.events["FLOPS_TOTAL"] == pytest.approx(2 * 2 * 64**3, rel=0.02)
+
+
+def test_marker_regions_are_separate():
+    ctr = PerfCtr()
+    with ctr.marker("init"):
+        ctr.probe(_mm, A, B)
+    with ctr.marker("benchmark"):
+        ctr.probe(lambda a: jnp.exp(a).sum(), A)
+    assert set(ctr.regions) == {"init", "benchmark"}
+    assert ctr.regions["benchmark"].events["TRANSCENDENTALS"] >= 64 * 64
+
+
+def test_report_paper_listing_style():
+    ctr = PerfCtr(groups=("FLOPS_BF16",))
+    with ctr.marker("Init"):
+        ctr.probe(_mm, A, B)
+    out = ctr.report()
+    assert "Region: Init" in out
+    assert "CPU type:" in out and "CPU clock:" in out
+    assert "FLOPS_TOTAL" in out       # raw events visible (transparency)
+
+
+def test_multiplex_mode_returns_metrics_per_group():
+    ctr = PerfCtr()
+    step = jax.jit(_mm).lower(A, B).compile()
+    out = ctr.multiplex(lambda: step(A, B), groups=("FLOPS_BF16", "HBM"),
+                        steps_per_group=2, cycles=1)
+    assert set(out) == {"FLOPS_BF16", "HBM"}
+    for metrics in out.values():
+        assert metrics["wall_s"] > 0
+
+
+def test_global_marker_api():
+    marker_mod.reset()
+    with marker_mod.region("r1"):
+        marker_mod.probe(_mm, A, B)
+    rep = marker_mod.report()
+    assert "r1" in rep
+    marker_mod.reset()
+    assert "r1" not in marker_mod.report()
+
+
+# ---------------------------------------------------------------------------
+# groups: transparency (each group declares its raw events)
+# ---------------------------------------------------------------------------
+
+def test_all_groups_resolve_and_declare_events():
+    from repro.core.events import ALL_EVENTS
+    for name in GROUPS:
+        g = get_group(name)
+        assert g.events, name
+        for e in g.events:
+            assert e in ALL_EVENTS, (name, e)
+
+
+def test_group_derives_metrics():
+    m = measure(_mm, A, B)
+    g = get_group("FLOPS_BF16")
+    derived = g.derive(m.events, m.chip, 1e-3)
+    assert any("FLOP" in k or "flop" in k.lower() for k in derived)
+
+
+def test_unknown_group_raises():
+    with pytest.raises((KeyError, ValueError)):
+        get_group("NO_SUCH_GROUP")
+
+
+def test_measurement_accumulate_merges_walltimes():
+    m1 = measure(_mm, A, B, region="x")
+    m2 = measure(_mm, A, B, region="x")
+    m1.wall_times.append(0.5)
+    m2.wall_times.append(0.7)
+    m1.accumulate(m2)
+    assert m1.calls == 2
+    assert m1.wall_times == [0.5, 0.7]

@@ -1,0 +1,95 @@
+"""likwid-pin analogue: device-ordering strategies are pure permutations."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import pin as pin_mod
+from repro.core import topology as topo_mod
+
+SINGLE = topo_mod.probe(spec=topo_mod.PRODUCTION_SINGLE_POD)
+MULTI = topo_mod.probe(spec=topo_mod.PRODUCTION_MULTI_POD)
+
+
+# ---------------------------------------------------------------------------
+# pin strings (the paper's -c syntax)
+# ---------------------------------------------------------------------------
+
+def test_parse_pinlist():
+    assert pin_mod.parse_pinlist("0-3,8,12-13") == [0, 1, 2, 3, 8, 12, 13]
+    assert pin_mod.parse_pinlist("5") == [5]
+
+
+def test_parse_pinlist_rejects_duplicates_and_descending():
+    with pytest.raises(ValueError):
+        pin_mod.parse_pinlist("0-3,2")
+    with pytest.raises(ValueError):
+        pin_mod.parse_pinlist("5-3")
+    with pytest.raises(ValueError):
+        pin_mod.parse_pinlist("a-b")
+
+
+@given(st.lists(st.integers(0, 511), min_size=1, max_size=64, unique=True))
+@settings(max_examples=50, deadline=None)
+def test_pinlist_roundtrip(ids):
+    s = ",".join(str(i) for i in ids)
+    assert pin_mod.parse_pinlist(s) == ids
+
+
+# ---------------------------------------------------------------------------
+# strategies are permutations (the core property)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["compact", "scatter", "ring"])
+@pytest.mark.parametrize("topo", [SINGLE, MULTI], ids=["1pod", "2pod"])
+def test_strategy_is_permutation(name, topo):
+    result = pin_mod.get_strategy(name)(topo)
+    ids = list(result.device_ids)
+    assert sorted(ids) == sorted(c.device_id for c in topo.chips)
+
+
+@given(skip=st.lists(st.integers(0, 255), max_size=8, unique=True))
+@settings(max_examples=30, deadline=None)
+def test_skip_mask_property(skip):
+    """Skip-masked devices never appear; everything else appears once."""
+    result = pin_mod.Compact()(SINGLE, skip=skip)
+    ids = set(result.device_ids)
+    assert ids.isdisjoint(skip)
+    assert ids | set(skip) >= {c.device_id for c in SINGLE.chips} - set(skip)
+    assert len(result.device_ids) == 256 - len(set(skip))
+
+
+def test_scatter_round_robins_pods():
+    result = pin_mod.Scatter()(MULTI)
+    pods = [MULTI.chip_by_id(i).pod for i in result.device_ids[:8]]
+    assert pods == [0, 1, 0, 1, 0, 1, 0, 1]
+
+
+def test_compact_fills_pod_first():
+    result = pin_mod.Compact()(MULTI)
+    pods = [MULTI.chip_by_id(i).pod for i in result.device_ids]
+    assert all(p == 0 for p in pods[:256])
+    assert all(p == 1 for p in pods[256:])
+
+
+def test_ring_neighbors_are_one_hop():
+    """The boustrophedon ring order: consecutive chips are torus neighbors —
+    the property that makes ring collectives 1 hop/step."""
+    result = pin_mod.Ring()(SINGLE)
+    ids = result.device_ids
+    hops = [SINGLE.ici_hops(ids[i], ids[i + 1]) for i in range(len(ids) - 1)]
+    assert max(hops) == 1
+
+
+def test_explicit_strategy_and_validation():
+    r = pin_mod.get_strategy("0-7")(SINGLE)
+    assert list(r.device_ids) == list(range(8))
+    with pytest.raises(ValueError):
+        pin_mod.get_strategy("100000-100003")(SINGLE)
+    with pytest.raises(ValueError):
+        pin_mod.get_strategy("no-such-strategy!")
+
+
+def test_describe_mentions_strategy_and_skip():
+    r = pin_mod.Compact()(SINGLE, skip=(3, 5))
+    msg = r.describe()
+    assert "compact" in msg and "3" in msg

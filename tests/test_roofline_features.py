@@ -1,0 +1,101 @@
+"""Roofline model + likwid-features analogue."""
+
+import os
+
+import pytest
+
+from repro.core import hwinfo
+from repro.core.events import EventCounts
+from repro.core.features import (FeatureSet, default_features, from_env,
+                                 render_state, xla_flags_for)
+from repro.core.roofline import RooflineTerms, analyze, model_flops
+
+
+def _ev(flops=0.0, byts=0.0, ici=0.0):
+    return EventCounts(counts={"FLOPS_TOTAL": flops, "BYTES_ACCESSED": byts,
+                               "ICI_TOTAL_BYTES": ici})
+
+
+def test_three_terms_and_bottleneck():
+    chip = hwinfo.DEFAULT_CHIP
+    rt = analyze(_ev(flops=197e12, byts=819e9, ici=0.0), cell="c",
+                 chip=chip, num_devices=1)
+    assert rt.t_compute == pytest.approx(1.0)
+    assert rt.t_memory == pytest.approx(1.0)
+    assert rt.bound in ("compute", "memory")
+
+    rt2 = analyze(_ev(flops=1.0, byts=819e9 * 10), cell="c", chip=chip)
+    assert rt2.bound == "memory"
+    rt3 = analyze(_ev(flops=197e12 * 10, byts=1.0), cell="c", chip=chip)
+    assert rt3.bound == "compute"
+    rt4 = analyze(_ev(ici=50e9 * 100), cell="c", chip=chip, ici_links_used=1)
+    assert rt4.bound == "ici"
+
+
+def test_mfu_bound_and_overlap():
+    chip = hwinfo.DEFAULT_CHIP
+    # compute-dominated: mfu ceiling 1.0
+    rt = analyze(_ev(flops=197e12, byts=1.0), cell="c", chip=chip)
+    assert rt.mfu_bound == pytest.approx(1.0, rel=1e-6)
+    # memory-dominated at 2:1 -> ceiling 0.5
+    rt = analyze(_ev(flops=197e12, byts=2 * 819e9), cell="c", chip=chip)
+    assert rt.mfu_bound == pytest.approx(0.5, rel=1e-6)
+
+
+def test_model_flops_conventions():
+    assert model_flops(1000, 10, training=True) == 6e4
+    assert model_flops(1000, 10, training=False) == 2e4
+    assert model_flops(1000, 10, n_active_params=100) == 6e3
+
+
+def test_useful_flops_ratio():
+    rt = analyze(_ev(flops=2e12), cell="c", model_flops_total=1e12,
+                 num_devices=1)
+    assert rt.useful_flops_ratio == pytest.approx(0.5)
+
+
+def test_render_row():
+    rt = analyze(_ev(flops=1e12, byts=1e9), cell="arch/shape/mesh")
+    row = rt.row()
+    assert row["cell"] == "arch/shape/mesh"
+    assert "bound" in row and "mfu_bound" in row
+    assert "arch/shape/mesh" in rt.render()
+
+
+# ---------------------------------------------------------------------------
+# features
+# ---------------------------------------------------------------------------
+
+def test_feature_validation():
+    fs = default_features()
+    assert fs.with_(remat_policy="full").remat_policy == "full"
+    with pytest.raises(ValueError):
+        fs.with_(remat_policy="bogus")
+    with pytest.raises(ValueError):
+        fs.with_(matmul_precision="ultra")
+    with pytest.raises(ValueError):
+        fs.with_(scan_unroll=0)
+
+
+def test_feature_env_overrides(monkeypatch):
+    monkeypatch.setenv("REPRO_FEATURE_REMAT_POLICY", "full")
+    monkeypatch.setenv("REPRO_FEATURE_SCAN_LAYERS", "0")
+    monkeypatch.setenv("REPRO_FEATURE_SCAN_UNROLL", "4")
+    fs = from_env()
+    assert fs.remat_policy == "full"
+    assert fs.scan_layers is False
+    assert fs.scan_unroll == 4
+
+
+def test_render_state_bit_table():
+    out = render_state(default_features())
+    assert "remat_policy" in out
+    assert "ON" in out or "off" in out
+
+
+def test_xla_flags_follow_features():
+    on = xla_flags_for(default_features())
+    off = xla_flags_for(default_features().with_(async_collectives=False,
+                                                 collective_matmul=False))
+    assert any("async" in f for f in on)
+    assert len(off) < len(on)
