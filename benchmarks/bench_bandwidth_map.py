@@ -9,8 +9,8 @@ from repro.core import hwinfo
 from repro.core.bandwidth import measure_map, model_map, render_map
 
 
-def run(csv):
-    pts = measure_map(repeats=3)
+def run(csv, session=None, smoke=False):
+    pts = measure_map(repeats=1 if smoke else 3)
     print(render_map(pts, title="bandwidth map — this host (measured, CPU)"))
     print()
     chip = hwinfo.DEFAULT_CHIP

@@ -20,9 +20,9 @@ from repro.kernels import ref
 from repro.kernels.jacobi7 import traffic_model
 
 
-def run(csv):
-    shape = (64, 128, 256)
-    sweeps = 4
+def run(csv, session=None, smoke=False):
+    shape = (24, 48, 96) if smoke else (64, 128, 256)
+    sweeps = 2 if smoke else 4
     x = jax.ShapeDtypeStruct(shape, jnp.float32)
     out_shape = tuple(s - 2 * sweeps for s in shape)
     acc = jax.ShapeDtypeStruct((shape[0] - 2, shape[1] - 2, shape[2] - 2),
@@ -40,8 +40,8 @@ def run(csv):
             x = jnp.pad(ref.jacobi7_sweep(x), 1)
         return x
 
-    m_thr = measure(threaded, x, acc, region="threaded")
-    m_nt = measure(threaded_nt, x, region="threaded (NT)")
+    m_thr = measure(threaded, x, acc, region="threaded", session=session)
+    m_nt = measure(threaded_nt, x, region="threaded (NT)", session=session)
     model = traffic_model(shape, sweeps)
 
     rows = [
@@ -60,8 +60,13 @@ def run(csv):
 
     nt_ratio = rows[1][1] / base
     wf_ratio = rows[2][1] / base
-    # the claims being validated: NT saves ~1/3, wavefront ~4.5x
-    assert 0.55 <= nt_ratio <= 0.80, nt_ratio
-    assert wf_ratio <= 0.33, wf_ratio
+    # the claims being validated: NT saves ~1/3, wavefront ~4.5x.  The
+    # tight bounds hold for the paper-scale grid; smoke shrinks the grid
+    # and sweep count, so only the ordering is checked there.
+    if smoke:
+        assert wf_ratio < nt_ratio < 1.0, (wf_ratio, nt_ratio)
+    else:
+        assert 0.55 <= nt_ratio <= 0.80, nt_ratio
+        assert wf_ratio <= 0.33, wf_ratio
     csv.append(("jacobi_traffic_ratios", 0.0,
                 f"nt={nt_ratio:.2f};wavefront={wf_ratio:.2f}"))

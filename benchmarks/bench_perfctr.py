@@ -13,8 +13,9 @@ import jax.numpy as jnp
 from repro.core.perfctr import PerfCtr
 
 
-def run(csv):
-    n = 512
+def run(csv, session=None, smoke=False):
+    n = 128 if smoke else 512
+    reps = 3 if smoke else 20
     key = jax.random.PRNGKey(0)
     a = jax.random.normal(key, (n, n), jnp.float32)
 
@@ -24,7 +25,7 @@ def run(csv):
     def benchmark_region(x):
         return jnp.tanh(x @ x) @ x      # the paper's Benchmark: dense flops
 
-    ctr = PerfCtr(groups=("FLOPS_BF16",))
+    ctr = PerfCtr(groups=("FLOPS_BF16",), session=session)
     with ctr.marker("Init"):
         ctr.probe(init_region, a)
     with ctr.marker("Benchmark"):
@@ -37,7 +38,6 @@ def run(csv):
     f = jax.jit(benchmark_region).lower(a).compile()
     f(a).block_until_ready()
     t0 = time.perf_counter()
-    reps = 20
     for _ in range(reps):
         out = f(a)
     out.block_until_ready()

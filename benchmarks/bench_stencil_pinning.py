@@ -27,7 +27,8 @@ def _slab_bytes(shape, block_x, sweeps, dtype_bytes=4):
     return (block_x + 2 * sweeps) * y * z * dtype_bytes
 
 
-def run(csv):
+def run(csv, session=None, smoke=False):
+    reps = 1 if smoke else 3
     chip = hwinfo.DEFAULT_CHIP
     shape = (64, 128, 256)
     sweeps = 4
@@ -59,10 +60,10 @@ def run(csv):
             v, sweeps=2, block_x=bx))
         fn(small).block_until_ready()
         t0 = time.perf_counter()
-        for _ in range(3):
+        for _ in range(reps):
             out = fn(small)
         out.block_until_ready()
-        times[label] = (time.perf_counter() - t0) / 3
+        times[label] = (time.perf_counter() - t0) / reps
         print(f"{label:<18} {times[label]*1e3:10.2f} ms")
 
     csv.append(("stencil_block8_vs_block24", times["vmem-fitting"] * 1e6,

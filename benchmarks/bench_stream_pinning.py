@@ -50,8 +50,10 @@ def _flat_ring_cost(topo, order, n=256):
                           for i in range(n)]))
 
 
-def run(csv):
+def run(csv, session=None, smoke=False):
     topo = topo_mod.probe(spec=topo_mod.PRODUCTION_SINGLE_POD)
+    n_random = 5 if smoke else 20
+    n_samples = 10 if smoke else 100
 
     print("== STREAM triad placement quality (production 16x16 mesh) ==")
     print(f"{'placement':<22} {'2D mesh-axis rings':>19} {'flat 1D ring':>14}")
@@ -65,13 +67,14 @@ def run(csv):
 
     rng = np.random.default_rng(0)
     randoms_mesh, randoms_flat = [], []
-    for _ in range(20):                    # the unpinned distribution
+    for _ in range(n_random):              # the unpinned distribution
         order = rng.permutation(256)
         randoms_mesh.append(_mesh_hop_cost(topo, order))
         randoms_flat.append(_flat_ring_cost(topo, order))
     q1, med, q3 = np.percentile(randoms_mesh, [25, 50, 75])
     medf = float(np.median(randoms_flat))
-    print(f"{'unpinned (random x20)':<22} {med:>19.3f} {medf:>14.3f}   "
+    print(f"{'unpinned (random x' + str(n_random) + ')':<22} "
+          f"{med:>19.3f} {medf:>14.3f}   "
           f"[2D q1={q1:.3f} q3={q3:.3f} max={max(randoms_mesh):.3f}]")
 
     # the paper's conclusion, structurally: the right pinning is workload-
@@ -86,8 +89,9 @@ def run(csv):
                 f"compact2d={mesh_cost['compact']:.3f};"
                 f"ring1d={flat_cost['ring']:.3f};unpinned2d_median={med:.3f}"))
 
-    print("\n== STREAM triad wall-clock (this host: CPU, 100 samples) ==")
-    n = 1 << 20
+    print(f"\n== STREAM triad wall-clock (this host: CPU, "
+          f"{n_samples} samples) ==")
+    n = 1 << 16 if smoke else 1 << 20
     k1, k2 = jax.random.split(jax.random.PRNGKey(0))
     b = jax.random.normal(k1, (n,), jnp.float32)
     c = jax.random.normal(k2, (n,), jnp.float32)
@@ -95,7 +99,7 @@ def run(csv):
     ref_fn = jax.jit(lambda b, c: ref.stream_triad(None, b, c, 2.5))
     ref_fn(b, c).block_until_ready()
     samples = []
-    for _ in range(100):
+    for _ in range(n_samples):
         t0 = time.perf_counter()
         ref_fn(b, c).block_until_ready()
         samples.append(time.perf_counter() - t0)

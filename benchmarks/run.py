@@ -2,11 +2,20 @@
 
     PYTHONPATH=src python -m benchmarks.run            # all
     PYTHONPATH=src python -m benchmarks.run perfctr    # one
+    PYTHONPATH=src python -m benchmarks.run --smoke --json bench.json
 
 Prints each bench's human-readable output, then a ``name,us_per_call,
-derived`` CSV block at the end.
+derived`` CSV block at the end.  ``--smoke`` shrinks problem sizes and rep
+counts to CI scale (functional coverage, not steady-state numbers) and
+relaxes the statistical asserts; ``--json`` writes a machine-readable
+summary (per-bench status/wall + the CSV rows + compile-cache stats) for
+artifact upload.  All measurement-driven benches share one
+:class:`repro.core.session.ProfileSession`, so repeated runs hit the
+compile-artifact cache instead of re-lowering.
 """
 
+import argparse
+import json
 import sys
 import time
 import traceback
@@ -26,9 +35,29 @@ BENCHES = {
 
 
 def main(argv=None) -> int:
-    argv = list(sys.argv[1:] if argv is None else argv)
-    names = argv or list(BENCHES)
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("names", nargs="*",
+                    help=f"benches to run (default: all of {list(BENCHES)})")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: tiny sizes, few reps, relaxed asserts")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write a machine-readable summary here")
+    ap.add_argument("--cache-dir", default=None,
+                    help="compile-artifact cache root (default "
+                         "$REPRO_CACHE_DIR or ~/.cache/repro-perfctr)")
+    ap.add_argument("--no-cache", action="store_true")
+    args = ap.parse_args(argv)
+
+    from repro.core.session import ProfileSession
+    session = ProfileSession(cache_dir=args.cache_dir,
+                             enabled=not args.no_cache)
+
+    names = args.names or list(BENCHES)
+    unknown = [n for n in names if n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown bench(es) {unknown}; choose from {list(BENCHES)}")
     csv = []
+    report = []
     failures = 0
     for name in names:
         mod = BENCHES[name]
@@ -36,19 +65,39 @@ def main(argv=None) -> int:
         print(f"== bench: {name}   ({mod.__doc__.strip().splitlines()[0]})")
         print("=" * 72)
         t0 = time.perf_counter()
+        status = "ok"
         try:
-            mod.run(csv)
+            mod.run(csv, session=session, smoke=args.smoke)
         except Exception:
             failures += 1
+            status = "FAILED"
             traceback.print_exc()
-        print(f"[{name}] {time.perf_counter()-t0:.1f}s\n")
+        dt = time.perf_counter() - t0
+        report.append({"name": name, "status": status,
+                       "seconds": round(dt, 3)})
+        print(f"[{name}] {dt:.1f}s\n")
 
     print("name,us_per_call,derived")
     for name, us, derived in csv:
         print(f"{name},{us:.2f},{derived}")
-    print(f"\n[benchmarks] {len(names)} run, {failures} failed")
+    print(f"\n[benchmarks] {len(names)} run, {failures} failed "
+          f"({session.stats()})")
+
+    if args.json:
+        stats = session.cache.stats
+        with open(args.json, "w") as f:
+            json.dump({
+                "smoke": args.smoke,
+                "benches": report,
+                "csv": [{"name": n, "us_per_call": us, "derived": d}
+                        for n, us, d in csv],
+                "cache": {"hits": stats.hits, "misses": stats.misses,
+                          "stores": stats.stores,
+                          "lowerings": session.lowerings},
+            }, f, indent=1)
+        print(f"[benchmarks] wrote {args.json}")
     return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    raise SystemExit(main())
+    raise SystemExit(main(sys.argv[1:]))

@@ -5,6 +5,8 @@
 1. repro-topology  — probe + render the node/pod topology
 2. repro-pin       — choose a physical device order for the mesh
 3. repro-perfctr   — count hardware-truth events on a jitted function
+   (through a ProfileSession: the second run of this script serves every
+   probe from the compile-artifact cache instead of re-compiling)
 4. repro-features  — view/toggle the switchable compilation features
 """
 
@@ -14,6 +16,7 @@ import jax.numpy as jnp
 from repro.core import pin, topology
 from repro.core.features import default_features, render_state
 from repro.core.perfctr import PerfCtr
+from repro.core.session import ProfileSession
 
 
 def main():
@@ -27,14 +30,16 @@ def main():
         print(pin.get_strategy(name)(topo).describe())
     print(pin.get_strategy("0-7,12-15")(topo, skip=(13,)).describe())
 
-    # -- 3. perfctr (likwid-perfctr): marker mode -------------------------
+    # -- 3. perfctr (likwid-perfctr): marker mode, cache-backed -----------
+    session = ProfileSession()           # $REPRO_CACHE_DIR or ~/.cache
     a = jax.random.normal(jax.random.PRNGKey(0), (256, 256))
-    ctr = PerfCtr(groups=("FLOPS_BF16", "HBM"))
+    ctr = PerfCtr(groups=("FLOPS_BF16", "HBM"), session=session)
     with ctr.marker("Init"):
         ctr.probe(lambda x: x * 0 + 1.0, a)
     with ctr.marker("Benchmark"):
         ctr.probe(lambda x: jnp.tanh(x @ x), a)
     print(ctr.report())
+    print(f"[{session.stats()}]")
 
     # -- 4. features (likwid-features) ------------------------------------
     feats = default_features()

@@ -17,7 +17,8 @@ plus the §VI future-plan deliverables the paper sketches:
 """
 
 from repro.core import hwinfo, topology, pin, events, groups, perfctr, \
-    marker, features, roofline, bandwidth  # noqa: F401
+    marker, features, roofline, bandwidth, artifact_cache, session  # noqa: F401
 
 __all__ = ["hwinfo", "topology", "pin", "events", "groups", "perfctr",
-           "marker", "features", "roofline", "bandwidth"]
+           "marker", "features", "roofline", "bandwidth", "artifact_cache",
+           "session"]

@@ -33,8 +33,30 @@ __all__ = [
     "parse_shape_bytes",
     "parse_collectives",
     "extract_events",
+    "normalize_cost",
     "ALL_EVENTS",
 ]
+
+
+def normalize_cost(cost) -> Dict[str, float]:
+    """Normalize ``Compiled.cost_analysis()`` output to one flat dict.
+
+    JAX has returned either a dict or a list of per-computation dicts
+    (one per partitioned computation) depending on version; accept both,
+    plus ``None``.  Numeric values from multiple computations are summed.
+    """
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        merged: Dict[str, float] = {}
+        for part in cost:
+            for k, v in (part or {}).items():
+                if isinstance(v, (int, float)):
+                    merged[k] = merged.get(k, 0.0) + v
+                else:
+                    merged.setdefault(k, v)
+        return merged
+    return dict(cost)
 
 
 # ---------------------------------------------------------------------------
@@ -223,6 +245,19 @@ class EventCounts:
     def get(self, k: str, default: float = 0.0) -> float:
         return self.counts.get(k, default)
 
+    def to_dict(self) -> Dict:
+        """JSON-serializable form (artifact-cache on-disk entry)."""
+        return {"counts": dict(self.counts),
+                "collectives": [dataclasses.asdict(c)
+                                for c in self.collectives]}
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "EventCounts":
+        return cls(counts={str(k): float(v)
+                           for k, v in d.get("counts", {}).items()},
+                   collectives=[CollectiveOp(**c)
+                                for c in d.get("collectives", [])])
+
     def table(self, events: Optional[List[str]] = None) -> str:
         """Paper-style raw-event listing."""
         events = events or sorted(self.counts)
@@ -256,7 +291,7 @@ def extract_events(compiled=None, *, hlo_text: Optional[str] = None,
         if memstats is None:
             memstats = compiled.memory_analysis()
     hlo_text = hlo_text or ""
-    cost = cost or {}
+    cost = normalize_cost(cost)
 
     from repro.core.hlo_cost import analyze_text
     dyn = analyze_text(hlo_text)

@@ -33,7 +33,8 @@ from repro.core import hwinfo
 from repro.core.events import EventCounts, extract_events
 from repro.core.groups import Group, get_group
 
-__all__ = ["Measurement", "PerfCtr", "measure", "measure_compiled"]
+__all__ = ["Measurement", "PerfCtr", "measure", "measure_compiled",
+           "lower_and_compile"]
 
 
 @dataclasses.dataclass
@@ -86,17 +87,15 @@ def measure_compiled(compiled, *, region: str = "program",
                        num_devices=num_devices)
 
 
-def measure(fn: Callable, *args, region: str = "program",
-            chip: Optional[hwinfo.ChipSpec] = None,
-            num_devices: Optional[int] = None,
-            static_argnums: Tuple[int, ...] = (),
-            in_shardings: Any = None, out_shardings: Any = None,
-            mesh=None, **kwargs) -> Measurement:
-    """Wrapper mode: perfctr as a wrapper, no change to the measured code.
+def lower_and_compile(fn: Callable, *args,
+                      static_argnums: Tuple[int, ...] = (),
+                      in_shardings: Any = None, out_shardings: Any = None,
+                      mesh=None, **kwargs):
+    """Lower + compile ``fn`` against (possibly abstract) args.
 
-    ``args`` may be concrete arrays or ``ShapeDtypeStruct``s; either way the
-    program is only lowered+compiled, never run (zero overhead, like counting
-    in hardware).
+    The one place wrapper-mode measurement pays XLA cost — factored out so
+    :class:`repro.core.session.ProfileSession` can call it on cache misses
+    only.
     """
     jit_kwargs: Dict[str, Any] = {"static_argnums": static_argnums}
     if in_shardings is not None:
@@ -106,7 +105,31 @@ def measure(fn: Callable, *args, region: str = "program",
     jitted = jax.jit(fn, **jit_kwargs)
     ctx = mesh if mesh is not None else contextlib.nullcontext()
     with ctx:
-        compiled = jitted.lower(*args, **kwargs).compile()
+        return jitted.lower(*args, **kwargs).compile()
+
+
+def measure(fn: Callable, *args, region: str = "program",
+            chip: Optional[hwinfo.ChipSpec] = None,
+            num_devices: Optional[int] = None,
+            static_argnums: Tuple[int, ...] = (),
+            in_shardings: Any = None, out_shardings: Any = None,
+            mesh=None, session=None, **kwargs) -> Measurement:
+    """Wrapper mode: perfctr as a wrapper, no change to the measured code.
+
+    ``args`` may be concrete arrays or ``ShapeDtypeStruct``s; either way the
+    program is only lowered+compiled, never run (zero overhead, like counting
+    in hardware).  Pass ``session`` (a
+    :class:`repro.core.session.ProfileSession`) and repeated measurement of
+    the same program becomes a cache lookup instead of a recompile.
+    """
+    if session is not None:
+        return session.measure(
+            fn, *args, region=region, chip=chip, num_devices=num_devices,
+            static_argnums=static_argnums, in_shardings=in_shardings,
+            out_shardings=out_shardings, mesh=mesh, **kwargs)
+    compiled = lower_and_compile(
+        fn, *args, static_argnums=static_argnums, in_shardings=in_shardings,
+        out_shardings=out_shardings, mesh=mesh, **kwargs)
     nd = num_devices or (mesh.size if mesh is not None else 1)
     return measure_compiled(compiled, region=region, chip=chip, num_devices=nd)
 
@@ -115,10 +138,12 @@ class PerfCtr:
     """The stateful tool: named regions, accumulation, multiplexing."""
 
     def __init__(self, chip: Optional[hwinfo.ChipSpec] = None,
-                 groups: Sequence[str] = ("ROOFLINE",), mesh=None):
+                 groups: Sequence[str] = ("ROOFLINE",), mesh=None,
+                 session=None):
         self.chip = chip or hwinfo.DEFAULT_CHIP
         self.group_names = list(groups)
         self.mesh = mesh
+        self.session = session       # optional ProfileSession (compile cache)
         self.regions: Dict[str, Measurement] = {}
 
     # ------------------------------------------------------------ marker API
@@ -146,7 +171,7 @@ class PerfCtr:
         """Measure ``fn`` inside the innermost active marker region."""
         region = _REGION_STACK[-1].name if _REGION_STACK else "default"
         m = measure(fn, *args, region=region, chip=self.chip,
-                    mesh=self.mesh, **kwargs)
+                    mesh=self.mesh, session=self.session, **kwargs)
         self._accumulate(m)
         return m
 

@@ -34,7 +34,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, get_arch, input_specs, list_archs
 from repro.core import hwinfo
-from repro.core.events import extract_events
+from repro.core.events import extract_events, normalize_cost
 from repro.core.features import FeatureSet, default_features
 from repro.core.roofline import analyze, model_flops
 from repro.launch.mesh import make_production_mesh, mesh_axes
@@ -138,12 +138,19 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
              verbose: bool = True,
              policy_override: Optional[TrainPolicy] = None,
              config_overrides: Optional[Dict[str, Any]] = None,
-             tag: str = "") -> Dict[str, Any]:
+             tag: str = "",
+             session=None) -> Dict[str, Any]:
     """Lower + compile one cell; return (and optionally write) the record.
 
     ``policy_override`` / ``config_overrides`` / ``tag`` are the §Perf
     hillclimb surface: run the same cell with one knob changed, written
     under a tagged filename so baselines are never overwritten.
+
+    ``session`` (a :class:`repro.core.session.ProfileSession`) turns the
+    whole cell into a cache entry: a re-run with the same (cell, policy,
+    overrides, toolchain) returns the stored record without lowering or
+    compiling anything — the O(minutes) arch x shape sweep becomes
+    O(seconds) when warm.
     """
     t_start = time.time()
     spec = get_arch(arch_id)
@@ -164,6 +171,19 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         return rec
 
     policy = policy_override or TRAIN_POLICY.get(arch_id, DEFAULT_POLICY)
+
+    digest = None
+    if session is not None:
+        digest, _ = session.cell_digest(
+            cell=cell, policy=dataclasses.asdict(policy),
+            config_overrides=config_overrides or {},
+            pin=pin_strategy or "default")
+        cached = session.cache.get(digest)
+        if cached is not None:
+            rec = dict(cached["record"], cache="hit")
+            _emit(rec, out_dir, verbose)
+            return rec
+
     if policy.attn_softmax != spec.config.attn_softmax:
         spec = dataclasses.replace(
             spec, config=dataclasses.replace(
@@ -195,7 +215,7 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
         return rec
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis() or {}
+    cost = normalize_cost(compiled.cost_analysis())
     hlo = compiled.as_text()
     num_devices = mesh.size
     ev = extract_events(hlo_text=hlo, cost=cost, memstats=mem,
@@ -247,9 +267,14 @@ def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
                       ("FUSION_COUNT", "WHILE_COUNT", "REMAT_DUP_OPS",
                        "DOT_COUNT", "HLO_LINES")},
         "roofline": rt.row(),
+        "events": {k: float(v) for k, v in ev.counts.items()},
         "timings_s": {"lower": round(t_lower - t_start, 2),
                       "compile": round(t_compile - t_lower, 2)},
     }
+    if session is not None:
+        session.note_lowering()
+        session.cache.put(digest, {"kind": "dryrun-cell", "record": rec},
+                          hlo_text=hlo)
     _emit(rec, out_dir, verbose)
     if verbose:
         print(f"  memory_analysis: {mem}")
@@ -344,6 +369,13 @@ def main(argv=None) -> int:
     ap.add_argument("--all", action="store_true",
                     help="every (arch x shape) cell")
     ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--cache-dir", default=None,
+                    help="compile-artifact cache root (default "
+                         "$REPRO_CACHE_DIR or ~/.cache/repro-perfctr)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="always lower+compile, never read/write the cache")
+    ap.add_argument("--parallel", type=int, default=1,
+                    help="fan cells out across N sweep workers")
     # ---- §Perf hillclimb knobs (tagged records, baselines untouched) ----
     ap.add_argument("--tag", default="", help="suffix for the record file")
     ap.add_argument("--fused-attn", action="store_true",
@@ -392,18 +424,33 @@ def main(argv=None) -> int:
     if not (args.all or args.arch or args.shape):
         ap.error("pass --all or --arch/--shape")
 
+    from repro.core.session import ProfileSession
+    session = ProfileSession(cache_dir=args.cache_dir,
+                             enabled=not args.no_cache)
+
     failures = 0
     for multi in meshes:
+        if args.parallel > 1:
+            def cell_fn(arch, shape, _multi=multi):
+                return run_cell(arch, shape, _multi, pin_strategy=args.pin,
+                                out_dir=args.out,
+                                policy_override=policy_for(arch),
+                                config_overrides=cfg_over or None,
+                                tag=args.tag, session=session)
+            recs = session.sweep(archs, shapes, parallel=args.parallel,
+                                 multi_pod=multi, cell_fn=cell_fn)
+            failures += sum(r["status"] == "FAILED" for r in recs)
+            continue
         for arch in archs:
             for shape in shapes:
                 rec = run_cell(arch, shape, multi, pin_strategy=args.pin,
                                out_dir=args.out,
                                policy_override=policy_for(arch),
                                config_overrides=cfg_over or None,
-                               tag=args.tag)
+                               tag=args.tag, session=session)
                 if rec["status"] == "FAILED":
                     failures += 1
-    print(f"[dryrun] done, {failures} failures")
+    print(f"[dryrun] done, {failures} failures   ({session.stats()})")
     return 1 if failures else 0
 
 

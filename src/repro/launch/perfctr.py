@@ -25,6 +25,11 @@ def main(argv=None) -> int:
     ap.add_argument("--execute", action="store_true",
                     help="multiplex mode: run the SMOKE config locally and "
                          "attach wall-clock to the derived metrics")
+    ap.add_argument("--cache-dir", default=None,
+                    help="compile-artifact cache root (default "
+                         "$REPRO_CACHE_DIR or ~/.cache/repro-perfctr)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="always lower+compile, never read/write the cache")
     args = ap.parse_args(argv)
 
     from repro.core.groups import list_groups
@@ -41,25 +46,19 @@ def main(argv=None) -> int:
     from repro.core.groups import get_group
     from repro.core.perfctr import Measurement
 
+    from repro.core.session import ProfileSession
+    session = ProfileSession(cache_dir=args.cache_dir,
+                             enabled=not args.no_cache)
     rec = dryrun.run_cell(args.arch, args.shape, args.multi_pod,
-                          out_dir=None, verbose=False)
+                          out_dir=None, verbose=False, session=session)
     if rec["status"] != "ok":
         print(f"cell unavailable: {rec.get('reason') or rec.get('error')}")
         return 1
 
-    # rebuild events from the recorded counters for group rendering
+    # rebuild events for group rendering: run_cell records (fresh or from
+    # the artifact cache) always carry the full event bag
     from repro.core.events import EventCounts
-    counts = {}
-    counts.update({"FLOPS_TOTAL": rec["cost_analysis"]["flops_per_device"],
-                   "BYTES_ACCESSED": rec["cost_analysis"]["bytes_per_device"],
-                   "TRANSCENDENTALS": rec["cost_analysis"]["transcendentals"],
-                   "HBM_PEAK_BYTES": rec["memory_analysis"]["peak_bytes_per_device"],
-                   "HBM_ARG_BYTES": rec["memory_analysis"]["argument_bytes"],
-                   "HBM_OUT_BYTES": rec["memory_analysis"]["output_bytes"],
-                   "HBM_TEMP_BYTES": rec["memory_analysis"]["temp_bytes"]})
-    counts.update(rec["collectives"])
-    counts.update(rec["structure"])
-    ev = EventCounts(counts=counts)
+    ev = EventCounts(counts=dict(rec["events"]))
     m = Measurement(region=rec["cell"], events=ev, chip=hwinfo.DEFAULT_CHIP,
                     num_devices=512 if args.multi_pod else 256)
 
@@ -93,6 +92,7 @@ def main(argv=None) -> int:
               f"(host CPU, statistical)")
 
     print(m.report(args.groups.split(",")))
+    print(f"[{session.stats()}]")
     return 0
 
 

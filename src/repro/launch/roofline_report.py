@@ -3,6 +3,11 @@
     PYTHONPATH=src python -m repro.launch.roofline_report \
         --records experiments/dryrun --mesh 16x16 [--markdown]
 
+    # (re)generate the records first, through the compile-artifact cache —
+    # cold: full lower+compile per cell; warm: seconds for the whole sweep
+    PYTHONPATH=src python -m repro.launch.roofline_report \
+        --sweep --archs qwen2-0.5b,zamba2-1.2b --parallel 4
+
 Per (arch x shape) cell: the three roofline terms, the bottleneck, the
 MODEL_FLOPS/HLO_FLOPS usefulness ratio, HBM fit, and a one-line 'what would
 move the dominant term down' derived from the event profile.
@@ -108,7 +113,33 @@ def main(argv=None) -> int:
     ap.add_argument("--records", default="experiments/dryrun")
     ap.add_argument("--mesh", default="16x16")
     ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--sweep", action="store_true",
+                    help="(re)generate the records via session.sweep "
+                         "before rendering (cache-backed)")
+    ap.add_argument("--archs", default=None,
+                    help="comma list for --sweep (default: every arch)")
+    ap.add_argument("--shapes", default=None,
+                    help="comma list for --sweep (default: every shape)")
+    ap.add_argument("--parallel", type=int, default=4)
+    ap.add_argument("--cache-dir", default=None)
+    ap.add_argument("--no-cache", action="store_true")
     args = ap.parse_args(argv)
+
+    if args.sweep:
+        # dryrun must be imported before jax init (it sets XLA_FLAGS)
+        from repro.launch import dryrun  # noqa: F401
+        from repro.configs import SHAPES, list_archs
+        from repro.core.session import ProfileSession
+        session = ProfileSession(cache_dir=args.cache_dir,
+                                 enabled=not args.no_cache)
+        archs = (args.archs.split(",") if args.archs
+                 else [s.arch_id for s in list_archs()])
+        shapes = args.shapes.split(",") if args.shapes else list(SHAPES)
+        session.sweep(archs, shapes, parallel=args.parallel,
+                      multi_pod=args.mesh == "2x16x16",
+                      out_dir=args.records)
+        print(f"[sweep] {session.stats()}")
+
     records = load_records(args.records, args.mesh)
     if not records:
         print(f"no records for mesh {args.mesh} under {args.records}")

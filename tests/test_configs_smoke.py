@@ -13,6 +13,10 @@ from repro.configs import ALL_ARCH_IDS, SHAPES, get_arch, input_specs
 from repro.core.features import default_features
 from repro.models.lm import LM
 
+# the per-arch forward/train sweeps dominate suite wall-clock (~3 min);
+# CI's fast tier runs -m "not slow", the nightly/manual job runs everything
+pytestmark = pytest.mark.slow
+
 FEATS = default_features().with_(remat_policy="none")
 
 

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.core.events import normalize_cost
 from repro.core.hlo_cost import (analyze_text, parse_module, shape_bytes,
                                  shape_elems)
 
@@ -71,7 +72,7 @@ def test_matches_xla_on_unrolled_matmul_chain():
     w = jnp.ones((6, 64, 64), jnp.float32)
     c = _compile(f, x, w)
     got = analyze_text(c.as_text())
-    ca = c.cost_analysis()
+    ca = normalize_cost(c.cost_analysis())
     assert got.flops == pytest.approx(ca["flops"], rel=0.01)
     assert got.bytes_accessed == pytest.approx(ca["bytes accessed"], rel=0.05)
 
@@ -86,7 +87,8 @@ def test_matches_xla_dot_flops_batched():
     got = analyze_text(c.as_text())
     # 2 * B*M*N*K
     assert got.flops == pytest.approx(2 * 4 * 8 * 32 * 16, rel=0.05)
-    assert got.flops == pytest.approx(c.cost_analysis()["flops"], rel=0.05)
+    assert got.flops == pytest.approx(
+        normalize_cost(c.cost_analysis())["flops"], rel=0.05)
 
 
 # ---------------------------------------------------------------------------
@@ -121,7 +123,7 @@ def test_xla_raw_undercounts_scan_ours_does_not():
     x = jnp.ones((16, 64), jnp.float32)
     w = jnp.ones((24, 64, 64), jnp.float32)
     c = _compile(_scan_fn, x, w)
-    raw = c.cost_analysis()["flops"]
+    raw = normalize_cost(c.cost_analysis())["flops"]
     dyn = analyze_text(c.as_text())
     assert dyn.flops > 10 * raw          # 24 iterations vs 1
     assert any(t == 24.0 for t in dyn.while_trips.values())

@@ -59,6 +59,7 @@ def test_jacobi7_naive_sweep(shape):
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("sweeps", [1, 2, 3])
 def test_jacobi7_wavefront_temporal_blocking(sweeps):
     """The wavefront kernel fuses `sweeps` Jacobi iterations in VMEM —
@@ -69,6 +70,7 @@ def test_jacobi7_wavefront_temporal_blocking(sweeps):
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.slow
 def test_jacobi7_wavefront_equals_composed_naive():
     x = _rand(jax.random.PRNGKey(3), (14, 22, 130))
     two_naive = jacobi7_naive(jacobi7_naive(x))

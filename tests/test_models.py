@@ -210,6 +210,7 @@ def test_linear_attention_state_carries_across_segments():
 # Mamba2 block: prefill/decode state equivalence
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_mamba2_decode_matches_block_forward():
     cfg = ssm_mod.Mamba2Config(d_model=32, d_state=8, head_dim=8,
                                chunk_size=16)
@@ -230,6 +231,7 @@ def test_mamba2_decode_matches_block_forward():
 # xLSTM blocks: decode == prefill last step
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_mlstm_decode_matches_forward():
     cfg = xlstm_mod.XLSTMConfig(d_model=32, num_heads=2, chunk_size=16)
     p = xlstm_mod.init_mlstm_block(jax.random.PRNGKey(0), cfg)
@@ -313,6 +315,7 @@ def test_decode_attention_token_matches_decode_attention():
     assert k_t.shape == (b, 1, cfg.num_kv_heads, cfg.head_dim)
 
 
+@pytest.mark.slow
 def test_inplace_decode_stack_feature():
     """features.decode_inplace_cache path == default path (tiny LM)."""
     from repro.core.features import default_features

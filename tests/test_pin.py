@@ -1,7 +1,23 @@
 """likwid-pin analogue: device-ordering strategies are pure permutations."""
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:  # hypothesis is an optional test dependency (pip install repro[test])
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover — property tests skip without it
+    _SKIP = pytest.mark.skip(reason="hypothesis not installed")
+
+    def given(*_a, **_k):
+        return lambda fn: _SKIP(fn)
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    class _NullStrategies:
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _NullStrategies()
 
 from repro.core import pin as pin_mod
 from repro.core import topology as topo_mod

@@ -22,6 +22,7 @@ def engine():
                                           temperature=0.0, eos_token=-1))
 
 
+@pytest.mark.slow
 def test_generate_shapes_and_determinism(engine):
     prompts = [[1, 2, 3], [4, 5, 6, 7]]
     out1 = engine.generate(prompts, max_new_tokens=8)
@@ -32,6 +33,7 @@ def test_generate_shapes_and_determinism(engine):
     assert all(0 <= t < CFG.vocab for o in out1 for t in o)
 
 
+@pytest.mark.slow
 def test_generate_matches_stepwise_forward(engine):
     """KV-cached engine decode == naive full re-forward argmax decode."""
     lm, params = engine.lm, engine.params

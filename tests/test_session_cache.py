@@ -1,0 +1,366 @@
+"""ProfileSession + ArtifactCache: the compile-cache subsystem.
+
+Covers the acceptance surface of the subsystem:
+
+* cache hit/miss semantics (disk persistence, stats accounting, no
+  re-lowering on a hit);
+* key stability across processes (two fresh interpreters agree on the
+  digest, and the second one hits the cache the first one filled);
+* corrupted-entry recovery (torn/garbage files are evicted and re-stored,
+  never propagated);
+* sweep parallelism (thread-pool fan-out with cache sharing);
+* the headline claim: a warm re-run of the same sweep is >=5x faster than
+  the cold run and performs zero lower+compile operations.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.artifact_cache import (ArtifactCache, SCHEMA_VERSION,
+                                       canonical_digest, default_cache_dir)
+from repro.core.events import EventCounts, normalize_cost
+from repro.core.perfctr import PerfCtr, measure
+from repro.core.session import (ProfileSession, describe_abstract,
+                                fingerprint_callable)
+
+
+def _mm(a, b):
+    return jnp.tanh(a @ b)
+
+
+SDS = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+
+@pytest.fixture()
+def session(tmp_path):
+    return ProfileSession(cache_dir=str(tmp_path / "cache"))
+
+
+# ---------------------------------------------------------------------------
+# cost normalization (the events.py:270 regression)
+# ---------------------------------------------------------------------------
+
+def test_normalize_cost_accepts_list_dict_none():
+    assert normalize_cost(None) == {}
+    assert normalize_cost({"flops": 2.0}) == {"flops": 2.0}
+    # older JAX returns a list of per-computation dicts: values are summed
+    assert normalize_cost([{"flops": 2.0}, {"flops": 3.0, "utilization": "x"}]) \
+        == {"flops": 5.0, "utilization": "x"}
+
+
+def test_extract_events_tolerates_list_cost():
+    compiled = jax.jit(_mm).lower(SDS, SDS).compile()
+    from repro.core.events import extract_events
+    ev = extract_events(hlo_text=compiled.as_text(),
+                        cost=[{"flops": 7.0}], memstats=None)
+    assert ev["FLOPS_XLA_RAW"] == 7.0
+
+
+# ---------------------------------------------------------------------------
+# events round-trip (what the cache stores)
+# ---------------------------------------------------------------------------
+
+def test_event_counts_dict_round_trip():
+    m = measure(_mm, SDS, SDS)
+    ev2 = EventCounts.from_dict(m.events.to_dict())
+    assert ev2.counts == m.events.counts
+    assert ev2.collectives == m.events.collectives
+
+
+# ---------------------------------------------------------------------------
+# hit/miss semantics
+# ---------------------------------------------------------------------------
+
+def test_cache_miss_then_hit_no_relower(session):
+    m1 = session.measure(_mm, SDS, SDS, region="r")
+    assert session.lowerings == 1
+    assert session.cache.stats.misses == 1 and session.cache.stats.hits == 0
+
+    m2 = session.measure(_mm, SDS, SDS, region="r")
+    assert session.lowerings == 1           # no second lower+compile
+    assert session.cache.stats.hits == 1
+    assert m2.events.counts == m1.events.counts
+    assert m1.events["FLOPS_TOTAL"] == pytest.approx(2 * 64 ** 3, rel=0.02)
+
+
+def test_cache_persists_across_session_objects(session):
+    session.measure(_mm, SDS, SDS)
+    fresh = ProfileSession(cache=ArtifactCache(session.cache.root))
+    m = fresh.measure(_mm, SDS, SDS)
+    assert fresh.lowerings == 0
+    assert fresh.cache.stats.hits == 1
+    assert m.events["FLOPS_TOTAL"] > 0
+
+
+def test_different_shapes_are_different_keys(session):
+    session.measure(_mm, SDS, SDS)
+    big = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    session.measure(_mm, big, big)
+    assert session.lowerings == 2
+    assert len(session.cache) == 2
+
+
+def test_key_material_is_deterministic_in_process():
+    d1, _ = ProfileSession(enabled=False).measure_digest(
+        _mm, (SDS, SDS), {}, (), None, None, None)
+    d2, _ = ProfileSession(enabled=False).measure_digest(
+        _mm, (SDS, SDS), {}, (), None, None, None)
+    assert d1 == d2
+    # and the digest is a stable function of the material
+    assert canonical_digest({"a": 1, "b": 2}) == canonical_digest({"b": 2, "a": 1})
+
+
+def test_num_devices_changes_key():
+    # extraction input, not display: group sizes default to num_devices
+    s = ProfileSession(enabled=False)
+    d1, _ = s.measure_digest(_mm, (SDS, SDS), {}, (), None, None, None,
+                             num_devices=1)
+    d8, _ = s.measure_digest(_mm, (SDS, SDS), {}, (), None, None, None,
+                             num_devices=8)
+    assert d1 != d8
+
+
+def test_fingerprint_distinguishes_functions():
+    def f1(a):
+        return a + 1
+
+    def f2(a):
+        return a + 2
+
+    assert fingerprint_callable(f1) != fingerprint_callable(f2)
+    assert fingerprint_callable(f1) == fingerprint_callable(f1)
+
+
+def test_describe_abstract_reads_shapes():
+    d = describe_abstract((SDS, {"k": jax.ShapeDtypeStruct((2,), jnp.int32)}))
+    shapes = [tuple(leaf["shape"]) for leaf in d["leaves"]]
+    assert (64, 64) in shapes and (2,) in shapes
+
+
+def test_disabled_session_always_lowers(tmp_path):
+    s = ProfileSession(cache_dir=str(tmp_path), enabled=False)
+    s.measure(_mm, SDS, SDS)
+    s.measure(_mm, SDS, SDS)
+    assert s.lowerings == 2
+    assert len(s.cache) == 0
+
+
+def test_env_var_controls_default_root(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_CACHE_DIR", str(tmp_path / "envcache"))
+    assert default_cache_dir() == str(tmp_path / "envcache")
+
+
+# ---------------------------------------------------------------------------
+# corrupted-entry recovery
+# ---------------------------------------------------------------------------
+
+def _single_entry_path(cache):
+    digests = list(cache.entries())
+    assert len(digests) == 1
+    return cache._entry_path(digests[0])
+
+
+def test_corrupt_entry_is_evicted_and_remeasured(session):
+    session.measure(_mm, SDS, SDS)
+    path = _single_entry_path(session.cache)
+    with open(path, "w") as f:
+        f.write('{"truncated": ')          # torn write / garbage
+
+    m = session.measure(_mm, SDS, SDS)     # must self-heal, not raise
+    assert session.lowerings == 2
+    assert session.cache.stats.corrupt_evictions == 1
+    assert m.events["FLOPS_TOTAL"] > 0
+    # the re-store left a valid entry behind
+    with open(path) as f:
+        assert json.load(f)["schema"] == SCHEMA_VERSION
+
+
+def test_schema_mismatch_treated_as_corrupt(session):
+    session.measure(_mm, SDS, SDS)
+    path = _single_entry_path(session.cache)
+    with open(path) as f:
+        entry = json.load(f)
+    entry["schema"] = SCHEMA_VERSION + 999
+    with open(path, "w") as f:
+        json.dump(entry, f)
+    session.measure(_mm, SDS, SDS)
+    assert session.cache.stats.corrupt_evictions == 1
+    assert session.lowerings == 2
+
+
+def test_clear_empties_cache(session):
+    session.measure(_mm, SDS, SDS)
+    assert len(session.cache) == 1
+    assert session.cache.clear() == 1
+    assert len(session.cache) == 0
+
+
+# ---------------------------------------------------------------------------
+# key stability across processes
+# ---------------------------------------------------------------------------
+
+_SUBPROCESS_SCRIPT = textwrap.dedent("""
+    import sys, jax, jax.numpy as jnp
+    from repro.core.session import ProfileSession
+
+    def probe_fn(a, b):
+        return jnp.tanh(a @ b)
+
+    sds = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    s = ProfileSession(cache_dir=sys.argv[1])
+    s.measure(probe_fn, sds, sds)
+    print("DIGEST=" + s.measure_digest(probe_fn, (sds, sds), {}, (),
+                                       None, None, None)[0])
+    print("LOWERINGS=%d HITS=%d" % (s.lowerings, s.cache.stats.hits))
+""")
+
+
+@pytest.mark.slow
+def test_key_stable_across_processes(tmp_path):
+    """Two fresh interpreters compute the same digest, and the second one
+    hits the disk cache the first one filled (zero lowerings)."""
+    script = tmp_path / "probe.py"
+    script.write_text(_SUBPROCESS_SCRIPT)
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+
+    def run():
+        out = subprocess.run(
+            [sys.executable, str(script), str(tmp_path / "cache")],
+            capture_output=True, text=True, env=env, timeout=300, check=True)
+        lines = dict(kv.split("=") for kv in out.stdout.split()
+                     if "=" in kv)
+        return lines
+
+    first = run()
+    second = run()
+    assert first["DIGEST"] == second["DIGEST"]
+    assert first["LOWERINGS"] == "1" and first["HITS"] == "0"
+    assert second["LOWERINGS"] == "0" and second["HITS"] == "1"
+
+
+# ---------------------------------------------------------------------------
+# sweep: thread-pool fan-out with cache sharing
+# ---------------------------------------------------------------------------
+
+def _toy_cells():
+    """arch x shape grid of real lowerings, small enough for the fast tier."""
+    def cell_fn(arch, shape):
+        n = {"a16": 16, "a32": 32}[arch] * {"s1": 1, "s2": 3}[shape]
+        sds = jax.ShapeDtypeStruct((n, n), jnp.float32)
+        return {"cell": f"{arch}/{shape}", "status": "ok", "n": n, "sds": sds}
+    return cell_fn
+
+
+def test_sweep_parallelism_smoke(session):
+    def cell_fn(arch, shape):
+        rec = _toy_cells()(arch, shape)
+        m = session.measure(_mm, rec["sds"], rec["sds"],
+                            region=rec["cell"])
+        rec["events"] = dict(m.events.counts)
+        del rec["sds"]
+        return rec
+
+    recs = session.sweep(["a16", "a32"], ["s1", "s2"], parallel=4,
+                         cell_fn=cell_fn, groups=("FLOPS_BF16",))
+    assert len(recs) == 4
+    assert [r["cell"] for r in recs] == ["a16/s1", "a16/s2",
+                                        "a32/s1", "a32/s2"]
+    assert all(r["status"] == "ok" for r in recs)
+    # derived metrics attached per requested group
+    assert all("FLOPS_BF16" in r["derived"] for r in recs)
+    assert session.lowerings == 4          # four distinct cells compiled
+
+
+def test_sweep_worker_exception_becomes_failed_record(session):
+    def cell_fn(arch, shape):
+        if shape == "boom":
+            raise RuntimeError("worker died")
+        return {"cell": f"{arch}/{shape}", "status": "ok"}
+
+    recs = session.sweep(["a"], ["ok", "boom"], cell_fn=cell_fn, parallel=2)
+    assert recs[0]["status"] == "ok"
+    assert recs[1]["status"] == "FAILED" and "worker died" in recs[1]["error"]
+
+
+def test_sweep_shares_cache_between_workers(session):
+    """4 workers x the same program => exactly one compile (per-key lock)."""
+    sds = jax.ShapeDtypeStruct((48, 48), jnp.float32)
+
+    def cell_fn(arch, shape):
+        m = session.measure(_mm, sds, sds, region="shared")
+        return {"cell": f"{arch}/{shape}", "status": "ok",
+                "flops": m.events["FLOPS_TOTAL"]}
+
+    recs = session.sweep(["a", "b"], ["x", "y"], parallel=4, cell_fn=cell_fn)
+    assert session.lowerings == 1
+    assert len({r["flops"] for r in recs}) == 1
+
+
+# ---------------------------------------------------------------------------
+# the headline acceptance: warm re-run >=5x faster, zero re-lowering
+# ---------------------------------------------------------------------------
+
+def test_cached_rerun_5x_faster_with_no_relowering(tmp_path, tiny_lm):
+    """Second identical sweep: all hits, no lowering, >=5x wall speedup."""
+    batch = {"tokens": jax.ShapeDtypeStruct((2, 16), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((2, 16), jnp.int32)}
+    params = jax.eval_shape(lambda: tiny_lm.init(jax.random.PRNGKey(0)))
+
+    def loss(p, b):
+        return tiny_lm.loss(p, b)[0]
+
+    def make_cell_fn(sess):
+        def cell_fn(arch, shape):
+            m = sess.measure(loss, params, batch, region=f"{arch}/{shape}")
+            return {"cell": f"{arch}/{shape}", "status": "ok",
+                    "flops": m.events["FLOPS_TOTAL"]}
+        return cell_fn
+
+    cold = ProfileSession(cache_dir=str(tmp_path / "cache"))
+    t0 = time.perf_counter()
+    recs_cold = cold.sweep(["tiny"], ["train"], cell_fn=make_cell_fn(cold))
+    t_cold = time.perf_counter() - t0
+    assert cold.lowerings == 1 and cold.cache.stats.stores == 1
+
+    warm = ProfileSession(cache_dir=str(tmp_path / "cache"))
+    t0 = time.perf_counter()
+    recs_warm = warm.sweep(["tiny"], ["train"], cell_fn=make_cell_fn(warm))
+    t_warm = time.perf_counter() - t0
+
+    assert warm.lowerings == 0             # nothing re-lowered
+    assert warm.cache.stats.hits == 1 and warm.cache.stats.misses == 0
+    assert recs_warm[0]["flops"] == recs_cold[0]["flops"] > 0
+    assert t_cold >= 5 * t_warm, (t_cold, t_warm)
+
+
+# ---------------------------------------------------------------------------
+# PerfCtr / measure() integration
+# ---------------------------------------------------------------------------
+
+def test_perfctr_marker_mode_uses_session_cache(session):
+    ctr = PerfCtr(session=session)
+    with ctr.marker("region"):
+        ctr.probe(_mm, SDS, SDS)
+        ctr.probe(_mm, SDS, SDS)           # accumulates, second is a hit
+    m = ctr.regions["region"]
+    assert m.calls == 2
+    assert m.events["FLOPS_TOTAL"] == pytest.approx(2 * 2 * 64 ** 3, rel=0.02)
+    assert session.lowerings == 1
+    assert session.cache.stats.hits == 1
+
+
+def test_measure_session_kwarg_routes_through_cache(session):
+    measure(_mm, SDS, SDS, session=session)
+    measure(_mm, SDS, SDS, session=session)
+    assert session.lowerings == 1
+    assert session.cache.stats.hits == 1

@@ -74,6 +74,7 @@ def test_global_norm():
 # grad accumulation: same result as one big batch
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_accumulation_matches_full_batch():
     lm = _lm()
     adamw = AdamWConfig(weight_decay=0.0, clip_norm=0.0)
@@ -93,6 +94,7 @@ def test_accumulation_matches_full_batch():
                                    rtol=2e-3, atol=2e-5)
 
 
+@pytest.mark.slow
 def test_loss_decreases_overfitting_tiny_batch():
     lm = _lm()
     adamw = AdamWConfig(weight_decay=0.0)
@@ -142,6 +144,7 @@ def test_error_feedback_accumulates_residual():
 # trainer: run + checkpoint + resume
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 def test_trainer_runs_and_resumes(tmp_path):
     from repro.data.pipeline import DataConfig
     from repro.train.trainer import Trainer, TrainerConfig
