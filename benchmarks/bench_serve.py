@@ -1,0 +1,170 @@
+"""Serving hot path: fused on-device decode loop vs per-token host loop.
+
+Measured by our own instruments, per the paper's workflow (find the stall,
+restructure, re-measure): the old wave-mode path pays one dispatch + one
+device->host sync per generated token; the fused path is one dispatch and
+one sync per `generate()`.  Reports tokens/s for both, the speedup, the
+audited host-sync counts, and continuous-batching scheduler throughput +
+time-to-first-token.  ``--json`` writes BENCH_serve.json so CI tracks the
+tokens/s trajectory.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve --smoke --json BENCH_serve.json
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+
+def _build_engine(smoke: bool):
+    from repro.core.features import default_features
+    from repro.models.lm import LM, LMConfig
+    from repro.serve import Engine, ServeConfig
+
+    if smoke:
+        cfg = LMConfig(name="serve-bench", family="dense", vocab=256,
+                       d_model=64, n_layers=2, num_heads=4, num_kv_heads=2,
+                       d_ff=128)
+    else:
+        cfg = LMConfig(name="serve-bench", family="dense", vocab=1024,
+                       d_model=128, n_layers=4, num_heads=8, num_kv_heads=4,
+                       d_ff=256)
+    lm = LM(cfg, default_features().with_(remat_policy="none"))
+    params = lm.init(jax.random.PRNGKey(0))
+    eng = Engine(lm, params, ServeConfig(max_seq=256, batch_slots=4,
+                                         temperature=0.0, admission_chunk=8))
+    return eng
+
+
+def _prompts(eng, n, plen, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(1, eng.lm.cfg.vocab, size=plen).tolist()
+            for _ in range(n)]
+
+
+def run(csv, session=None, smoke=False):
+    from repro.core.perfctr import PerfCtr
+    from repro.serve import BatchScheduler, Request
+
+    eng = _build_engine(smoke)
+    batch, plen = 4, 8
+    max_new = 32 if smoke else 64
+    reps = 2 if smoke else 5
+    prompts = _prompts(eng, batch, plen)
+
+    # instrument: event counts for serve.* regions from the compiled
+    # artifact (wrapper mode), wall times from the runs below
+    ctr = PerfCtr(session=session)
+    eng.instrument(ctr, prompt_len=plen)
+
+    # ---- static batch: fused loop vs per-token host loop ----------------
+    eng.generate(prompts, max_new_tokens=max_new)            # compile
+    eng.generate_reference(prompts, max_new_tokens=max_new)  # compile
+    s0 = eng.host_syncs
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out_f = eng.generate(prompts, max_new_tokens=max_new)
+    t_fused = (time.perf_counter() - t0) / reps
+    syncs_fused = (eng.host_syncs - s0) // reps
+
+    s0 = eng.host_syncs
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out_r = eng.generate_reference(prompts, max_new_tokens=max_new)
+    t_ref = (time.perf_counter() - t0) / reps
+    syncs_ref = (eng.host_syncs - s0) // reps
+
+    assert out_f == out_r, "fused loop diverged from the reference loop"
+    ntok = sum(len(o) for o in out_f)
+    tps_fused, tps_ref = ntok / t_fused, ntok / t_ref
+    speedup = tps_fused / tps_ref
+    print("== serving decode loop (equal-length wave, greedy) ==")
+    print(f"reference (per-token sync): {tps_ref:10.1f} tok/s   "
+          f"{syncs_ref:4d} host syncs/call")
+    print(f"fused (on-device loop):     {tps_fused:10.1f} tok/s   "
+          f"{syncs_fused:4d} host syncs/call")
+    print(f"speedup: {speedup:.1f}x")
+    assert syncs_fused <= 2, f"fused loop made {syncs_fused} host syncs"
+
+    # ---- continuous batching: ragged budgets, mid-flight admission ------
+    n_req = 8 if smoke else 16
+    # warm every segment program the run can use: a budget of
+    # 2*admission_chunk-1 walks the power-of-two ladder (8,4,2,1)
+    warm = BatchScheduler(eng)
+    for rid in range(2):
+        warm.submit(Request(rid=rid, prompt=_prompts(eng, 1, plen)[0],
+                            max_new_tokens=2 * eng.cfg.admission_chunk - 1))
+    warm.run()
+    sched = BatchScheduler(eng)
+    rng = np.random.default_rng(1)
+    for rid in range(n_req):
+        sched.submit(Request(
+            rid=rid, prompt=_prompts(eng, 1, plen, seed=rid)[0],
+            max_new_tokens=int(rng.integers(max_new // 2, max_new + 1))))
+    t0 = time.perf_counter()
+    done = sched.run()
+    t_sched = time.perf_counter() - t0
+    total = sum(len(r.generated) for r in done.values())
+    ttfts = [r.ttft for r in done.values() if r.ttft is not None]
+    ttft_ms = float(np.mean(ttfts)) * 1e3 if ttfts else float("nan")
+    tps_sched = total / t_sched
+    print("== continuous batching (ragged budgets, slot reuse) ==")
+    print(f"{len(done)} requests, {total} tokens: {tps_sched:10.1f} tok/s  "
+          f"mean TTFT {ttft_ms:.1f} ms  "
+          f"segments={sched.metrics['segments']:.0f} "
+          f"admissions={sched.metrics['admissions']:.0f}")
+    print()
+    print(ctr.report())
+
+    # the whole point of the PR: the fused loop beats the host loop by >=3x
+    # on this host (per-token dispatch+sync dominates at these model sizes;
+    # measures ~4-6x in practice).  Smoke relaxes the statistical assert
+    # like every other bench — few reps on a contended CI runner.
+    floor = 2.0 if smoke else 3.0
+    assert speedup >= floor, f"fused speedup {speedup:.2f}x < {floor}x"
+
+    csv.append(("serve_fused_tok_s", 1e6 / tps_fused,
+                f"tok_s={tps_fused:.1f},speedup_vs_host_loop={speedup:.2f},"
+                f"host_syncs={syncs_fused}"))
+    csv.append(("serve_reference_tok_s", 1e6 / tps_ref,
+                f"tok_s={tps_ref:.1f},host_syncs={syncs_ref}"))
+    csv.append(("serve_continuous_tok_s", 1e6 / tps_sched,
+                f"tok_s={tps_sched:.1f},ttft_ms={ttft_ms:.2f}"))
+    return {
+        "fused_tok_s": tps_fused,
+        "reference_tok_s": tps_ref,
+        "speedup": speedup,
+        "host_syncs_fused": int(syncs_fused),
+        "host_syncs_reference": int(syncs_ref),
+        "continuous_tok_s": tps_sched,
+        "ttft_ms": ttft_ms,
+        "tokens": int(ntok),
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: tiny model, few reps")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the serving summary here (BENCH_serve.json)")
+    args = ap.parse_args(argv)
+    from repro.core.session import ProfileSession
+    session = ProfileSession()
+    csv = []
+    summary = run(csv, session=session, smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.2f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, **summary}, f, indent=1)
+        print(f"[bench_serve] wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -21,7 +21,7 @@ import time
 import traceback
 
 from benchmarks import (bench_bandwidth_map, bench_jacobi_traffic,
-                        bench_marker_overhead, bench_perfctr,
+                        bench_marker_overhead, bench_perfctr, bench_serve,
                         bench_stencil_pinning, bench_stream_pinning)
 
 BENCHES = {
@@ -31,6 +31,7 @@ BENCHES = {
     "jacobi_traffic": bench_jacobi_traffic,  # Table I
     "marker_overhead": bench_marker_overhead,  # zero-overhead claim
     "bandwidth_map": bench_bandwidth_map,   # §VI future plans
+    "serve": bench_serve,                   # measurement-driven serving loop
 }
 
 

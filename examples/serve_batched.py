@@ -22,7 +22,8 @@ def main():
     engine = Engine(lm, params, ServeConfig(max_seq=128, batch_slots=4,
                                             temperature=0.0))
 
-    # -- direct batched generate ------------------------------------------
+    # -- direct batched generate (fused on-device loop) -------------------
+    # ragged prompts are exact: per-row masks keep pads out of attention
     prompts = [[1, 2, 3], [100, 200], [5, 6, 7, 8, 9]]
     t0 = time.perf_counter()
     outs = engine.generate(prompts, max_new_tokens=16)
@@ -31,7 +32,8 @@ def main():
         print(f"prompt {p} -> {o}")
     total_tokens = sum(len(o) for o in outs)
     print(f"{total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s, CPU)")
+          f"({total_tokens/dt:.1f} tok/s incl. compile, CPU) — "
+          f"{engine.host_syncs} host sync(s) total")
 
     # -- continuous batching over more requests than slots ----------------
     sched = BatchScheduler(engine)
@@ -40,9 +42,14 @@ def main():
                              max_new_tokens=8))
     done = sched.run()
     print(f"\nscheduler finished {len(done)} requests "
-          f"(batch_slots={engine.cfg.batch_slots})")
+          f"(batch_slots={engine.cfg.batch_slots}, "
+          f"segments={sched.metrics['segments']:.0f}, "
+          f"admissions={sched.metrics['admissions']:.0f})")
     for rid in sorted(done)[:3]:
-        print(f"  request {rid}: {done[rid].generated}")
+        ttft = done[rid].ttft
+        print(f"  request {rid}: {done[rid].generated} "
+              f"(ttft {ttft*1e3:.0f} ms)" if ttft else
+              f"  request {rid}: {done[rid].generated}")
 
 
 if __name__ == "__main__":

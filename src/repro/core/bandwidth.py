@@ -32,9 +32,11 @@ __all__ = ["BandwidthPoint", "measure_map", "model_map", "render_map"]
 @dataclasses.dataclass(frozen=True)
 class BandwidthPoint:
     working_set_bytes: int
-    bandwidth: float          # bytes/s
+    bandwidth: float          # bytes/s (median-of-repeats — robust center)
     level: str                # which hierarchy level the model predicts
     measured: bool
+    bandwidth_best: float = 0.0   # bytes/s from the MIN time (least-noise
+                                  # repeat; 0.0 for modeled points)
 
 
 def _triad_bytes(n: int, dtype_bytes: int) -> int:
@@ -86,9 +88,11 @@ def measure_map(sizes: Optional[List[int]] = None, *, repeats: int = 5,
 
     for ws in sizes:
         n = max(ws // (3 * dtype_bytes), 8)
-        key = jax.random.PRNGKey(0)
-        b = jax.random.normal(key, (n,), dtype)
-        c = jax.random.normal(key, (n,), dtype)
+        # distinct streams: identical b and c (same key) can be CSE'd or
+        # compressed by the backend, under-counting real memory traffic
+        kb, kc = jax.random.split(jax.random.PRNGKey(0))
+        b = jax.random.normal(kb, (n,), dtype)
+        c = jax.random.normal(kc, (n,), dtype)
         a = jnp.zeros((n,), dtype)
         triad(a, b, c).block_until_ready()  # warm-up compile
         times = []
@@ -97,12 +101,15 @@ def measure_map(sizes: Optional[List[int]] = None, *, repeats: int = 5,
             a = triad(a, b, c)
             a.block_until_ready()
             times.append(time.perf_counter() - t0)
-        t = float(np.median(times))
+        t_med = float(np.median(times))
+        t_min = float(np.min(times))
+        nbytes = _triad_bytes(n, dtype_bytes)
         out.append(BandwidthPoint(
-            working_set_bytes=_triad_bytes(n, dtype_bytes),
-            bandwidth=_triad_bytes(n, dtype_bytes) / t,
-            level=_level_for(_triad_bytes(n, dtype_bytes), chip),
+            working_set_bytes=nbytes,
+            bandwidth=nbytes / t_med,
+            level=_level_for(nbytes, chip),
             measured=True,
+            bandwidth_best=nbytes / t_min,
         ))
     return out
 
@@ -113,6 +120,7 @@ def render_map(points: List[BandwidthPoint], title: str = "bandwidth map",
     if not points:
         return f"{title}: (empty)"
     peak = max(p.bandwidth for p in points)
+    show_best = any(p.bandwidth_best for p in points)
     lines = [title, "-" * (width + 34)]
     for p in points:
         bar = "#" * max(int(width * p.bandwidth / peak), 1)
@@ -122,6 +130,8 @@ def render_map(points: List[BandwidthPoint], title: str = "bandwidth map",
             if ws >= 1024:
                 ws /= 1024
                 unit = u
-        lines.append(f"{ws:8.1f} {unit:<4} {p.bandwidth/1e9:9.2f} GB/s "
-                     f"{p.level:<14} {bar}")
+        best = (f" (best {p.bandwidth_best/1e9:8.2f})"
+                if show_best and p.bandwidth_best else "")
+        lines.append(f"{ws:8.1f} {unit:<4} {p.bandwidth/1e9:9.2f} GB/s"
+                     f"{best} {p.level:<14} {bar}")
     return "\n".join(lines)

@@ -42,5 +42,11 @@ def report(groups: Optional[Sequence[str]] = None) -> str:
 
 
 def reset() -> None:
-    global _GLOBAL
-    _GLOBAL = None
+    """Reset accumulated regions on the global counter.
+
+    Uses :meth:`PerfCtr.reset_regions`, so an attached session/compile
+    cache (and chip/mesh config) survives the reset — dropping the whole
+    instance would silently discard them.
+    """
+    if _GLOBAL is not None:
+        _GLOBAL.reset_regions()

@@ -179,6 +179,34 @@ class PerfCtr:
         """Record an externally produced Measurement into its region."""
         self._accumulate(m)
 
+    @contextlib.contextmanager
+    def region_timer(self, region: str):
+        """Wall-time a block of *executed* code into ``region``.
+
+        The LIKWID split of duties for running programs: event counts come
+        from the compiled artifact (:meth:`probe`, zero overhead), wall
+        clock accumulates here — ``report()`` then derives rates from the
+        mean wall of the same region.  Creates an empty-events region if
+        none was probed yet.
+        """
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter() - t0
+            m = self.regions.get(region)
+            if m is None:
+                m = Measurement(region=region, events=EventCounts(counts={}),
+                                chip=self.chip, num_devices=1, calls=0)
+                self.regions[region] = m
+            m.wall_times.append(dt)
+            m.calls += 1
+
+    def reset_regions(self) -> None:
+        """Forget accumulated regions; keep chip/mesh/session (and its
+        compile cache) — the paper's 'reset counters, keep the tool'."""
+        self.regions.clear()
+
     def _accumulate(self, m: Measurement) -> None:
         if m.region in self.regions:
             self.regions[m.region].accumulate(m)

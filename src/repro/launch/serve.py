@@ -3,8 +3,12 @@
     PYTHONPATH=src python -m repro.launch.serve --arch zamba2-1.2b \
         --smoke-dims --requests 8 --max-new 16
 
-Runs the BatchScheduler over synthetic prompts (deterministic), printing
-throughput; with --ckpt-dir it restores trained weights first.
+Runs the continuous-batching scheduler over synthetic prompts
+(deterministic), printing tokens/s, time-to-first-token, and the engine's
+audited host-sync count; with --ckpt-dir it restores trained weights
+first, and --instrument probes the serve.prefill/serve.decode regions
+through PerfCtr (event counts from the compiled artifact, wall times from
+the executed segments) and prints the report.
 """
 
 from __future__ import annotations
@@ -23,6 +27,10 @@ def main(argv=None) -> int:
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--admission-chunk", type=int, default=8,
+                    help="decode steps between admission points")
+    ap.add_argument("--instrument", action="store_true",
+                    help="probe serve regions through PerfCtr and report")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
 
@@ -49,7 +57,16 @@ def main(argv=None) -> int:
 
     eng = Engine(lm, params, ServeConfig(
         max_seq=args.max_seq, batch_slots=args.slots,
-        temperature=args.temperature))
+        temperature=args.temperature,
+        admission_chunk=args.admission_chunk))
+    ctr = None
+    if args.instrument:
+        from repro.core.perfctr import PerfCtr
+        from repro.core.session import ProfileSession
+        ctr = PerfCtr(session=ProfileSession())
+        eng.instrument(ctr, prompt_len=args.prompt_len)
+        print("[serve] instrumented serve.prefill/serve.decode regions")
+
     sched = BatchScheduler(eng)
     rng = np.random.default_rng(0)
     for rid in range(args.requests):
@@ -60,10 +77,18 @@ def main(argv=None) -> int:
     done = sched.run()
     dt = time.perf_counter() - t0
     total_new = sum(len(r.generated) for r in done.values())
+    ttfts = [r.ttft for r in done.values() if r.ttft is not None]
     print(f"[serve] {len(done)} requests, {total_new} tokens in {dt:.2f}s "
           f"({total_new/dt:.1f} tok/s incl. compile)")
+    ttft_s = f" mean_ttft={np.mean(ttfts)*1e3:.1f}ms" if ttfts else ""
+    print(f"[serve] segments={sched.metrics['segments']:.0f} "
+          f"admissions={sched.metrics['admissions']:.0f} "
+          f"host_syncs={eng.host_syncs}{ttft_s}")
     for rid in sorted(done)[:4]:
         print(f"  req {rid}: {done[rid].generated[:12]}")
+    if ctr is not None:
+        print()
+        print(ctr.report())
     return 0
 
 

@@ -132,12 +132,15 @@ def _gqa_out(probs: jnp.ndarray, v: jnp.ndarray) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 
 def _full_attention(q, k, v, q_offset: int = 0, causal: bool = True,
-                    softmax_mode: str = "naive") -> jnp.ndarray:
-    return _full_attention_offset(q, k, v, q_offset, causal, softmax_mode)
+                    softmax_mode: str = "naive",
+                    kv_len=None) -> jnp.ndarray:
+    return _full_attention_offset(q, k, v, q_offset, causal, softmax_mode,
+                                  kv_len=kv_len)
 
 
 def _chunked_attention(q, k, v, chunk: int, causal: bool = True,
-                       softmax_mode: str = "naive") -> jnp.ndarray:
+                       softmax_mode: str = "naive",
+                       kv_len=None) -> jnp.ndarray:
     """Q-chunked causal attention: scan over query chunks, full K/V.
 
     Live intermediates are [B,KVH,G,chunk,Sk] — the 32k-prefill-safe path.
@@ -152,7 +155,7 @@ def _chunked_attention(q, k, v, chunk: int, causal: bool = True,
     def body(carry, args):
         i, qc = args
         out = _full_attention_offset(qc, k, v, i * chunk, causal,
-                                     softmax_mode)
+                                     softmax_mode, kv_len=kv_len)
         return carry, out
 
     _, outs = jax.lax.scan(body, None, (jnp.arange(nq), qs))
@@ -160,10 +163,19 @@ def _chunked_attention(q, k, v, chunk: int, causal: bool = True,
     return out[:, :sq]
 
 
+def _kv_len_mask(kv_len, sk: int) -> jnp.ndarray:
+    """Per-row key-validity mask [B,1,1,1,Sk]: key j is real iff j < len_b."""
+    return (jnp.arange(sk)[None, :] < kv_len[:, None])[:, None, None, None, :]
+
+
 def _full_attention_offset(qc, k, v, q_offset, causal: bool = True,
-                           softmax_mode: str = "naive") -> jnp.ndarray:
-    if softmax_mode == "fused":
-        return _fused_attention_offset(qc, k, v, q_offset, causal)
+                           softmax_mode: str = "naive",
+                           kv_len=None) -> jnp.ndarray:
+    if softmax_mode == "fused" or (softmax_mode == "kernel"
+                                   and kv_len is not None):
+        # the flash twin keeps its per-tile bias row-independent; ragged
+        # prompts route through the fused path (same traffic class)
+        return _fused_attention_offset(qc, k, v, q_offset, causal, kv_len)
     if softmax_mode == "kernel":
         return _flash_attention_offset(qc, k, v, q_offset, causal)
     sq, sk = qc.shape[1], k.shape[1]
@@ -173,12 +185,14 @@ def _full_attention_offset(qc, k, v, q_offset, causal: bool = True,
         kpos = jnp.arange(sk)
         mask = kpos[None, :] <= qpos[:, None]
         scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    if kv_len is not None:
+        scores = jnp.where(_kv_len_mask(kv_len, sk), scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(qc.dtype)
     return _gqa_out(probs, v)
 
 
-def _fused_attention_offset(qc, k, v, q_offset, causal: bool = True
-                            ) -> jnp.ndarray:
+def _fused_attention_offset(qc, k, v, q_offset, causal: bool = True,
+                            kv_len=None) -> jnp.ndarray:
     """Traffic-lean attention (§Perf hillclimb 1).
 
     Same math as the naive path, restructured so XLA materializes the
@@ -213,6 +227,9 @@ def _fused_attention_offset(qc, k, v, q_offset, causal: bool = True
         masked = scores + bias
     else:
         masked = scores
+    if kv_len is not None:
+        masked = masked + jnp.where(_kv_len_mask(kv_len, sk),
+                                    0.0, NEG_INF).astype(jnp.float32)
     m = jax.lax.stop_gradient(
         jnp.max(masked, axis=-1, keepdims=True))          # f32 [.,Sq,1]
     p = jnp.exp(masked - m).astype(qc.dtype)              # stored compute-dtype
@@ -377,40 +394,58 @@ def attention(p: Params, x: jnp.ndarray, cfg: AttnConfig, *,
 class KVCache(NamedTuple):
     k: jnp.ndarray          # [B, Smax, KVH, Dh]
     v: jnp.ndarray          # [B, Smax, KVH, Dh]
-    length: jnp.ndarray     # [] int32 — tokens filled so far
+    length: jnp.ndarray     # [B] int32 — tokens filled so far, per row
 
 
 def init_kv_cache(batch: int, max_seq: int, cfg: AttnConfig,
                   dtype=jnp.bfloat16) -> KVCache:
     shape = (batch, max_seq, cfg.num_kv_heads, cfg.head_dim)
     return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
-                   length=jnp.zeros((), jnp.int32))
+                   length=jnp.zeros((batch,), jnp.int32))
 
 
 def cache_specs() -> Specs:
     return {"k": ("batch", "cache_seq", "kv_heads", "head_dim"),
             "v": ("batch", "cache_seq", "kv_heads", "head_dim"),
-            "length": ()}
+            "length": ("batch",)}
+
+
+def _row_lengths(length: jnp.ndarray, batch: int) -> jnp.ndarray:
+    """Normalize a cache length to per-row [B] (scalar caches broadcast)."""
+    length = jnp.asarray(length, jnp.int32)
+    if length.ndim == 0:
+        return jnp.broadcast_to(length, (batch,))
+    return length
 
 
 def prefill_into_cache(p: Params, x: jnp.ndarray, cfg: AttnConfig,
                        cache: KVCache,
-                       positions3: Optional[jnp.ndarray] = None
+                       positions3: Optional[jnp.ndarray] = None,
+                       lengths: Optional[jnp.ndarray] = None
                        ) -> Tuple[jnp.ndarray, KVCache]:
-    """Run prefill attention AND populate the cache with this segment's K/V."""
+    """Run prefill attention AND populate the cache with this segment's K/V.
+
+    ``lengths`` [B] marks the real (unpadded) prompt length per row: keys at
+    positions >= lengths[b] are masked out of every query's softmax, so
+    right-padded ragged prompts attend only their own tokens.  The cache
+    rows record their true lengths — decode continues each row at its own
+    position.
+    """
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     q, k, v = _project_qkv(p, x, cfg, positions, positions3)
     out = (_chunked_attention(q, k, v, cfg.chunk_size,
-                              softmax_mode=cfg.softmax_mode)
+                              softmax_mode=cfg.softmax_mode, kv_len=lengths)
            if s > cfg.chunk_threshold
-           else _full_attention(q, k, v, softmax_mode=cfg.softmax_mode))
+           else _full_attention(q, k, v, softmax_mode=cfg.softmax_mode,
+                                kv_len=lengths))
     newk = jax.lax.dynamic_update_slice(
         cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
     newv = jax.lax.dynamic_update_slice(
         cache.v, v.astype(cache.v.dtype), (0, 0, 0, 0))
-    new_cache = KVCache(k=newk, v=newv,
-                        length=jnp.asarray(s, jnp.int32))
+    new_len = (_row_lengths(lengths, b) if lengths is not None
+               else jnp.full((b,), s, jnp.int32))
+    new_cache = KVCache(k=newk, v=newv, length=new_len)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return y, new_cache
 
@@ -430,12 +465,13 @@ def decode_attention_token(p: Params, x: jnp.ndarray, cfg: AttnConfig,
     16 KB token write.
     """
     b = x.shape[0]
-    positions = jnp.broadcast_to(jnp.asarray(length)[None], (b, 1))
+    length = _row_lengths(length, b)                  # [B] per-row positions
+    positions = length[:, None]
     q, k, v = _project_qkv(p, x, cfg, positions, positions3)
     smax = k_cache.shape[1]
     s_c = _gqa_scores(q, k_cache.astype(q.dtype)).astype(jnp.float32)
-    valid = jnp.arange(smax) < length                 # strictly the past
-    s_c = jnp.where(valid[None, None, None, None, :], s_c, NEG_INF)
+    valid = jnp.arange(smax)[None, :] < length[:, None]   # strictly the past
+    s_c = jnp.where(valid[:, None, None, None, :], s_c, NEG_INF)
     s_t = _gqa_scores(q, k.astype(q.dtype)).astype(jnp.float32)  # [.,1,1]
     m = jnp.maximum(jnp.max(s_c, -1, keepdims=True), s_t)
     p_c = jnp.exp(s_c - m)
@@ -457,25 +493,28 @@ def decode_attention(p: Params, x: jnp.ndarray, cfg: AttnConfig,
                      cache: KVCache,
                      positions3: Optional[jnp.ndarray] = None
                      ) -> Tuple[jnp.ndarray, KVCache]:
-    """One-token decode: x [B,1,D], cache holds `length` past tokens.
+    """One-token decode: x [B,1,D], cache row b holds `length[b]` past tokens.
 
-    The new token's K/V are written at index `length`; attention spans the
-    whole cache buffer with positions >= length masked out (so a
-    sequence-sharded cache needs no gather — masking + all-reduce softmax).
+    The new token's K/V are scatter-written at each row's own index
+    `length[b]` (rows advance independently — continuous batching);
+    attention spans the whole cache buffer with positions > length[b]
+    masked out per row (so a sequence-sharded cache needs no gather —
+    masking + all-reduce softmax).
     """
     b = x.shape[0]
-    positions = jnp.broadcast_to(cache.length[None], (b, 1))
+    length = _row_lengths(cache.length, b)
+    positions = length[:, None]
     q, k, v = _project_qkv(p, x, cfg, positions, positions3)
-    newk = jax.lax.dynamic_update_slice(
-        cache.k, k.astype(cache.k.dtype), (0, cache.length, 0, 0))
-    newv = jax.lax.dynamic_update_slice(
-        cache.v, v.astype(cache.v.dtype), (0, cache.length, 0, 0))
+    rows = jnp.arange(b)
+    newk = cache.k.at[rows, length].set(k[:, 0].astype(cache.k.dtype))
+    newv = cache.v.at[rows, length].set(v[:, 0].astype(cache.v.dtype))
 
     scores = _gqa_scores(q, newk.astype(q.dtype)).astype(jnp.float32)
     smax = newk.shape[1]
-    valid = jnp.arange(smax) <= cache.length          # includes the new token
-    scores = jnp.where(valid[None, None, None, None, :], scores, NEG_INF)
+    valid = (jnp.arange(smax)[None, :]
+             <= length[:, None])                      # includes the new token
+    scores = jnp.where(valid[:, None, None, None, :], scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = _gqa_out(probs, newv.astype(q.dtype))
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
-    return y, KVCache(k=newk, v=newv, length=cache.length + 1)
+    return y, KVCache(k=newk, v=newv, length=length + 1)

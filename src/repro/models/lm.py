@@ -416,14 +416,28 @@ class LM:
                 return ("layers", "batch", "heads", None)
             if x.ndim == 3:
                 return ("layers", "batch", None)
+            if x.ndim == 2:                 # stacked per-row cache lengths
+                return ("layers", "batch")
             return tuple([None] * x.ndim)
         return jax.tree.map(spec_for, state)
 
     def prefill(self, p: Params, batch: Batch, state: Any
                 ) -> Tuple[jnp.ndarray, Any]:
-        """Process the prompt; returns (last-token logits [B,V], state)."""
+        """Process the prompt; returns (last-token logits [B,V], state).
+
+        ``batch["lengths"]`` [B] (optional) marks each row's true prompt
+        length inside right-padded ``tokens``: attention-cache families mask
+        pad keys out of every softmax, record per-row cache lengths, and the
+        returned logits are each row's LAST REAL token's — ragged prompts
+        batch exactly.  Recurrent-state families (xlstm, hybrid) cannot
+        mask a pad out of an already-updated running state, so they keep the
+        equal-length-wave semantics (serve equal lengths, or admit rows one
+        at a time through the continuous-batching scheduler, which prefills
+        each prompt at its exact length).
+        """
         cfg, feats = self.cfg, self.features
         tokens = batch["tokens"]
+        lengths = batch.get("lengths")
         x = self._embed(p, tokens, batch.get("patch_embeds"))
         fam = cfg.family
         if fam in ("dense", "moe", "vlm"):
@@ -432,7 +446,8 @@ class LM:
             x, new_caches = tf_mod.apply_stack_decode(
                 p["blocks"], x, bc, state["caches"], feats,
                 rules=self.rules, mesh=self.mesh, positions3=pos3,
-                block_fn=functools.partial(tf_mod.apply_block_prefill))
+                block_fn=functools.partial(tf_mod.apply_block_prefill,
+                                           lengths=lengths))
             new_state = {"caches": new_caches}
         elif fam == "xlstm":
             xc = cfg.xlstm_config()
@@ -455,7 +470,13 @@ class LM:
             x, new_state = self._hybrid_prefill(p, x, state)
         elif fam == "encdec":
             x, new_state = self._encdec_prefill(p, x, batch, state)
-        logits = self._head(p, x[:, -1:])[:, 0]
+        if lengths is not None and fam in ("dense", "moe", "vlm"):
+            # per-row last REAL token (pads are masked context, not input)
+            idx = jnp.maximum(lengths - 1, 0)[:, None, None]
+            x_last = jnp.take_along_axis(x, idx, axis=1)
+        else:
+            x_last = x[:, -1:]
+        logits = self._head(p, x_last)[:, 0]
         return logits, new_state
 
     def _hybrid_prefill(self, p, x, state):

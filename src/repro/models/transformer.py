@@ -134,10 +134,11 @@ def apply_block_decode(p: Params, x: jnp.ndarray, cfg: BlockConfig,
 
 def apply_block_prefill(p: Params, x: jnp.ndarray, cfg: BlockConfig,
                         cache: KVCache, *, rules=DEFAULT_RULES, mesh=None,
-                        positions3=None) -> Tuple[jnp.ndarray, KVCache]:
+                        positions3=None, lengths=None
+                        ) -> Tuple[jnp.ndarray, KVCache]:
     a, new_cache = attn_mod.prefill_into_cache(
         p["attn"], _norm(x, p["ln1"], cfg), cfg.attn, cache,
-        positions3=positions3)
+        positions3=positions3, lengths=lengths)
     h = x + a
     if cfg.mlp == "moe":
         cst = (lambda a, axes: constrain(a, axes, rules, mesh, soft=True))
@@ -226,9 +227,11 @@ def apply_stack_decode(stacked: Params, x: jnp.ndarray, cfg: BlockConfig,
     """
     if features.scan_layers and features.decode_inplace_cache \
             and block_fn is apply_block_decode:
-        length = (caches.length[0] if caches.length.ndim
-                  else caches.length)
+        b = x.shape[0]
+        length = attn_mod._row_lengths(
+            caches.length[0] if caches.length.ndim > 1 else caches.length, b)
         n = jax.tree.leaves(stacked)[0].shape[0]
+        rows = jnp.arange(b)
 
         def body(carry, scanned):
             h, kst, vst = carry
@@ -251,10 +254,9 @@ def apply_stack_decode(stacked: Params, x: jnp.ndarray, cfg: BlockConfig,
                            mp["w_up"].astype(h2.dtype),
                            mp["w_down"].astype(h2.dtype))
             y = h2 + m
-            kst = jax.lax.dynamic_update_slice(
-                kst, k_t.astype(kst.dtype)[None], (i, 0, length, 0, 0))
-            vst = jax.lax.dynamic_update_slice(
-                vst, v_t.astype(vst.dtype)[None], (i, 0, length, 0, 0))
+            # per-row scatter: row b's token lands at its own length[b]
+            kst = kst.at[i, rows, length].set(k_t[:, 0].astype(kst.dtype))
+            vst = vst.at[i, rows, length].set(v_t[:, 0].astype(vst.dtype))
             return (y, kst, vst), None
 
         (y, kst, vst), _ = jax.lax.scan(

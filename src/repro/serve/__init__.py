@@ -1,2 +1,2 @@
-from repro.serve.engine import (BatchScheduler, Engine, Request,  # noqa
-                                ServeConfig)
+from repro.serve.engine import (MASKED_FAMILIES, BatchScheduler,  # noqa
+                                Engine, Request, ServeConfig)

@@ -1,23 +1,47 @@
-"""Serving engine: batched prefill + decode with slot-based scheduling.
+"""Serving engine: on-device fused decode + true continuous batching.
 
-Two layers:
+The hot path runs at device speed.  Two layers:
 
-* :class:`Engine` — the jitted compute: batched ``prefill`` (padded prompts,
-  right-aligned masks) and ``decode_step`` with temperature/greedy sampling.
-  Works for every LM family (KV caches, recurrent states, enc-dec memories
-  all live behind ``lm.init_decode_state``).
-* :class:`BatchScheduler` — continuous-batching-lite: fixed decode slots;
-  finished sequences release their slot and queued requests take it over
-  (their prompt runs through a single-slot prefill into the shared state).
+* :class:`Engine` — the jitted compute.  ``generate()`` fuses
+  prefill -> [sample -> append -> eos-mask -> decode_step]* into a single
+  jitted program (``lax.while_loop`` with on-device greedy/categorical
+  sampling and per-row done masking), so one call is ONE dispatch and ONE
+  device->host sync regardless of how many tokens it decodes — the old
+  implementation round-tripped device->host once per token.  Ragged prompts
+  are first-class for attention-cache families: per-row prompt-length masks
+  keep pad keys out of every softmax and each row's cache advances at its
+  own position (``models/lm.py prefill(lengths=...)``).
+* :class:`BatchScheduler` — true continuous batching.  A slot table over
+  ONE shared decode state: decode runs in jitted multi-token *segments*
+  (``admission_chunk`` steps, decode state donated segment-to-segment so
+  buffers are reused, not churned); after each segment a single host sync
+  fetches the segment's tokens, finished rows release their slots
+  immediately, and queued requests prefill into the freed slots mid-flight
+  at their EXACT prompt length (single-row prefill, no padding — which is
+  also what makes recurrent-state families batch raggedly here).
 
-Sampling is deterministic given (seed, request id) — serving is replayable,
-the same philosophy as the data pipeline.
+Every device->host transfer goes through :meth:`Engine._fetch`, so
+``engine.host_syncs`` is an auditable counter — tests assert the O(1)
+bound and ``benchmarks/bench_serve.py`` reports it next to tokens/s.
+Instrumentation is LIKWID-style (``Engine.instrument``): event counts for
+the ``serve.decode`` / ``serve.prefill`` regions come from the compiled
+artifact (wrapper mode, zero overhead), wall-clock accumulates into the
+same regions via ``PerfCtr.region_timer``.
+
+``generate()`` is fully deterministic given (seed, prompts).  In the
+scheduler, greedy decoding (temperature 0, the default) is replayable
+per-request; with temperature > 0 one PRNG stream is shared across slots,
+so a request's samples depend on what it was co-scheduled with — the
+continuous-batching trade, stated here rather than hidden.
 """
 
 from __future__ import annotations
 
+import collections
+import contextlib
 import dataclasses
-from typing import Any, Dict, List, Optional, Sequence, Tuple
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,7 +49,18 @@ import numpy as np
 
 from repro.models.lm import LM
 
-__all__ = ["ServeConfig", "Engine", "BatchScheduler", "Request"]
+__all__ = ["ServeConfig", "Engine", "BatchScheduler", "Request",
+           "MASKED_FAMILIES"]
+
+# families whose decode state is an attention cache: pad keys can be masked
+# per row, so ragged prompts batch exactly.  Recurrent-state families
+# (xlstm, hybrid) cannot un-run a pad token through a running state; they
+# keep pads-as-context semantics in the static batched path and batch
+# raggedly through the scheduler's exact-length slot prefill instead.
+MASKED_FAMILIES = ("dense", "moe", "vlm")
+
+PREFILL_REGION = "serve.prefill"
+DECODE_REGION = "serve.decode"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,6 +70,7 @@ class ServeConfig:
     temperature: float = 0.0        # 0 -> greedy
     eos_token: int = -1             # -1 -> never stop early
     seed: int = 0
+    admission_chunk: int = 8        # decode steps between admission points
 
 
 @dataclasses.dataclass
@@ -43,21 +79,53 @@ class Request:
     prompt: List[int]
     max_new_tokens: int
     generated: List[int] = dataclasses.field(default_factory=list)
+    submit_time: float = 0.0        # set by BatchScheduler.submit
+    first_token_time: float = 0.0   # set when the first token reaches host
+    finished: bool = False          # set by the scheduler (eos or budget)
 
     @property
     def done(self) -> bool:
-        return len(self.generated) >= self.max_new_tokens
+        return self.finished or len(self.generated) >= self.max_new_tokens
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time-to-first-token (segment-granular), None until measured."""
+        if self.first_token_time and self.submit_time:
+            return self.first_token_time - self.submit_time
+        return None
 
 
 class Engine:
-    def __init__(self, lm: LM, params: Any, cfg: ServeConfig):
+    def __init__(self, lm: LM, params: Any, cfg: ServeConfig,
+                 perfctr=None):
         self.lm = lm
         self.params = params
         self.cfg = cfg
+        self.perfctr = perfctr          # optional repro.core.perfctr.PerfCtr
+        self.host_syncs = 0             # device->host transfers (audited)
+        self.fused_calls = 0            # fused-loop dispatches
         self._prefill = jax.jit(lm.prefill)
         self._decode = jax.jit(lm.decode_step)
+        # fused generate programs, keyed by static max_new_tokens
+        self._fused: Dict[int, Callable] = {}
+        # continuous-batching decode segments, keyed by static step count
+        self._segments: Dict[int, Callable] = {}
+        # slot prefill: init+prefill a single row in one jitted program
+        self._slot_prefill = jax.jit(self._slot_prefill_impl)
+        # slot merge: scatter a single-row state into the shared state;
+        # the big buffers are donated — admission rewrites one row in place
+        self._merge = jax.jit(self._merge_impl, donate_argnums=(0, 1))
 
     # -------------------------------------------------------------- helpers
+    def _fetch(self, tree):
+        """THE device->host sync point: every transfer is counted here."""
+        self.host_syncs += 1
+        return jax.device_get(tree)
+
+    def _region_timer(self, region: str):
+        return (self.perfctr.region_timer(region) if self.perfctr is not None
+                else contextlib.nullcontext())
+
     def _sample(self, logits: jnp.ndarray, rng) -> jnp.ndarray:
         if self.cfg.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1)
@@ -66,9 +134,8 @@ class Engine:
 
     def _pad_prompts(self, prompts: Sequence[Sequence[int]]
                      ) -> Tuple[np.ndarray, np.ndarray]:
-        """Left-pad is avoided: prompts are right-padded and the model's
-        causal mask makes pad positions inert; the last REAL token's logits
-        are selected per row."""
+        """Right-pad to the longest prompt; per-row true lengths ride along
+        (attention families mask pad keys out via batch["lengths"])."""
         maxlen = max(len(p) for p in prompts)
         toks = np.zeros((len(prompts), maxlen), np.int32)
         lens = np.array([len(p) for p in prompts], np.int32)
@@ -76,12 +143,94 @@ class Engine:
             toks[i, :len(p)] = p
         return toks, lens
 
+    # ------------------------------------------------- fused generate (jit)
+    def _make_fused(self, max_new: int) -> Callable:
+        """Build the single-dispatch generate program for a fixed budget.
+
+        prefill + the whole decode loop live in ONE jitted computation:
+        the loop body samples on device, records the token into a [B,T]
+        buffer, folds eos into a per-row done mask, and early-exits the
+        while_loop as soon as every row is done — zero host round-trips.
+        """
+        cfg = self.cfg
+        masked = self.lm.cfg.family in MASKED_FAMILIES
+
+        def fused(params, toks, lens, rng, extra):
+            b = toks.shape[0]
+            # size the cache to THIS call's worst case, not cfg.max_seq:
+            # every decode step streams the whole cache buffer, so capacity
+            # the call can't reach is pure wasted traffic (rounded up so
+            # nearby shapes share layouts)
+            need = toks.shape[1] + max_new
+            seq_cap = min(cfg.max_seq, -(-need // 32) * 32)
+            state = self.lm.init_decode_state(b, seq_cap)
+            batch = dict(extra, tokens=toks)
+            if masked:
+                batch["lengths"] = lens
+            logits, state = self.lm.prefill(params, batch, state)
+
+            def cond(c):
+                t, _rng, _logits, _state, _out, done, _n = c
+                return (t < max_new) & jnp.logical_not(done.all())
+
+            def body(c):
+                t, rng, logits, state, out, done, n = c
+                rng, sub = jax.random.split(rng)
+                nxt = self._sample(logits, sub).astype(jnp.int32)
+                emit = jnp.logical_not(done)
+                out = jax.lax.dynamic_update_slice(
+                    out, jnp.where(emit, nxt, 0)[:, None], (0, t))
+                n = n + emit.astype(jnp.int32)
+                if cfg.eos_token >= 0:
+                    done = done | (emit & (nxt == cfg.eos_token))
+                logits, state = self.lm.decode_step(params, nxt[:, None],
+                                                    state)
+                return (t + 1, rng, logits, state, out, done, n)
+
+            carry = (jnp.zeros((), jnp.int32), rng, logits, state,
+                     jnp.zeros((b, max_new), jnp.int32),
+                     jnp.zeros((b,), bool), jnp.zeros((b,), jnp.int32))
+            carry = jax.lax.while_loop(cond, body, carry)
+            return carry[4], carry[6]           # tokens [B,T], counts [B]
+
+        return jax.jit(fused)
+
     # ----------------------------------------------------------------- API
     def generate(self, prompts: Sequence[Sequence[int]],
                  max_new_tokens: int = 32,
                  extra_batch: Optional[Dict[str, np.ndarray]] = None
                  ) -> List[List[int]]:
-        """Static-batch generation (the examples/ and tests path)."""
+        """Static-batch generation: one dispatch, one host sync."""
+        cfg = self.cfg
+        toks, lens = self._pad_prompts(prompts)
+        if toks.shape[1] + max_new_tokens > cfg.max_seq:
+            raise ValueError(
+                f"prompt ({toks.shape[1]}) + max_new ({max_new_tokens}) "
+                f"exceeds max_seq ({cfg.max_seq})")
+        extra = ({k: jnp.asarray(v) for k, v in extra_batch.items()}
+                 if extra_batch else {})
+        fused = self._fused.get(max_new_tokens)
+        if fused is None:
+            fused = self._fused[max_new_tokens] = \
+                self._make_fused(max_new_tokens)
+        self.fused_calls += 1
+        with self._region_timer(DECODE_REGION):
+            out, n = fused(self.params, jnp.asarray(toks), jnp.asarray(lens),
+                           jax.random.PRNGKey(cfg.seed), extra)
+            out_np, n_np = self._fetch((out, n))    # the ONE sync
+        return [out_np[i, :n_np[i]].tolist() for i in range(len(prompts))]
+
+    def generate_reference(self, prompts: Sequence[Sequence[int]],
+                           max_new_tokens: int = 32,
+                           extra_batch: Optional[Dict[str, np.ndarray]] = None
+                           ) -> List[List[int]]:
+        """The pre-fusion wave-mode loop: one dispatch AND one host sync
+        per generated token, pads as ordinary context.
+
+        Kept verbatim as (a) the measured baseline for
+        ``benchmarks/bench_serve.py`` and (b) the semantic oracle the fused
+        loop's tests compare against on equal-length prompts.
+        """
         cfg = self.cfg
         toks, lens = self._pad_prompts(prompts)
         b = toks.shape[0]
@@ -90,17 +239,13 @@ class Engine:
         if extra_batch:
             batch.update({k: jnp.asarray(v) for k, v in extra_batch.items()})
         logits, state = self._prefill(self.params, batch, state)
-        # NOTE: prompts are padded to a common length and pad tokens (id 0)
-        # are ordinary context — a documented serving simplification; tests
-        # use equal-length waves.  Per-row attention masks / paged KV are
-        # listed as future work in DESIGN.md §9.
         rng = jax.random.PRNGKey(cfg.seed)
         out = [list() for _ in range(b)]
         done = np.zeros(b, bool)
         for t in range(max_new_tokens):
             rng, sub = jax.random.split(rng)
             nxt = self._sample(logits, sub)
-            nxt_np = np.asarray(nxt)
+            nxt_np = self._fetch(nxt)            # per-token sync (the point)
             for i in range(b):
                 if not done[i]:
                     out[i].append(int(nxt_np[i]))
@@ -111,33 +256,181 @@ class Engine:
             logits, state = self._decode(self.params, nxt[:, None], state)
         return out
 
+    # ------------------------------------- continuous-batching primitives
+    def _slot_prefill_impl(self, params, toks):
+        """Init + prefill ONE row at its exact prompt length (no padding)."""
+        state = self.lm.init_decode_state(1, self.cfg.max_seq)
+        return self.lm.prefill(params, {"tokens": toks}, state)
+
+    @staticmethod
+    def _merge_impl(state, logits_buf, row_state, row_logits, slot):
+        """Scatter a single-row (state, logits) into slot `slot`.
+
+        Every decode-state leaf is [layers, B, ...]; the row twin is
+        [layers, 1, ...] — one dynamic_update_slice along the batch axis
+        per leaf, with the big buffers donated (in-place admission).
+        """
+        merged = jax.tree.map(
+            lambda big, row: jax.lax.dynamic_update_slice_in_dim(
+                big, row.astype(big.dtype), slot, axis=1),
+            state, row_state)
+        logits_buf = jax.lax.dynamic_update_slice_in_dim(
+            logits_buf, row_logits.astype(logits_buf.dtype), slot, axis=0)
+        return merged, logits_buf
+
+    def prefill_slot(self, state, logits_buf, prompt: Sequence[int],
+                     slot: int):
+        """Admission point: prefill `prompt` into slot `slot` mid-flight."""
+        toks = jnp.asarray([list(prompt)], jnp.int32)
+        with self._region_timer(PREFILL_REGION):
+            row_logits, row_state = self._slot_prefill(self.params, toks)
+        return self._merge(state, logits_buf, row_state, row_logits,
+                           jnp.asarray(slot, jnp.int32))
+
+    def decode_segment(self, steps: int) -> Callable:
+        """The jitted `steps`-token decode over all slots.
+
+        ``lax.scan`` over the fused sample->decode body; decode state and
+        the logits buffer are DONATED, so segment-to-segment the cache
+        buffers alias instead of reallocating.  Returns
+        (tokens [B,steps], logits, state, rng).
+        """
+        fn = self._segments.get(steps)
+        if fn is None:
+            def seg(params, state, logits, rng):
+                def body(carry, _):
+                    logits, state, rng = carry
+                    rng, sub = jax.random.split(rng)
+                    nxt = self._sample(logits, sub).astype(jnp.int32)
+                    logits, state = self.lm.decode_step(params, nxt[:, None],
+                                                        state)
+                    return (logits, state, rng), nxt
+
+                (logits, state, rng), toks = jax.lax.scan(
+                    body, (logits, state, rng), None, length=steps)
+                return toks.T, logits, state, rng
+
+            fn = self._segments[steps] = jax.jit(seg, donate_argnums=(1, 2))
+        return fn
+
+    # ------------------------------------------------------ instrumentation
+    def instrument(self, perfctr, prompt_len: int = 16) -> None:
+        """Attach a PerfCtr and probe the serving regions (wrapper mode).
+
+        Event counts for ``serve.prefill`` / ``serve.decode`` are read from
+        the compiled artifacts against abstract inputs — the measured
+        programs are never executed (the paper's zero-overhead claim by
+        construction).  Wall-clock then accumulates into the same regions
+        on every ``generate()`` / scheduler segment via ``region_timer``.
+        """
+        self.perfctr = perfctr
+        cfg = self.cfg
+        b = cfg.batch_slots
+        params_s = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.params)
+        state_s = jax.eval_shape(
+            lambda: self.lm.init_decode_state(b, cfg.max_seq))
+        toks_s = jax.ShapeDtypeStruct((b, prompt_len), jnp.int32)
+        with perfctr.marker(PREFILL_REGION):
+            perfctr.probe(self.lm.prefill, params_s,
+                          {"tokens": toks_s}, state_s)
+        tok_s = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        with perfctr.marker(DECODE_REGION):
+            perfctr.probe(self.lm.decode_step, params_s, tok_s, state_s)
+
 
 class BatchScheduler:
-    """Continuous-batching-lite over an Engine's decode loop.
+    """True continuous batching over an Engine's shared decode state.
 
-    Serves a queue of Requests with ``batch_slots`` concurrent sequences.
-    A finished request frees its slot; the next queued request claims it
-    (prefilling via single-row decode replay into the shared state).  The
-    decode loop itself always runs the full batch — the TPU-friendly shape.
+    A slot table of ``batch_slots`` rows.  Decode runs in jitted
+    multi-token segments (``admission_chunk`` steps; never more than any
+    active row's remaining budget, so no token is generated past its
+    request's ``max_new_tokens``).  After each segment ONE host sync
+    fetches the segment's tokens; finished rows (eos or budget) release
+    their slots immediately and queued requests prefill into the freed
+    slots at their exact prompt length before the next segment — no
+    full-batch barrier, no wave drains.
     """
 
-    def __init__(self, engine: Engine):
+    def __init__(self, engine: Engine,
+                 admission_chunk: Optional[int] = None):
         self.engine = engine
-        self.queue: List[Request] = []
+        self.admission_chunk = (admission_chunk
+                                or engine.cfg.admission_chunk)
+        self.queue: collections.deque = collections.deque()
         self.completed: Dict[int, Request] = {}
+        self.metrics: Dict[str, float] = {"segments": 0, "admissions": 0,
+                                          "decode_steps": 0}
+        self.admission_log: List[Tuple[int, int]] = []   # (rid, slot)
 
     def submit(self, req: Request) -> None:
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"request {req.rid}: max_new_tokens must be >= 1, got "
+                f"{req.max_new_tokens}")
+        if len(req.prompt) + req.max_new_tokens > self.engine.cfg.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt ({len(req.prompt)}) + max_new "
+                f"({req.max_new_tokens}) exceeds max_seq "
+                f"({self.engine.cfg.max_seq})")
+        req.submit_time = time.perf_counter()
         self.queue.append(req)
 
     def run(self) -> Dict[int, Request]:
         eng, cfg = self.engine, self.engine.cfg
-        while self.queue:
-            wave = [self.queue.pop(0)
-                    for _ in range(min(cfg.batch_slots, len(self.queue)))]
-            outs = eng.generate([r.prompt for r in wave],
-                                max_new_tokens=max(r.max_new_tokens
-                                                   for r in wave))
-            for r, o in zip(wave, outs):
-                r.generated = o[:r.max_new_tokens]
-                self.completed[r.rid] = r
+        if not self.queue:
+            return self.completed
+        nslots = cfg.batch_slots
+        state = eng.lm.init_decode_state(nslots, cfg.max_seq)
+        logits = jnp.zeros((nslots, eng.lm.cfg.vocab), eng.lm.dtype)
+        rng = jax.random.PRNGKey(cfg.seed)
+        slots: List[Optional[Request]] = [None] * nslots
+        remaining = np.zeros(nslots, np.int64)
+
+        while self.queue or any(s is not None for s in slots):
+            # ---- admission: freed slots take queued requests mid-flight
+            for i in range(nslots):
+                if slots[i] is None and self.queue:
+                    req = self.queue.popleft()
+                    state, logits = eng.prefill_slot(state, logits,
+                                                     req.prompt, i)
+                    slots[i] = req
+                    remaining[i] = req.max_new_tokens
+                    self.metrics["admissions"] += 1
+                    self.admission_log.append((req.rid, i))
+
+            active = np.array([s is not None for s in slots])
+            # largest power of two that fits every active row's remaining
+            # budget: never over-generates past a request's max_new_tokens,
+            # and only log2(admission_chunk)+1 distinct segment programs
+            # ever compile
+            fit = int(min(self.admission_chunk, remaining[active].min()))
+            steps = 1 << (fit.bit_length() - 1)
+            with eng._region_timer(DECODE_REGION):
+                toks, logits, state, rng = eng.decode_segment(steps)(
+                    eng.params, state, logits, rng)
+                toks_np = eng._fetch(toks)       # ONE sync per segment
+            self.metrics["segments"] += 1
+            self.metrics["decode_steps"] += steps
+            now = time.perf_counter()
+
+            # ---- retire: finished rows release their slots immediately
+            for i in np.nonzero(active)[0]:
+                req = slots[i]
+                if not req.generated and not req.first_token_time:
+                    req.first_token_time = now
+                take = toks_np[i]
+                finished = False
+                if cfg.eos_token >= 0:
+                    hits = np.nonzero(take == cfg.eos_token)[0]
+                    if hits.size:
+                        take = take[:hits[0] + 1]
+                        finished = True
+                req.generated.extend(int(t) for t in take)
+                remaining[i] = req.max_new_tokens - len(req.generated)
+                if finished or remaining[i] <= 0:
+                    req.finished = True
+                    self.completed[req.rid] = req
+                    slots[i] = None
+                    remaining[i] = 0
         return self.completed

@@ -48,7 +48,8 @@ def test_prefill_then_decode_equals_full_forward():
     y_dec, cache = attn.decode_attention(p, x[:, s - 1:], cfg, cache)
     np.testing.assert_allclose(y_pre, full[:, :s - 1], rtol=1e-3, atol=1e-4)
     np.testing.assert_allclose(y_dec, full[:, s - 1:], rtol=1e-3, atol=1e-4)
-    assert int(cache.length) == s
+    assert cache.length.shape == (b,)          # per-row lengths
+    assert (np.asarray(cache.length) == s).all()
 
 
 def test_gqa_grouping_matches_repeated_kv():
