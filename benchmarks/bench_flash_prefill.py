@@ -1,0 +1,141 @@
+"""Flash prefill: dispatch impls + the session-cached block autotuner.
+
+The paper's loop applied to our own 32k-prefill hot spot: the Pallas flash
+kernel is now the dispatched prefill path (kernels/dispatch.py), so this
+bench (a) checks the kernel against the dense oracle on the serving shapes
+that used to be wrong (``sq != sk`` causal offsets, ragged ``kv_valid``),
+(b) wall-times the three named implementations on the same shape, and
+(c) runs the (bq, bk) block autotuner through ``ProfileSession.measure``
+twice — the second, warm sweep must do ZERO lowerings (the compile-cache
+acceptance bar), while reporting the chosen tiling and the per-candidate
+roofline scores.
+
+    PYTHONPATH=src python -m benchmarks.bench_flash_prefill --smoke --json BENCH_flash.json
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _shapes(smoke: bool):
+    if smoke:
+        return dict(b=2, h=4, kvh=2, sq=128, sk=192, dh=32)
+    return dict(b=2, h=8, kvh=4, sq=512, sk=768, dh=64)
+
+
+def run(csv, session=None, smoke=False):
+    from repro.core.artifact_cache import ArtifactCache
+    from repro.core.session import ProfileSession
+    from repro.kernels import autotune, dispatch, ref
+
+    if session is None:
+        session = ProfileSession()
+    sh = _shapes(smoke)
+    b, h, kvh, sq, sk, dh = (sh[k] for k in ("b", "h", "kvh", "sq", "sk",
+                                             "dh"))
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (b, sk, kvh, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (b, sk, kvh, dh), jnp.float32)
+    kv_len = jnp.asarray(np.random.default_rng(1).integers(
+        sk // 2, sk + 1, size=b), jnp.int32)
+    q_offset = sk - sq                     # prefill into an existing cache
+
+    # ---- correctness on the shapes the old kernel got wrong -------------
+    want = ref.flash_attention(q, k, v, causal=True, q_offset=q_offset,
+                               kv_valid=kv_len)
+    impls = ("full", "jnp_flash", "pallas_flash")
+    outs, walls = {}, {}
+    reps = 2 if smoke else 3
+    for name in impls:
+        fn = jax.jit(lambda q_, k_, v_, kl, nm=name: dispatch.run_attention(
+            nm, q_, k_, v_, q_offset=q_offset, causal=True, kv_len=kl))
+        outs[name] = fn(q, k, v, kv_len)
+        jax.block_until_ready(outs[name])          # compile outside timing
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(fn(q, k, v, kv_len))
+        walls[name] = (time.perf_counter() - t0) / reps
+    errs = {name: float(jnp.abs(outs[name] - want).max()) for name in impls}
+    print("== flash prefill parity (sq != sk causal offset + ragged KV) ==")
+    for name in impls:
+        print(f"{name:>14}: max|err| {errs[name]:.2e}   "
+              f"{walls[name]*1e6:10.1f} us/call")
+        assert errs[name] < 1e-4, (name, errs[name])
+
+    # ---- autotune: measured by our own session, warm rerun is free ------
+    cands = ((64, 64), (64, 128), (128, 128), (128, 256)) if smoke \
+        else autotune.DEFAULT_CANDIDATES
+    t0 = time.perf_counter()
+    rec = autotune.autotune_flash_blocks(
+        b=b, h=h, kvh=kvh, sq=sq, sk=sk, dh=dh, session=session,
+        candidates=cands)
+    t_cold = time.perf_counter() - t0
+    warm_sess = ProfileSession(cache=ArtifactCache(
+        session.cache.root, enabled=session.cache.enabled), chip=session.chip)
+    t0 = time.perf_counter()
+    autotune.autotune_flash_blocks(
+        b=b, h=h, kvh=kvh, sq=sq, sk=sk, dh=dh, session=warm_sess,
+        candidates=cands)
+    t_warm = time.perf_counter() - t0
+    print("== (bq, bk) autotune over ProfileSession ==")
+    for (bq_c, bk_c), score in sorted(rec.scores.items(),
+                                      key=lambda kv: kv[1]):
+        mark = " <- chosen" if (bq_c, bk_c) == (rec.bq, rec.bk) else ""
+        print(f"  bq={bq_c:<4d} bk={bk_c:<4d} roofline {score*1e6:9.3f} us"
+              f"{mark}")
+    print(f"cold sweep: {rec.lowerings} lowerings, {t_cold:.2f}s; "
+          f"warm rerun: {warm_sess.lowerings} lowerings, {t_warm:.2f}s")
+    if session.cache.enabled:
+        assert warm_sess.lowerings == 0, \
+            f"warm autotune re-lowered {warm_sess.lowerings} candidates"
+
+    csv.append(("flash_prefill_pallas", walls["pallas_flash"] * 1e6,
+                f"bq={rec.bq},bk={rec.bk},max_err={errs['pallas_flash']:.1e}"))
+    csv.append(("flash_prefill_jnp_flash", walls["jnp_flash"] * 1e6,
+                f"max_err={errs['jnp_flash']:.1e}"))
+    csv.append(("flash_autotune_warm_s", t_warm * 1e6,
+                f"lowerings_warm={warm_sess.lowerings},"
+                f"lowerings_cold={rec.lowerings}"))
+    return {
+        "shape": sh,
+        "impl_us": {n: walls[n] * 1e6 for n in impls},
+        "parity_max_err": errs,
+        "autotune": {
+            "bq": rec.bq, "bk": rec.bk, "key": rec.key,
+            "score_us": rec.score_s * 1e6,
+            "lowerings_cold": rec.lowerings,
+            "lowerings_warm": warm_sess.lowerings,
+            "candidates": {f"{bq_c}x{bk_c}": s
+                           for (bq_c, bk_c), s in rec.scores.items()},
+        },
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: tiny shapes, few reps")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the summary here (BENCH_flash.json)")
+    args = ap.parse_args(argv)
+    from repro.core.session import ProfileSession
+    csv = []
+    summary = run(csv, session=ProfileSession(), smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.2f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, **summary}, f, indent=1)
+        print(f"[bench_flash_prefill] wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

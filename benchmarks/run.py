@@ -20,9 +20,10 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_bandwidth_map, bench_jacobi_traffic,
-                        bench_marker_overhead, bench_perfctr, bench_serve,
-                        bench_stencil_pinning, bench_stream_pinning)
+from benchmarks import (bench_bandwidth_map, bench_flash_prefill,
+                        bench_jacobi_traffic, bench_marker_overhead,
+                        bench_perfctr, bench_serve, bench_stencil_pinning,
+                        bench_stream_pinning)
 
 BENCHES = {
     "perfctr": bench_perfctr,              # §II-A listing
@@ -32,6 +33,7 @@ BENCHES = {
     "marker_overhead": bench_marker_overhead,  # zero-overhead claim
     "bandwidth_map": bench_bandwidth_map,   # §VI future plans
     "serve": bench_serve,                   # measurement-driven serving loop
+    "flash_prefill": bench_flash_prefill,  # dispatched kernel + autotuner
 }
 
 

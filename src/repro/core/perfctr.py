@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import threading
 import time
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -161,15 +162,17 @@ class PerfCtr:
             print(ctr.report())
         """
         token = _ActiveRegion(self, region)
-        _REGION_STACK.append(token)
+        stack = _region_stack()
+        stack.append(token)
         try:
             yield token
         finally:
-            _REGION_STACK.pop()
+            stack.pop()
 
     def probe(self, fn: Callable, *args, **kwargs) -> Measurement:
         """Measure ``fn`` inside the innermost active marker region."""
-        region = _REGION_STACK[-1].name if _REGION_STACK else "default"
+        stack = _region_stack()
+        region = stack[-1].name if stack else "default"
         m = measure(fn, *args, region=region, chip=self.chip,
                     mesh=self.mesh, session=self.session, **kwargs)
         self._accumulate(m)
@@ -211,7 +214,13 @@ class PerfCtr:
         if m.region in self.regions:
             self.regions[m.region].accumulate(m)
         else:
-            self.regions[m.region] = m
+            # own a private copy: accumulate() mutates events/wall_times in
+            # place, and the caller (or a session cache) may still hold m
+            self.regions[m.region] = dataclasses.replace(
+                m,
+                events=EventCounts(counts=dict(m.events.counts),
+                                   collectives=list(m.events.collectives)),
+                wall_times=list(m.wall_times))
 
     # --------------------------------------------------------- multiplex mode
     def multiplex(self, step_fn: Callable[[], Any], *, groups: Sequence[str],
@@ -223,7 +232,15 @@ class PerfCtr:
         attributing wall-clock windows to each group round-robin — the
         paper's multiplexing, with the same caveat: *statistical*, only
         sensible for longer runs.  Returns {group: derived metrics}.
+
+        One untimed warmup call runs before the group cycle so the first
+        group's window never absorbs one-time jit compilation (which used
+        to skew the first frame by orders of magnitude).
         """
+        if steps_per_group < 1:
+            raise ValueError(
+                f"steps_per_group must be >= 1, got {steps_per_group}")
+        jax.block_until_ready(step_fn())     # untimed: compile + warm caches
         results: Dict[str, Dict[str, float]] = {}
         timings: Dict[str, List[float]] = {g: [] for g in groups}
         for _ in range(cycles):
@@ -260,4 +277,14 @@ class _ActiveRegion:
     name: str
 
 
-_REGION_STACK: List[_ActiveRegion] = []
+# Marker regions nest per THREAD: ProfileSession.sweep fans measurement
+# cells out across a thread pool, and a process-global stack would cross-
+# attribute one worker's probes to another worker's innermost marker.
+_TLS = threading.local()
+
+
+def _region_stack() -> List[_ActiveRegion]:
+    stack = getattr(_TLS, "stack", None)
+    if stack is None:
+        stack = _TLS.stack = []
+    return stack

@@ -56,14 +56,33 @@ __all__ = ["ProfileSession", "fingerprint_callable", "describe_abstract"]
 # key material
 # ---------------------------------------------------------------------------
 
+def _fingerprint_value(v: Any) -> str:
+    """Bounded, cross-process-stable description of one bound value."""
+    if hasattr(v, "shape") and hasattr(v, "dtype"):
+        return f"array[{tuple(v.shape)},{v.dtype}]"
+    if isinstance(v, functools.partial) or callable(v):
+        return fingerprint_callable(v)
+    return repr(v)[:200]
+
+
 def fingerprint_callable(fn: Callable) -> str:
     """Stable content fingerprint of a Python callable.
 
     Source text (dedented, hashed) + qualified name + bounded closure-cell
-    reprs.  Falls back to ``repr(fn)`` when source is unavailable (C
-    builtins, REPL lambdas) — unstable across processes but never a false
-    hit.
+    reprs.  ``functools.partial`` unwraps into (inner fingerprint, bound
+    args, bound keywords) — ``inspect.getsource`` raises on a partial, and
+    the old ``repr(fn)`` fallback embedded a memory address, so partial-
+    wrapped probes (our Pallas ``pallas_call`` wrappers, autotune
+    candidates) never hit the cache across processes.  Falls back to
+    ``repr(fn)`` when source is unavailable (C builtins, REPL lambdas) —
+    unstable across processes but never a false hit.
     """
+    if isinstance(fn, functools.partial):
+        inner = fingerprint_callable(fn.func)
+        args = ",".join(_fingerprint_value(a) for a in fn.args)
+        kws = ",".join(f"{k}={_fingerprint_value(v)}"
+                       for k, v in sorted((fn.keywords or {}).items()))
+        return f"partial({inner})({args})({kws})"
     base = f"{getattr(fn, '__module__', '?')}.{getattr(fn, '__qualname__', '?')}"
     try:
         src = textwrap.dedent(inspect.getsource(fn))
@@ -78,12 +97,7 @@ def fingerprint_callable(fn: Callable) -> str:
         except ValueError:          # empty cell
             cells.append("<empty>")
             continue
-        if hasattr(v, "shape") and hasattr(v, "dtype"):
-            cells.append(f"array[{tuple(v.shape)},{v.dtype}]")
-        elif callable(v):
-            cells.append(fingerprint_callable(v))
-        else:
-            cells.append(repr(v)[:200])
+        cells.append(_fingerprint_value(v))
     return f"{base}:{h}:[{','.join(cells)}]"
 
 

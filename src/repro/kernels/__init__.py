@@ -13,6 +13,10 @@ ssd_scan.py               mLSTM / Mamba2 chunked gated linear attention
 
 ops.py holds the jit'd layout adapters; ref.py the pure-jnp oracles every
 kernel is allclose-tested against (interpret=True on this CPU container).
+dispatch.py names the attention implementations (pallas_flash / jnp_flash /
+full) and picks one per backend/shape/env; autotune.py sweeps the flash
+kernel's (bq, bk) tilings through ProfileSession and feeds the winners
+back into dispatch.
 """
 
-from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels import dispatch, ops, ref  # noqa: F401

@@ -1,0 +1,163 @@
+"""Flash-attention block-size autotuner, measured by our own tools.
+
+The paper's workflow: don't guess a tiling, *measure* the candidates and
+keep the bookkeeping cheap enough to re-run on every shape.  This module
+sweeps ``(bq, bk)`` candidates for ``flash_attention_bhsd`` through
+:meth:`repro.core.session.ProfileSession.measure` — each candidate is
+lowered+compiled once, its event counts (FLOPs including padded-block
+waste, HBM bytes) extracted from the artifact, and scored with the chip's
+roofline.  Because every probe is a content-addressed cache entry, a warm
+re-run of the whole sweep does **zero lowerings** (asserted in
+``benchmarks/bench_flash_prefill.py`` and tests).
+
+Candidates that cannot fit the kernel's VMEM working set (q/k/v/out tiles
+double-buffered + the [bq,bk] score tile + scratch) are skipped before any
+XLA work.  Chosen tilings are recorded per (shape, dtype, causal, backend)
+in a process-wide table that :func:`repro.kernels.dispatch.run_attention`
+consults via :func:`best_blocks` — so tuning once makes every later
+dispatch of that shape use the winning tiling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hwinfo
+
+__all__ = ["DEFAULT_BLOCKS", "DEFAULT_CANDIDATES", "TuneRecord",
+           "vmem_footprint", "tune_key", "autotune_flash_blocks",
+           "best_blocks", "record_blocks", "clear_table"]
+
+DEFAULT_BLOCKS: Tuple[int, int] = (128, 256)
+
+#: (bq, bk) grid — multiples of the 8-sublane/128-lane layout quanta
+DEFAULT_CANDIDATES: Tuple[Tuple[int, int], ...] = (
+    (64, 64), (64, 128), (128, 128), (128, 256), (256, 128), (256, 256),
+    (512, 256),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneRecord:
+    """Outcome of one autotune sweep (all candidates + the winner)."""
+
+    key: str
+    bq: int
+    bk: int
+    score_s: float                       # roofline seconds of the winner
+    scores: Dict[Tuple[int, int], float]  # candidate -> score (inf = skipped)
+    lowerings: int                       # real compiles this sweep (0 = warm)
+
+
+# process-wide choice table consulted by dispatch.run_attention
+_TABLE: Dict[str, TuneRecord] = {}
+
+
+def vmem_footprint(bq: int, bk: int, dh: int, itemsize: int = 4) -> int:
+    """Bytes of VMEM the kernel needs for one (bq, bk) tile pair.
+
+    I/O tiles (q, k, v, out) are double-buffered by the pipeline; the
+    [bq,bk] score/probs tile plus the m/l/acc scratch rows live once.
+    """
+    io = 2 * (bq * dh + 2 * bk * dh + bq * dh) * itemsize
+    compute = (bq * bk + bq * dh + 2 * bq) * 4     # f32 scores + scratch
+    return io + compute
+
+
+def tune_key(*, b: int, h: int, kvh: int, sq: int, sk: int, dh: int,
+             dtype, causal: bool, backend: Optional[str] = None) -> str:
+    backend = backend or jax.default_backend()
+    return (f"b{b}h{h}kvh{kvh}sq{sq}sk{sk}dh{dh}"
+            f"-{jnp.dtype(dtype).name}-{'causal' if causal else 'full'}"
+            f"-{backend}")
+
+
+def _flash_probe(q, k, v, kv_valid, *, causal: bool, bq: int, bk: int,
+                 interpret: bool):
+    """Module-level probe target: partial-wrapping this per candidate gives
+    every (bq, bk) its own stable fingerprint (ProfileSession cache key)."""
+    from repro.kernels.flash_attention import flash_attention_bhsd
+    return flash_attention_bhsd(q, k, v, causal=causal, kv_valid=kv_valid,
+                                bq=bq, bk=bk, interpret=interpret)
+
+
+def _roofline_seconds(ev, chip: hwinfo.ChipSpec) -> float:
+    """max(compute term, memory term) from measured artifact events."""
+    t_c = ev["FLOPS_TOTAL"] / chip.peak_bf16_flops
+    t_m = ev["BYTES_ACCESSED"] / chip.hbm_bw
+    return max(t_c, t_m)
+
+
+def autotune_flash_blocks(*, b: int, h: int, kvh: int, sq: int, sk: int,
+                          dh: int, session, dtype=jnp.float32,
+                          causal: bool = True,
+                          candidates: Optional[Sequence[Tuple[int, int]]] = None,
+                          chip: Optional[hwinfo.ChipSpec] = None,
+                          backend: Optional[str] = None,
+                          interpret: Optional[bool] = None,
+                          vmem_fraction: float = 0.9) -> TuneRecord:
+    """Sweep (bq, bk) candidates for one attention shape; record the winner.
+
+    Every candidate goes through ``session.measure`` against abstract
+    inputs — lower+compile on a cold cache, pure disk lookup on a warm one
+    (``session.lowerings`` stays 0), never executed either way.
+    """
+    from repro.kernels.dispatch import default_interpret
+    chip = chip or getattr(session, "chip", None) or hwinfo.DEFAULT_CHIP
+    if interpret is None:
+        interpret = default_interpret(backend)
+    key = tune_key(b=b, h=h, kvh=kvh, sq=sq, sk=sk, dh=dh, dtype=dtype,
+                   causal=causal, backend=backend)
+    q_s = jax.ShapeDtypeStruct((b, h, sq, dh), dtype)
+    k_s = jax.ShapeDtypeStruct((b, kvh, sk, dh), dtype)
+    v_s = jax.ShapeDtypeStruct((b, kvh, sk, dh), dtype)
+    kvv_s = jax.ShapeDtypeStruct((b,), jnp.int32)
+    budget = chip.vmem_bytes * vmem_fraction
+    itemsize = jnp.dtype(dtype).itemsize
+
+    lowerings0 = session.lowerings
+    scores: Dict[Tuple[int, int], float] = {}
+    for bq, bk in (candidates or DEFAULT_CANDIDATES):
+        eff_bq, eff_bk = min(bq, sq), min(bk, sk)
+        if vmem_footprint(eff_bq, eff_bk, dh, itemsize) > budget:
+            scores[(bq, bk)] = float("inf")     # gated before any XLA work
+            continue
+        probe = functools.partial(_flash_probe, causal=causal, bq=bq, bk=bk,
+                                  interpret=interpret)
+        m = session.measure(probe, q_s, k_s, v_s, kvv_s,
+                            region=f"flash[{key}][bq{bq}bk{bk}]", chip=chip)
+        scores[(bq, bk)] = _roofline_seconds(m.events, chip)
+
+    finite = {c: s for c, s in scores.items() if s != float("inf")}
+    if not finite:
+        raise ValueError(f"no (bq, bk) candidate fits VMEM for {key}")
+    (bq, bk), score = min(finite.items(), key=lambda kv: (kv[1], kv[0]))
+    rec = TuneRecord(key=key, bq=bq, bk=bk, score_s=score, scores=scores,
+                     lowerings=session.lowerings - lowerings0)
+    _TABLE[key] = rec
+    return rec
+
+
+def best_blocks(*, b: int, h: int, kvh: int, sq: int, sk: int, dh: int,
+                dtype, causal: bool,
+                backend: Optional[str] = None) -> Tuple[int, int]:
+    """The tuned tiling for this shape if a sweep recorded one, else the
+    MXU-shaped default (dispatch calls this on every pallas_flash run)."""
+    rec = _TABLE.get(tune_key(b=b, h=h, kvh=kvh, sq=sq, sk=sk, dh=dh,
+                              dtype=dtype, causal=causal, backend=backend))
+    return (rec.bq, rec.bk) if rec is not None else DEFAULT_BLOCKS
+
+
+def record_blocks(key: str, bq: int, bk: int) -> None:
+    """Pin a tiling manually (e.g. replayed from a saved bench record)."""
+    _TABLE[key] = TuneRecord(key=key, bq=bq, bk=bk, score_s=float("nan"),
+                             scores={}, lowerings=0)
+
+
+def clear_table() -> None:
+    _TABLE.clear()

@@ -1,0 +1,166 @@
+"""Kernel dispatch layer: named attention implementations, one chooser.
+
+The prefill/attention hot path used to hardwire a pure-jnp "flash twin"
+while the real Pallas kernel sat unwired.  This module makes implementation
+choice a first-class, inspectable decision:
+
+==============  ============================================================
+name            implementation
+==============  ============================================================
+pallas_flash    kernels/flash_attention.py::flash_attention_bhsd (BSHD
+                transposed in/out; q_offset + per-row kv_valid in-kernel;
+                block sizes from kernels/autotune.py when not given).
+                Forward-only — serving prefill, not training.
+jnp_flash       models/attention.py::_flash_attention_offset — the online-
+                softmax oracle twin, with the flash custom-VJP (training-
+                safe) and the same ragged/offset semantics.
+full            models/attention.py naive/fused paths (scores materialized;
+                chunked over q above ``chunk_threshold``) — the paper-
+                faithful baseline and the small-shape fast path.
+==============  ============================================================
+
+Selection (:func:`select_attention_impl`) is static — backend, shapes and
+env only, never traced values — so it happens once at trace time:
+
+* ``REPRO_ATTN_IMPL`` env var or :func:`use_attention_impl` context
+  override everything (tests force ``pallas_flash`` on CPU this way);
+* grad paths (``differentiable=True``) stay on ``jnp_flash`` until a
+  backward kernel lands;
+* TPU backends take ``pallas_flash`` for MXU-shaped inputs;
+* interpret-mode hosts (CPU CI) take the jnp family — the Pallas
+  interpreter is a correctness tool, orders of magnitude off the hot path.
+
+All impls share one calling convention, model layout (BSHD)::
+
+    run_attention(name, q[B,Sq,H,Dh], k[B,Sk,KVH,Dh], v, *, q_offset=0,
+                  causal=True, kv_len=None, ...) -> [B,Sq,H,Dh]
+"""
+
+from __future__ import annotations
+
+import contextlib
+import os
+import threading
+from typing import Optional, Tuple
+
+import jax
+
+__all__ = ["ATTENTION_IMPLS", "default_interpret", "select_attention_impl",
+           "use_attention_impl", "attention_impl_override", "run_attention"]
+
+ATTENTION_IMPLS = ("pallas_flash", "jnp_flash", "full")
+
+_TLS = threading.local()
+
+
+def default_interpret(backend: Optional[str] = None) -> bool:
+    """Pallas interpret mode from backend detection (not a hardcoded True).
+
+    ``REPRO_KERNEL_COMPILE=1`` forces compiled, ``=0`` forces interpret;
+    otherwise TPU compiles and everything else interprets.
+    """
+    env = os.environ.get("REPRO_KERNEL_COMPILE")
+    if env is not None:
+        return env != "1"
+    return (backend or jax.default_backend()) != "tpu"
+
+
+@contextlib.contextmanager
+def use_attention_impl(name: Optional[str]):
+    """Force every attention dispatch traced inside the block to ``name``.
+
+    Thread-local (ProfileSession.sweep workers don't leak overrides into
+    each other); ``None`` is a no-op so callers can thread an optional
+    config field straight through.
+    """
+    if name is not None and name not in ATTENTION_IMPLS:
+        raise ValueError(f"unknown attention impl {name!r}; "
+                         f"choose from {ATTENTION_IMPLS}")
+    prev = getattr(_TLS, "attn_impl", None)
+    _TLS.attn_impl = name if name is not None else prev
+    try:
+        yield
+    finally:
+        _TLS.attn_impl = prev
+
+
+def attention_impl_override() -> Optional[str]:
+    """The active forced impl: context override, else $REPRO_ATTN_IMPL."""
+    ctx = getattr(_TLS, "attn_impl", None)
+    if ctx is not None:
+        return ctx
+    env = os.environ.get("REPRO_ATTN_IMPL")
+    if env:
+        if env not in ATTENTION_IMPLS:
+            raise ValueError(f"REPRO_ATTN_IMPL={env!r} not in "
+                             f"{ATTENTION_IMPLS}")
+        return env
+    return None
+
+
+def select_attention_impl(*, sq: int, sk: int, dh: int, causal: bool = True,
+                          backend: Optional[str] = None,
+                          flash_min_seq: Optional[int] = None,
+                          differentiable: bool = False) -> str:
+    """Pick an implementation name from STATIC facts only (trace-time).
+
+    ``flash_min_seq``: on jnp backends, q lengths above it use the online-
+    softmax twin instead of materializing [.,Sq,Sk] (callers pass their
+    ``chunk_threshold``).  ``differentiable=True`` pins the flash custom-VJP
+    twin — the Pallas kernel is forward-only.  An override (env/context)
+    beats every heuristic, including ``differentiable``.
+    """
+    del sk, causal                  # part of the contract, unused for now
+    forced = attention_impl_override()
+    if forced is not None:
+        return forced
+    if differentiable:
+        return "jnp_flash"
+    backend = backend or jax.default_backend()
+    if backend == "tpu":
+        # MXU-shaped work only; degenerate shapes stay on fused XLA ops
+        return "pallas_flash" if (sq >= 8 and dh % 8 == 0) else "full"
+    if flash_min_seq is not None and sq > flash_min_seq:
+        return "jnp_flash"
+    return "full"
+
+
+def run_attention(name: str, q, k, v, *, q_offset=0, causal: bool = True,
+                  kv_len=None, softmax_mode: str = "naive",
+                  chunk_size: int = 512, chunk_threshold: int = 2048,
+                  blocks: Optional[Tuple[int, int]] = None,
+                  interpret: Optional[bool] = None):
+    """Run impl ``name`` in model layout (q [B,Sq,H,Dh], k/v [B,Sk,KVH,Dh]).
+
+    ``kv_len`` (scalar or [B], may be traced) masks right-padded/ragged
+    keys; ``q_offset`` (scalar, may be traced) positions query 0 on the key
+    axis.  ``softmax_mode``/``chunk_*`` parameterize the ``full`` impl;
+    ``blocks``/``interpret`` the ``pallas_flash`` impl.
+    """
+    if name == "pallas_flash":
+        from repro.kernels import autotune, ops
+        b, sq, h, dh = q.shape
+        bq, bk = blocks or autotune.best_blocks(
+            b=b, h=h, kvh=k.shape[2], sq=sq, sk=k.shape[1], dh=dh,
+            dtype=q.dtype, causal=causal)
+        # ops.flash_attention owns the BSHD<->BHSD layout contract
+        return ops.flash_attention(q, k, v, causal=causal,
+                                   q_offset=q_offset, kv_valid=kv_len,
+                                   bq=bq, bk=bk, interpret=interpret)
+    if name == "jnp_flash":
+        from repro.models.attention import _flash_attention_offset
+        return _flash_attention_offset(q, k, v, q_offset, causal,
+                                       kv_len=kv_len)
+    if name == "full":
+        from repro.models import attention as attn_mod
+        mode = "naive" if softmax_mode == "kernel" else softmax_mode
+        # the q-chunked scan derives its own offsets from 0, so it only
+        # substitutes for the flat path when q really starts at 0
+        if (q.shape[1] > chunk_threshold
+                and isinstance(q_offset, int) and q_offset == 0):
+            return attn_mod._chunked_attention(q, k, v, chunk_size, causal,
+                                               mode, kv_len=kv_len)
+        return attn_mod._full_attention_offset(q, k, v, q_offset, causal,
+                                               mode, kv_len=kv_len)
+    raise ValueError(f"unknown attention impl {name!r}; "
+                     f"choose from {ATTENTION_IMPLS}")

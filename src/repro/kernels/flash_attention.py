@@ -5,14 +5,28 @@ kv-block dimension innermost: running max / denominator / accumulator live
 in VMEM scratch across kv iterations, so only [bq,dh] + [bk,dh] tiles are
 resident — the 32k-prefill hot-spot kernel.
 
-Tiling: bq/bk default 128/256 — both multiples of the 128-lane MXU minor
-dim; the [bq,bk] score tile maps onto MXU matmuls directly.  Causal
-skipping masks per-element (block-level early-exit is a recorded §Perf
-candidate).  GQA is expressed in the k/v index_maps (q head h reads kv head
-h // group) — no KV repetition is materialized.
+Production-correct for serving, not just the square self-attention case:
 
-Layout contract: BHSD (wrappers in ops.py transpose from the model's BSHD).
-Oracle: kernels/ref.py::flash_attention.
+* ``q_offset`` — query positions start at an arbitrary offset into the key
+  axis (a scalar in SMEM, so cached-prefill / multi-token decode segments
+  where ``sq != sk`` get an exact causal mask instead of a wrong one);
+* ``kv_valid`` — per-batch-row valid KV length (``[B]`` in SMEM): ragged /
+  right-padded KV is masked *inside* the kernel for both causal and
+  non-causal attention (the old code asserted non-causal ragged away);
+* dead kv-blocks (entirely above the causal diagonal, or entirely past
+  this row's ``kv_valid``) skip their matmuls via ``pl.when`` — the
+  block-level early-exit that used to be a recorded §Perf candidate;
+* ``interpret`` defaults from backend detection (`dispatch.default_interpret`)
+  instead of a hardcoded ``True``.
+
+Tiling: bq/bk default 128/256 — both multiples of the 128-lane MXU minor
+dim; the [bq,bk] score tile maps onto MXU matmuls directly.  GQA is
+expressed in the k/v index_maps (q head h reads kv head h // group) — no KV
+repetition is materialized.  `kernels/autotune.py` sweeps (bq,bk) through
+ProfileSession and feeds the chosen tiling back in.
+
+Layout contract: BHSD (wrappers in ops.py / dispatch.py transpose from the
+model's BSHD).  Oracle: kernels/ref.py::flash_attention.
 """
 
 from __future__ import annotations
@@ -29,8 +43,10 @@ __all__ = ["flash_attention_bhsd"]
 NEG_INF = -2.0e38
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+def _flash_kernel(qoff_ref, kvv_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *,
                   scale: float, bq: int, bk: int, causal: bool):
+    b = pl.program_id(0)          # batch row (kv_valid is per-row)
     i = pl.program_id(2)          # q block
     j = pl.program_id(3)          # kv block (innermost, sequential)
     nj = pl.num_programs(3)
@@ -41,22 +57,40 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[...].astype(jnp.float32)            # [bq, dh]
-    k = k_ref[...].astype(jnp.float32)            # [bk, dh]
-    v = v_ref[...].astype(jnp.float32)            # [bk, dh]
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # [bq,bk]
-    if causal:
-        qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-        s = jnp.where(kpos <= qpos, s, NEG_INF)
+    q_offset = qoff_ref[0]        # SMEM scalar: first query's key position
+    kv_valid = kvv_ref[b]         # SMEM: this row's real KV length
 
-    m_prev = m_ref[...]                           # [bq, 1]
-    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-    alpha = jnp.exp(m_prev - m_new)
-    p = jnp.exp(s - m_new)                        # [bq, bk]
-    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
-    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(p, v)
-    m_ref[...] = m_new
+    # block-level early-exit: a kv block is dead when it starts past this
+    # row's valid keys, or (causal) past the last query position of this q
+    # block — dead blocks skip both MXU matmuls entirely.
+    live = j * bk < kv_valid
+    if causal:
+        live = live & (j * bk <= q_offset + (i + 1) * bq - 1)
+
+    @pl.when(live)
+    def _accumulate():
+        q = q_ref[...].astype(jnp.float32)            # [bq, dh]
+        k = k_ref[...].astype(jnp.float32)            # [bk, dh]
+        v = v_ref[...].astype(jnp.float32)            # [bk, dh]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        ok = kpos < kv_valid                          # ragged/padded KV
+        if causal:
+            qpos = (q_offset + i * bq
+                    + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0))
+            ok = ok & (kpos <= qpos)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_ref[...]                           # [bq, 1]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                        # [bq, bk]
+        # rows with no valid key yet have m_new == NEG_INF and p == 1
+        # everywhere; zero them so fully-masked rows output 0, not garbage
+        p = jnp.where(ok, p, 0.0)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(p, v)
+        m_ref[...] = m_new
 
     @pl.when(j == nj - 1)
     def _finish():
@@ -67,12 +101,22 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
                                              "interpret"))
 def flash_attention_bhsd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
-                         causal: bool = True, bq: int = 128, bk: int = 256,
-                         interpret: bool = True) -> jnp.ndarray:
+                         causal: bool = True, q_offset=0, kv_valid=None,
+                         bq: int = 128, bk: int = 256,
+                         interpret: bool | None = None) -> jnp.ndarray:
     """q: [B,H,Sq,Dh]; k,v: [B,KVH,Sk,Dh] -> out [B,H,Sq,Dh].
 
-    Sq/Sk are padded to block multiples; GQA via index maps (H % KVH == 0).
+    ``q_offset`` (scalar, may be traced) is the key position of query 0 —
+    for prefill into an existing cache pass ``kv_len - sq``.  ``kv_valid``
+    (scalar or ``[B]``, may be traced) is each row's real KV length; keys at
+    or past it never receive weight (causal or not), so right-padded ragged
+    KV needs no block alignment.  Sq/Sk are padded to block multiples; GQA
+    via index maps (H % KVH == 0).  ``interpret=None`` resolves through
+    backend detection (kernels/dispatch.py) instead of assuming interpret.
     """
+    if interpret is None:
+        from repro.kernels.dispatch import default_interpret
+        interpret = default_interpret()
     b, h, sq, dh = q.shape
     kvh, sk = k.shape[1], k.shape[2]
     assert h % kvh == 0, (h, kvh)
@@ -83,21 +127,24 @@ def flash_attention_bhsd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     if pq:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
     if pk:
-        # padded k rows sit at positions > any causal qpos -> masked out;
-        # for non-causal, pad with NEG_INF-scoring zeros is wrong, so mask
-        # via kpos < sk is folded into the causal mask only.  Non-causal
-        # callers must pass block-aligned sk (asserted).
-        assert causal, "non-causal flash requires sk % bk == 0"
+        # padded k rows sit at kpos >= sk >= kv_valid -> masked in-kernel
+        # for causal AND non-causal (no block-alignment assert anymore)
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
     nq, nk = q.shape[2] // bq, k.shape[2] // bk
     scale = 1.0 / (dh ** 0.5)
+
+    qoff = jnp.reshape(jnp.asarray(q_offset, jnp.int32), (1,))
+    kvv = (jnp.full((b,), sk, jnp.int32) if kv_valid is None
+           else jnp.broadcast_to(jnp.asarray(kv_valid, jnp.int32), (b,)))
 
     out = pl.pallas_call(
         functools.partial(_flash_kernel, scale=scale, bq=bq, bk=bk,
                           causal=causal),
         grid=(b, h, nq, nk),
         in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # q_offset [1]
+            pl.BlockSpec(memory_space=pltpu.SMEM),   # kv_valid [B]
             pl.BlockSpec((None, None, bq, dh),
                          lambda b_, h_, i, j: (b_, h_, i, 0)),
             pl.BlockSpec((None, None, bk, dh),
@@ -114,5 +161,5 @@ def flash_attention_bhsd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
             pltpu.VMEM((bq, dh), jnp.float32),   # output accumulator
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(qoff, kvv, q, k, v)
     return out[:, :, :sq]

@@ -30,19 +30,26 @@ __all__ = ["INTERPRET", "flash_attention", "ssd_scan",
            "stream_triad", "jacobi7_naive", "jacobi7_wavefront"]
 
 #: interpret-mode default: CPU container -> True; flip on real TPU.
+#: (kept for back-compat; the flash path now resolves through
+#: dispatch.default_interpret, which also detects the backend)
 INTERPRET = os.environ.get("REPRO_KERNEL_COMPILE", "0") != "1"
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
-                    causal: bool = True, bq: int = 128, bk: int = 256,
+                    causal: bool = True, q_offset=0, kv_valid=None,
+                    bq: int = 128, bk: int = 256,
                     interpret: bool | None = None) -> jnp.ndarray:
-    """BSHD layout: q [B,S,H,Dh]; k,v [B,S,KVH,Dh] -> [B,S,H,Dh]."""
-    itp = INTERPRET if interpret is None else interpret
+    """BSHD layout: q [B,Sq,H,Dh]; k,v [B,Sk,KVH,Dh] -> [B,Sq,H,Dh].
+
+    ``q_offset``/``kv_valid`` as in :func:`flash_attention_bhsd` (cached
+    prefill offsets + ragged KV); ``interpret=None`` -> backend detection.
+    """
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
-    out = flash_attention_bhsd(qt, kt, vt, causal=causal, bq=bq, bk=bk,
-                               interpret=itp)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, q_offset=q_offset,
+                               kv_valid=kv_valid, bq=bq, bk=bk,
+                               interpret=interpret)
     return out.transpose(0, 2, 1, 3)
 
 

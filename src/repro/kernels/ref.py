@@ -51,19 +51,34 @@ def jacobi7_valid(x: jnp.ndarray, sweeps: int = 1,
 
 
 def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
-                    causal: bool = True) -> jnp.ndarray:
-    """Causal GQA attention.  q: [B,Sq,H,Dh]; k,v: [B,Sk,KVH,Dh]."""
+                    causal: bool = True, q_offset: int = 0,
+                    kv_valid=None) -> jnp.ndarray:
+    """GQA attention oracle.  q: [B,Sq,H,Dh]; k,v: [B,Sk,KVH,Dh].
+
+    ``q_offset`` places query i at key position ``i + q_offset`` (cached
+    prefill / decode segments where Sq != Sk); ``kv_valid`` (scalar or [B])
+    masks keys at or past each row's valid KV length.  Rows with no valid
+    key at all (kv_valid == 0) output exactly 0 — the kernel contract.
+    """
     b, sq, h, dh = q.shape
+    sk = k.shape[1]
     kvh = k.shape[2]
     g = h // kvh
     qg = q.reshape(b, sq, kvh, g, dh)
     scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
     scores = scores / np.sqrt(dh)
+    ok = jnp.ones((b, 1, 1, sq, sk), bool)
     if causal:
-        sk = k.shape[1]
-        mask = jnp.arange(sk)[None, :] <= jnp.arange(sq)[:, None]
-        scores = jnp.where(mask[None, None, None], scores, -2.0e38)
-    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+        mask = (jnp.arange(sk)[None, :]
+                <= (jnp.arange(sq) + q_offset)[:, None])
+        ok = ok & mask[None, None, None]
+    if kv_valid is not None:
+        kv_valid = jnp.broadcast_to(jnp.asarray(kv_valid, jnp.int32), (b,))
+        ok = ok & (jnp.arange(sk)[None, :]
+                   < kv_valid[:, None])[:, None, None, None, :]
+    scores = jnp.where(ok, scores, -2.0e38)
+    probs = jax.nn.softmax(scores, axis=-1)
+    probs = jnp.where(ok.any(-1, keepdims=True), probs, 0.0).astype(q.dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
     return out.reshape(b, sq, h, dh)
 

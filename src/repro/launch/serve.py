@@ -29,6 +29,10 @@ def main(argv=None) -> int:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--admission-chunk", type=int, default=8,
                     help="decode steps between admission points")
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["pallas_flash", "jnp_flash", "full"],
+                    help="pin the prefill attention impl (default: "
+                         "kernels/dispatch.py picks by backend/shape)")
     ap.add_argument("--instrument", action="store_true",
                     help="probe serve regions through PerfCtr and report")
     ap.add_argument("--ckpt-dir", default=None)
@@ -58,7 +62,10 @@ def main(argv=None) -> int:
     eng = Engine(lm, params, ServeConfig(
         max_seq=args.max_seq, batch_slots=args.slots,
         temperature=args.temperature,
-        admission_chunk=args.admission_chunk))
+        admission_chunk=args.admission_chunk,
+        attn_impl=args.attn_impl))
+    if args.attn_impl:
+        print(f"[serve] prefill attention pinned to {args.attn_impl}")
     ctr = None
     if args.instrument:
         from repro.core.perfctr import PerfCtr

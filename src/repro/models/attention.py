@@ -171,13 +171,18 @@ def _kv_len_mask(kv_len, sk: int) -> jnp.ndarray:
 def _full_attention_offset(qc, k, v, q_offset, causal: bool = True,
                            softmax_mode: str = "naive",
                            kv_len=None) -> jnp.ndarray:
-    if softmax_mode == "fused" or (softmax_mode == "kernel"
-                                   and kv_len is not None):
-        # the flash twin keeps its per-tile bias row-independent; ragged
-        # prompts route through the fused path (same traffic class)
+    if softmax_mode == "fused":
         return _fused_attention_offset(qc, k, v, q_offset, causal, kv_len)
     if softmax_mode == "kernel":
-        return _flash_attention_offset(qc, k, v, q_offset, causal)
+        # dispatch layer decides which kernel family runs; the grad-safe
+        # flash twin is the default (the Pallas kernel is forward-only),
+        # env/context overrides force a specific impl
+        from repro.kernels import dispatch
+        impl = dispatch.select_attention_impl(
+            sq=qc.shape[1], sk=k.shape[1], dh=qc.shape[-1], causal=causal,
+            differentiable=True)
+        return dispatch.run_attention(impl, qc, k, v, q_offset=q_offset,
+                                      causal=causal, kv_len=kv_len)
     sq, sk = qc.shape[1], k.shape[1]
     scores = _gqa_scores(qc, k).astype(jnp.float32)
     if causal:
@@ -241,20 +246,22 @@ def _fused_attention_offset(qc, k, v, q_offset, causal: bool = True,
     return out.astype(qc.dtype).reshape(b, sq, h, v.shape[-1])
 
 
-def _tile_bias(qpos, kpos, causal: bool, sk_valid: int) -> jnp.ndarray:
-    ok = kpos[None, :] < sk_valid                 # mask k-padding
+def _tile_bias(qpos, kpos, causal: bool, kv_len) -> jnp.ndarray:
+    """Additive tile bias [B,1,1,sq|1,bk]: per-row KV validity (ragged /
+    padded keys) folded together with the causal offset mask."""
+    ok = (kpos[None, :] < kv_len[:, None])[:, None, None, None, :]
     if causal:
-        ok = ok & (kpos[None, :] <= qpos[:, None])
-    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)[None, None, None]
+        ok = ok & (kpos[None, :] <= qpos[:, None])[None, None, None]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
 
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
-def _flash_core(qs, k, v, qpos, causal: bool, k_chunk: int, sk_valid: int):
-    out, _ = _flash_fwd_loop(qs, k, v, qpos, causal, k_chunk, sk_valid)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def _flash_core(qs, k, v, qpos, kv_len, causal: bool, k_chunk: int):
+    out, _ = _flash_fwd_loop(qs, k, v, qpos, kv_len, causal, k_chunk)
     return out
 
 
-def _flash_fwd_loop(qs, k, v, qpos, causal, k_chunk, sk_valid):
+def _flash_fwd_loop(qs, k, v, qpos, kv_len, causal, k_chunk):
     """Online-softmax forward: returns (out [b,kvh,g,sq,dh], L [.,sq])."""
     b, sq, kvh, g, dh = qs.shape
     nk = k.shape[1] // k_chunk
@@ -268,10 +275,14 @@ def _flash_fwd_loop(qs, k, v, qpos, causal, k_chunk, sk_valid):
             s = jnp.einsum("bqkgd,bskd->bkgqs", qs, kc,
                            preferred_element_type=jnp.float32)
             s = s + _tile_bias(qpos, i * k_chunk + jnp.arange(k_chunk),
-                               causal, sk_valid)
+                               causal, kv_len)
             m_new = jnp.maximum(m, jnp.max(s, axis=-1))
             alpha = jnp.exp(m - m_new)
             p = jnp.exp(s - m_new[..., None])
+            # fully-masked rows (kv_len == 0) carry m_new == NEG_INF and
+            # p == 1 everywhere; zero them so such rows output 0 exactly
+            # (matches the Pallas kernel), instead of a mean over v
+            p = jnp.where(s <= NEG_INF * 0.5, 0.0, p)
             l = l * alpha + jnp.sum(p, axis=-1)
             pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(qs.dtype), vc,
                             preferred_element_type=jnp.float32)
@@ -289,17 +300,17 @@ def _flash_fwd_loop(qs, k, v, qpos, causal, k_chunk, sk_valid):
     return out, lse
 
 
-def _flash_fwd(qs, k, v, qpos, causal, k_chunk, sk_valid):
-    out, lse = _flash_fwd_loop(qs, k, v, qpos, causal, k_chunk, sk_valid)
-    return out, (qs, k, v, qpos, out, lse)
+def _flash_fwd(qs, k, v, qpos, kv_len, causal, k_chunk):
+    out, lse = _flash_fwd_loop(qs, k, v, qpos, kv_len, causal, k_chunk)
+    return out, (qs, k, v, qpos, kv_len, out, lse)
 
 
-def _flash_bwd(causal, k_chunk, sk_valid, res, dout):
+def _flash_bwd(causal, k_chunk, res, dout):
     """Flash backward: per-tile recompute of p = exp(s - lse); never saves
     the [.,Sq,Sk] tensors (exactly what the Pallas bwd kernel does).
 
     Layouts: out/dout are [b,kvh,g,sq,dh]; qs is [b,sq,kvh,g,dh]."""
-    qs, k, v, qpos, out, lse = res
+    qs, k, v, qpos, kv_len, out, lse = res
     b, sq, kvh, g, dh = qs.shape
     nk = k.shape[1] // k_chunk
     with jax.named_scope("vmem_kernel_flash_bwd"):
@@ -315,8 +326,9 @@ def _flash_bwd(causal, k_chunk, sk_valid, res, dout):
             s = jnp.einsum("bqkgd,bskd->bkgqs", qs, kc,
                            preferred_element_type=jnp.float32)
             s = s + _tile_bias(qpos, i * k_chunk + jnp.arange(k_chunk),
-                               causal, sk_valid)
+                               causal, kv_len)
             p = jnp.exp(s - lse[..., None])                  # normalized
+            p = jnp.where(s <= NEG_INF * 0.5, 0.0, p)
             dp = jnp.einsum("bkgqd,bskd->bkgqs", dout32, vc)
             dv_c = jnp.einsum("bkgqs,bkgqd->bskd", p, dout32)
             ds = p * (dp - d_row[..., None])
@@ -331,14 +343,14 @@ def _flash_bwd(causal, k_chunk, sk_valid, res, dout):
         dk = dk_t.transpose(1, 0, 2, 3, 4).reshape(b, nk * k_chunk, kvh, dh)
         dv = dv_t.transpose(1, 0, 2, 3, 4).reshape(b, nk * k_chunk, kvh, dh)
     return (dq.astype(qs.dtype), dk.astype(k.dtype), dv.astype(v.dtype),
-            None)
+            None, None)
 
 
 _flash_core.defvjp(_flash_fwd, _flash_bwd)
 
 
 def _flash_attention_offset(qc, k, v, q_offset, causal: bool = True,
-                            k_chunk: int = 1024) -> jnp.ndarray:
+                            k_chunk: int = 1024, kv_len=None) -> jnp.ndarray:
     """Flash attention for one q-chunk (§Perf hillclimb 1, iteration 3).
 
     The k/v loops run under the ``vmem_kernel`` scope: on TPU these loops
@@ -362,7 +374,11 @@ def _flash_attention_offset(qc, k, v, q_offset, causal: bool = True,
     qs = (qc * jnp.asarray(1.0 / np.sqrt(dh), qc.dtype)
           ).reshape(b, sq, kvh, g, dh)
     qpos = jnp.arange(sq) + q_offset
-    out = _flash_core(qs, k, v, qpos, causal, k_chunk, sk)
+    # per-row valid KV length; defaults to sk, which also masks the chunk
+    # padding rows above (kpos >= sk) — ragged kv_len just tightens it
+    kv_len = (jnp.full((b,), sk, jnp.int32) if kv_len is None
+              else jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,)))
+    out = _flash_core(qs, k, v, qpos, kv_len, causal, k_chunk)
     # [b,kvh,g,sq,dh] -> [b,sq,h,dh]
     return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dh)
 
@@ -430,15 +446,34 @@ def prefill_into_cache(p: Params, x: jnp.ndarray, cfg: AttnConfig,
     right-padded ragged prompts attend only their own tokens.  The cache
     rows record their true lengths — decode continues each row at its own
     position.
+
+    The attention itself goes through the kernel dispatch layer
+    (:mod:`repro.kernels.dispatch`): on TPU the Pallas flash kernel IS the
+    prefill path (ragged lengths masked in-kernel via ``kv_valid``); on
+    interpret-mode hosts the jnp family runs, and ``REPRO_ATTN_IMPL`` /
+    ``use_attention_impl`` force a specific impl either way.
     """
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     q, k, v = _project_qkv(p, x, cfg, positions, positions3)
-    out = (_chunked_attention(q, k, v, cfg.chunk_size,
-                              softmax_mode=cfg.softmax_mode, kv_len=lengths)
-           if s > cfg.chunk_threshold
-           else _full_attention(q, k, v, softmax_mode=cfg.softmax_mode,
-                                kv_len=lengths))
+    from repro.kernels import dispatch
+    impl = dispatch.select_attention_impl(
+        sq=s, sk=s, dh=q.shape[-1], causal=cfg.causal,
+        flash_min_seq=cfg.chunk_threshold)
+    if impl == "pallas_flash":
+        # the kernel blocks internally — no outer q-chunking needed
+        out = dispatch.run_attention(impl, q, k, v, q_offset=0,
+                                     causal=cfg.causal, kv_len=lengths)
+    else:
+        # jnp family: keep the q-chunked memory guard above the threshold
+        # (the flash twin runs per chunk via softmax_mode="kernel"); "full"
+        # stays on the configured paper-faithful softmax_mode
+        mode = "kernel" if impl == "jnp_flash" else cfg.softmax_mode
+        out = (_chunked_attention(q, k, v, cfg.chunk_size, cfg.causal,
+                                  softmax_mode=mode, kv_len=lengths)
+               if s > cfg.chunk_threshold
+               else _full_attention(q, k, v, causal=cfg.causal,
+                                    softmax_mode=mode, kv_len=lengths))
     newk = jax.lax.dynamic_update_slice(
         cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
     newv = jax.lax.dynamic_update_slice(

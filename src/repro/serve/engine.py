@@ -20,6 +20,12 @@ The hot path runs at device speed.  Two layers:
   at their EXACT prompt length (single-row prefill, no padding — which is
   also what makes recurrent-state families batch raggedly here).
 
+Prefill attention routes through the kernel dispatch layer
+(:mod:`repro.kernels.dispatch`): on TPU the Pallas flash kernel is the
+prefill path; ``ServeConfig.attn_impl`` pins a named implementation for
+every program an engine traces (tests force ``pallas_flash`` on CPU to
+prove token-identical output through the kernel).
+
 Every device->host transfer goes through :meth:`Engine._fetch`, so
 ``engine.host_syncs`` is an auditable counter — tests assert the O(1)
 bound and ``benchmarks/bench_serve.py`` reports it next to tokens/s.
@@ -71,6 +77,10 @@ class ServeConfig:
     eos_token: int = -1             # -1 -> never stop early
     seed: int = 0
     admission_chunk: int = 8        # decode steps between admission points
+    # attention impl forced for every program this engine traces (None ->
+    # repro.kernels.dispatch picks by backend/shape/$REPRO_ATTN_IMPL);
+    # fixed per-engine because jitted programs are traced once and cached
+    attn_impl: Optional[str] = None
 
 
 @dataclasses.dataclass
@@ -125,6 +135,17 @@ class Engine:
     def _region_timer(self, region: str):
         return (self.perfctr.region_timer(region) if self.perfctr is not None
                 else contextlib.nullcontext())
+
+    def _impl_ctx(self):
+        """Kernel-dispatch override while tracing/running engine programs.
+
+        Prefill attention routes through repro.kernels.dispatch; pinning
+        ``cfg.attn_impl`` here means every program this engine traces
+        (fused generate, slot prefill, reference loop, instrument probes)
+        resolves to the same implementation.
+        """
+        from repro.kernels import dispatch
+        return dispatch.use_attention_impl(self.cfg.attn_impl)
 
     def _sample(self, logits: jnp.ndarray, rng) -> jnp.ndarray:
         if self.cfg.temperature <= 0.0:
@@ -214,7 +235,7 @@ class Engine:
             fused = self._fused[max_new_tokens] = \
                 self._make_fused(max_new_tokens)
         self.fused_calls += 1
-        with self._region_timer(DECODE_REGION):
+        with self._region_timer(DECODE_REGION), self._impl_ctx():
             out, n = fused(self.params, jnp.asarray(toks), jnp.asarray(lens),
                            jax.random.PRNGKey(cfg.seed), extra)
             out_np, n_np = self._fetch((out, n))    # the ONE sync
@@ -238,7 +259,8 @@ class Engine:
         batch: Dict[str, jnp.ndarray] = {"tokens": jnp.asarray(toks)}
         if extra_batch:
             batch.update({k: jnp.asarray(v) for k, v in extra_batch.items()})
-        logits, state = self._prefill(self.params, batch, state)
+        with self._impl_ctx():
+            logits, state = self._prefill(self.params, batch, state)
         rng = jax.random.PRNGKey(cfg.seed)
         out = [list() for _ in range(b)]
         done = np.zeros(b, bool)
@@ -282,7 +304,7 @@ class Engine:
                      slot: int):
         """Admission point: prefill `prompt` into slot `slot` mid-flight."""
         toks = jnp.asarray([list(prompt)], jnp.int32)
-        with self._region_timer(PREFILL_REGION):
+        with self._region_timer(PREFILL_REGION), self._impl_ctx():
             row_logits, row_state = self._slot_prefill(self.params, toks)
         return self._merge(state, logits_buf, row_state, row_logits,
                            jnp.asarray(slot, jnp.int32))
@@ -331,7 +353,7 @@ class Engine:
         state_s = jax.eval_shape(
             lambda: self.lm.init_decode_state(b, cfg.max_seq))
         toks_s = jax.ShapeDtypeStruct((b, prompt_len), jnp.int32)
-        with perfctr.marker(PREFILL_REGION):
+        with perfctr.marker(PREFILL_REGION), self._impl_ctx():
             perfctr.probe(self.lm.prefill, params_s,
                           {"tokens": toks_s}, state_s)
         tok_s = jax.ShapeDtypeStruct((b, 1), jnp.int32)

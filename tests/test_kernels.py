@@ -122,6 +122,87 @@ def test_flash_attention_block_shape_invariance(bq, bk):
     np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
 
 
+# --- serving shapes: causal offsets (sq != sk) x ragged KV x GQA ----------
+#
+# The kernel used to be WRONG here: no q_offset meant causal masking
+# assumed query 0 sits at key 0, and ragged/unaligned sk was an assert.
+# Both the Pallas kernel and the jnp flash twin must now match the dense
+# oracle at fp32 tightness (the acceptance bar: atol 1e-5).
+
+@pytest.mark.parametrize("h,kvh", [(4, 4), (4, 2), (8, 1)])   # MHA/GQA/MQA
+@pytest.mark.parametrize("sq,sk,ragged", [
+    (64, 160, False),     # multi-token decode segment: queries end at sk
+    (96, 96, True),       # self-attention prefill over right-padded rows
+    (64, 200, True),      # cached prefill: offset + ragged + unaligned sk
+])
+def test_flash_offset_ragged_gqa_parity(h, kvh, sq, sk, ragged):
+    from repro.models.attention import _flash_attention_offset
+
+    ks = jax.random.split(jax.random.PRNGKey(sq + sk + h), 3)
+    q = _rand(ks[0], (2, sq, h, 32))
+    k = _rand(ks[1], (2, sk, kvh, 32))
+    v = _rand(ks[2], (2, sk, kvh, 32))
+    kv_len = jnp.array([sk, sk - 29], jnp.int32) if ragged else None
+    q_offset = sk - sq
+    want = ref.flash_attention(q, k, v, causal=True, q_offset=q_offset,
+                               kv_valid=kv_len)
+    got_pallas = ops.flash_attention(q, k, v, causal=True,
+                                     q_offset=q_offset, kv_valid=kv_len,
+                                     bq=32, bk=64, interpret=True)
+    got_twin = _flash_attention_offset(q, k, v, q_offset, True,
+                                       k_chunk=64, kv_len=kv_len)
+    np.testing.assert_allclose(np.asarray(got_pallas), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(got_twin), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_noncausal_ragged_no_longer_asserts():
+    """Unaligned/ragged sk used to be `assert causal` — now masked in-kernel."""
+    ks = jax.random.split(jax.random.PRNGKey(17), 3)
+    q = _rand(ks[0], (2, 96, 4, 32))
+    k = _rand(ks[1], (2, 200, 2, 32))      # 200 % bk != 0
+    v = _rand(ks[2], (2, 200, 2, 32))
+    kv_len = jnp.array([200, 73], jnp.int32)
+    got = ops.flash_attention(q, k, v, causal=False, kv_valid=kv_len,
+                              bq=32, bk=64, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=False, kv_valid=kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_flash_attention_zero_valid_rows_output_zero():
+    """kv_valid == 0 rows produce exactly 0 (not a softmax over nothing)."""
+    ks = jax.random.split(jax.random.PRNGKey(19), 3)
+    q = _rand(ks[0], (2, 64, 2, 32))
+    k = _rand(ks[1], (2, 64, 2, 32))
+    v = _rand(ks[2], (2, 64, 2, 32))
+    kv_len = jnp.array([0, 64], jnp.int32)
+    got = ops.flash_attention(q, k, v, causal=False, kv_valid=kv_len,
+                              bq=32, bk=32, interpret=True)
+    assert float(jnp.abs(got[0]).max()) == 0.0
+    np.testing.assert_allclose(
+        np.asarray(got[1]),
+        np.asarray(ref.flash_attention(q, k, v, causal=False)[1]),
+        rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("bq,bk", [(32, 32), (32, 64), (64, 32)])
+def test_flash_offset_block_shape_invariance(bq, bk):
+    """Tiling stays a pure perf knob with offsets and ragged KV in play."""
+    ks = jax.random.split(jax.random.PRNGKey(23), 3)
+    q = _rand(ks[0], (2, 64, 4, 32))
+    k = _rand(ks[1], (2, 160, 2, 32))
+    v = _rand(ks[2], (2, 160, 2, 32))
+    kv_len = jnp.array([150, 97], jnp.int32)
+    got = ops.flash_attention(q, k, v, causal=True, q_offset=96,
+                              kv_valid=kv_len, bq=bq, bk=bk, interpret=True)
+    want = ref.flash_attention(q, k, v, causal=True, q_offset=96,
+                               kv_valid=kv_len)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # SSD / gated linear-attention chunk scan (Mamba2 + mLSTM hot spot)
 # ---------------------------------------------------------------------------

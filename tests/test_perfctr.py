@@ -73,6 +73,56 @@ def test_multiplex_mode_returns_metrics_per_group():
         assert metrics["wall_s"] > 0
 
 
+def test_multiplex_warms_up_before_first_window():
+    """One untimed call precedes the group cycle, so the first timed window
+    never absorbs one-time jit compilation."""
+    ctr = PerfCtr()
+    calls = []
+
+    def step():
+        calls.append(len(calls))
+        return jnp.zeros(())
+
+    ctr.multiplex(step, groups=("FLOPS_BF16",), steps_per_group=2, cycles=2)
+    # 1 warmup + 2 cycles x 1 group x 2 steps
+    assert len(calls) == 1 + 2 * 2
+
+
+def test_multiplex_rejects_zero_steps_per_group():
+    ctr = PerfCtr()
+    with pytest.raises(ValueError):
+        ctr.multiplex(lambda: jnp.zeros(()), groups=("HBM",),
+                      steps_per_group=0)
+
+
+def test_marker_regions_are_thread_local():
+    """ProfileSession.sweep runs cells on worker threads: a region opened
+    on one thread must never capture another thread's probes."""
+    import threading
+
+    ctr = PerfCtr()
+    ready = threading.Barrier(2)
+    inside = threading.Barrier(2)
+
+    def worker(region):
+        with ctr.marker(region):
+            ready.wait(timeout=10)       # both markers open, interleaved
+            ctr.probe(_mm, A, B)
+            inside.wait(timeout=10)      # neither marker closes early
+
+    threads = [threading.Thread(target=worker, args=(r,))
+               for r in ("thread-a", "thread-b")]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60)
+    assert set(ctr.regions) == {"thread-a", "thread-b"}
+    for r in ("thread-a", "thread-b"):
+        assert ctr.regions[r].calls == 1
+        assert ctr.regions[r].events["FLOPS_TOTAL"] == pytest.approx(
+            2 * 64**3, rel=0.02)
+
+
 def test_global_marker_api():
     marker_mod.reset()
     with marker_mod.region("r1"):
@@ -116,3 +166,20 @@ def test_measurement_accumulate_merges_walltimes():
     m1.accumulate(m2)
     assert m1.calls == 2
     assert m1.wall_times == [0.5, 0.7]
+
+
+def test_record_does_not_alias_callers_measurement():
+    """PerfCtr must deep-copy events on first insert: accumulating a second
+    measurement into a region used to mutate the FIRST caller's Measurement
+    (and anything else — e.g. a cache — still holding it)."""
+    ctr = PerfCtr()
+    m1 = measure(_mm, A, B, region="r")
+    flops = m1.events["FLOPS_TOTAL"]
+    counts_before = dict(m1.events.counts)
+    ctr.record(m1)
+    ctr.record(measure(_mm, A, B, region="r"))
+    assert ctr.regions["r"].events["FLOPS_TOTAL"] == pytest.approx(
+        2 * flops, rel=0.02)
+    # the caller's object is untouched
+    assert m1.events.counts == counts_before
+    assert m1.calls == 1 and not m1.wall_times

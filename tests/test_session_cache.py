@@ -139,6 +139,45 @@ def test_fingerprint_distinguishes_functions():
     assert fingerprint_callable(f1) == fingerprint_callable(f1)
 
 
+def test_fingerprint_partial_is_stable_and_addressless():
+    """functools.partial used to hit the repr(fn) fallback, which embeds a
+    memory address — partial-wrapped probes never cached across processes."""
+    import functools
+
+    p1 = functools.partial(_mm, b=jnp.ones((4, 4)))
+    fp = fingerprint_callable(p1)
+    assert "0x" not in fp                       # no memory address
+    assert fingerprint_callable(functools.partial(_mm, b=jnp.ones((4, 4)))) \
+        == fp                                   # fresh partial, same key
+    assert fingerprint_callable(_mm) in fp      # inner fn is part of the key
+
+
+def test_fingerprint_partial_distinguishes_bindings():
+    import functools
+
+    base = functools.partial(_mm)
+    assert fingerprint_callable(functools.partial(_mm, b=1)) \
+        != fingerprint_callable(functools.partial(_mm, b=2))
+    assert fingerprint_callable(functools.partial(_mm, 1)) \
+        != fingerprint_callable(base)
+    # Python flattens partial-of-partial; the flattened key is stable too
+    assert fingerprint_callable(
+        functools.partial(functools.partial(_mm, b=1))) \
+        == fingerprint_callable(functools.partial(_mm, b=1))
+
+
+def test_partial_probe_hits_cache(session):
+    """The concrete regression: a partial-wrapped probe measured twice in
+    the same session is one lowering, not two."""
+    import functools
+
+    a = jnp.ones((64, 64), jnp.float32)
+    session.measure(functools.partial(_mm, a), SDS)
+    session.measure(functools.partial(_mm, a), SDS)     # fresh object
+    assert session.lowerings == 1
+    assert session.cache.stats.hits == 1
+
+
 def test_describe_abstract_reads_shapes():
     d = describe_abstract((SDS, {"k": jax.ShapeDtypeStruct((2,), jnp.int32)}))
     shapes = [tuple(leaf["shape"]) for leaf in d["leaves"]]
@@ -208,25 +247,35 @@ def test_clear_empties_cache(session):
 # ---------------------------------------------------------------------------
 
 _SUBPROCESS_SCRIPT = textwrap.dedent("""
-    import sys, jax, jax.numpy as jnp
+    import functools, sys, jax, jax.numpy as jnp
     from repro.core.session import ProfileSession
 
     def probe_fn(a, b):
         return jnp.tanh(a @ b)
 
+    def scaled(a, b, *, scale):
+        return jnp.tanh(a @ b) * scale
+
     sds = jax.ShapeDtypeStruct((32, 32), jnp.float32)
     s = ProfileSession(cache_dir=sys.argv[1])
     s.measure(probe_fn, sds, sds)
+    # partial-wrapped probe (how autotune candidates and pallas_call
+    # wrappers are measured) — its key must be process-independent too
+    s.measure(functools.partial(scaled, scale=2.5), sds, sds)
     print("DIGEST=" + s.measure_digest(probe_fn, (sds, sds), {}, (),
                                        None, None, None)[0])
+    print("PDIGEST=" + s.measure_digest(
+        functools.partial(scaled, scale=2.5), (sds, sds), {}, (),
+        None, None, None)[0])
     print("LOWERINGS=%d HITS=%d" % (s.lowerings, s.cache.stats.hits))
 """)
 
 
 @pytest.mark.slow
 def test_key_stable_across_processes(tmp_path):
-    """Two fresh interpreters compute the same digest, and the second one
-    hits the disk cache the first one filled (zero lowerings)."""
+    """Two fresh interpreters compute the same digests (plain AND
+    partial-wrapped probes), and the second one hits the disk cache the
+    first one filled (zero lowerings)."""
     script = tmp_path / "probe.py"
     script.write_text(_SUBPROCESS_SCRIPT)
     env = dict(os.environ)
@@ -244,8 +293,9 @@ def test_key_stable_across_processes(tmp_path):
     first = run()
     second = run()
     assert first["DIGEST"] == second["DIGEST"]
-    assert first["LOWERINGS"] == "1" and first["HITS"] == "0"
-    assert second["LOWERINGS"] == "0" and second["HITS"] == "1"
+    assert first["PDIGEST"] == second["PDIGEST"]
+    assert first["LOWERINGS"] == "2" and first["HITS"] == "0"
+    assert second["LOWERINGS"] == "0" and second["HITS"] == "2"
 
 
 # ---------------------------------------------------------------------------
