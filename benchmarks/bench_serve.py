@@ -91,8 +91,9 @@ def run(csv, session=None, smoke=False):
 
     # ---- continuous batching: ragged budgets, mid-flight admission ------
     n_req = 8 if smoke else 16
-    # warm every segment program the run can use: a budget of
-    # 2*admission_chunk-1 walks the power-of-two ladder (8,4,2,1)
+    # warm the segment programs the run can use (steps quantize UP to
+    # powers of two, so a 2*chunk-1 budget exercises the full-chunk
+    # segment plus the round-up path)
     warm = BatchScheduler(eng)
     for rid in range(2):
         warm.submit(Request(rid=rid, prompt=_prompts(eng, 1, plen)[0],
@@ -119,6 +120,15 @@ def run(csv, session=None, smoke=False):
     print()
     print(ctr.report())
 
+    # traffic, not just throughput: bytes/token of the decode-step program
+    # from the compiled artifact (the instrument's serve.decode region) —
+    # the number bench_paged_decode drives down, tracked here so the perf
+    # trajectory sees regressions in EITHER direction
+    bytes_per_token = (ctr.regions["serve.decode"].events["BYTES_ACCESSED"]
+                       / eng.cfg.batch_slots)
+    print(f"decode traffic: {bytes_per_token/1e6:.2f} MB/token "
+          f"(artifact events, {eng.cfg.batch_slots} slots)")
+
     # the whole point of the PR: the fused loop beats the host loop by >=3x
     # on this host (per-token dispatch+sync dominates at these model sizes;
     # measures ~4-6x in practice).  Smoke relaxes the statistical assert
@@ -133,6 +143,8 @@ def run(csv, session=None, smoke=False):
                 f"tok_s={tps_ref:.1f},host_syncs={syncs_ref}"))
     csv.append(("serve_continuous_tok_s", 1e6 / tps_sched,
                 f"tok_s={tps_sched:.1f},ttft_ms={ttft_ms:.2f}"))
+    csv.append(("serve_decode_bytes_per_token", bytes_per_token,
+                f"mb_per_token={bytes_per_token/1e6:.3f}"))
     return {
         "fused_tok_s": tps_fused,
         "reference_tok_s": tps_ref,
@@ -142,6 +154,7 @@ def run(csv, session=None, smoke=False):
         "continuous_tok_s": tps_sched,
         "ttft_ms": ttft_ms,
         "tokens": int(ntok),
+        "decode_bytes_per_token": bytes_per_token,
     }
 
 

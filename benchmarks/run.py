@@ -22,8 +22,8 @@ import traceback
 
 from benchmarks import (bench_bandwidth_map, bench_flash_prefill,
                         bench_jacobi_traffic, bench_marker_overhead,
-                        bench_perfctr, bench_serve, bench_stencil_pinning,
-                        bench_stream_pinning)
+                        bench_paged_decode, bench_perfctr, bench_serve,
+                        bench_stencil_pinning, bench_stream_pinning)
 
 BENCHES = {
     "perfctr": bench_perfctr,              # §II-A listing
@@ -34,6 +34,7 @@ BENCHES = {
     "bandwidth_map": bench_bandwidth_map,   # §VI future plans
     "serve": bench_serve,                   # measurement-driven serving loop
     "flash_prefill": bench_flash_prefill,  # dispatched kernel + autotuner
+    "paged_decode": bench_paged_decode,    # paged KV pool: bytes/token
 }
 
 

@@ -342,9 +342,12 @@ def _instr_bytes(ins: Instruction, comp: Computation,
     """
     op = ins.op
     if op in _SLICING_OPS:
-        # read the window + (gather) indices, write the result
-        idx = (shape_bytes(comp.shape_of(ins.operands[1]) or "")
-               if op == "gather" and len(ins.operands) > 1 else 0.0)
+        # read the window + EVERY index operand (a paged-KV gather reads
+        # its page table too — B*NP int32s per layer per token; the old
+        # model charged gather indices but forgot multi-operand
+        # dynamic-slice starts), write the result
+        idx = sum(shape_bytes(comp.shape_of(o) or "")
+                  for o in ins.operands[1:])
         return 2.0 * shape_bytes(ins.shape) + idx
     if op == "dynamic-update-slice":
         upd = (shape_bytes(comp.shape_of(ins.operands[1]) or "")
@@ -426,9 +429,12 @@ def _fusion_param_read_bytes(body: Computation, param_idx: int,
     The scanned-layer-loop bodies concentrate three aliasing patterns that
     would otherwise charge the full stacked carry buffer every iteration:
 
-    * param consumed only by slicing ops -> charge the sliced windows;
-    * param used as a dynamic-update-slice *destination* (operand 0, possibly
-      through convert/bitcast) -> in-place update, nothing read;
+    * param consumed only by slicing ops -> charge the sliced windows
+      (as the *sliced* operand; an INDEX operand — a page table feeding a
+      gather — is read in full at its own size);
+    * param used as a dynamic-update-slice or scatter *destination*
+      (operand 0, possibly through convert/bitcast) -> in-place update,
+      nothing read;
     * param forwarded untouched into the root (tuple) -> alias, nothing read.
 
     Any other consumer charges the full buffer.
@@ -446,8 +452,14 @@ def _fusion_param_read_bytes(body: Computation, param_idx: int,
     reads = 0.0
     for ins, via in _transitive_consumers(body, pname):
         if ins.op in _SLICING_OPS:
-            reads += shape_bytes(ins.shape)
-        elif (ins.op == "dynamic-update-slice"
+            if ins.operands and ins.operands[0] != via:
+                # the param is an INDEX operand (a page table feeding a
+                # gather, dynamic-slice starts): it is read in full, not
+                # at the sliced window's size
+                reads += full
+            else:
+                reads += shape_bytes(ins.shape)
+        elif (ins.op in ("dynamic-update-slice", "scatter")
               and ins.operands and ins.operands[0] == via
               and via not in ins.operands[1:]):
             continue                     # in-place destination: write-only
@@ -490,6 +502,15 @@ def _fusion_write_bytes(ins: Instruction, body: Computation) -> float:
                 and len(producer.operands) > 1:
             upd = body.shape_of(producer.operands[1])
             return float(shape_bytes(upd or producer.shape))
+        if producer.op == "scatter" and producer.operands and \
+                _alias_source(body, producer.operands[0], params) is not None \
+                and len(producer.operands) > 2:
+            # in-place scatter (the paged token write): only the update
+            # region + indices move, not the whole pool buffer
+            upd = body.shape_of(producer.operands[2])
+            idx = body.shape_of(producer.operands[1])
+            return float(shape_bytes(upd or producer.shape)
+                         + shape_bytes(idx or ""))
         return float(shape_bytes(producer.shape))
 
     if root.op == "tuple":

@@ -31,7 +31,10 @@ from repro.core import hwinfo
 
 __all__ = ["DEFAULT_BLOCKS", "DEFAULT_CANDIDATES", "TuneRecord",
            "vmem_footprint", "tune_key", "autotune_flash_blocks",
-           "best_blocks", "record_blocks", "clear_table"]
+           "best_blocks", "record_blocks", "clear_table",
+           "DEFAULT_PAGES_PER_BLOCK", "DEFAULT_PAGED_CANDIDATES",
+           "PagedTuneRecord", "paged_tune_key", "paged_vmem_footprint",
+           "autotune_paged_decode", "best_paged_block"]
 
 DEFAULT_BLOCKS: Tuple[int, int] = (128, 256)
 
@@ -39,6 +42,16 @@ DEFAULT_BLOCKS: Tuple[int, int] = (128, 256)
 DEFAULT_CANDIDATES: Tuple[Tuple[int, int], ...] = (
     (64, 64), (64, 128), (128, 128), (128, 256), (256, 128), (256, 256),
     (512, 256),
+)
+
+DEFAULT_PAGES_PER_BLOCK = 1
+
+#: (page_size, pages_per_block) grid for the paged decode kernel —
+#: page_size trades pool fragmentation against per-page DMA efficiency,
+#: pages_per_block is the kernel's fetch granularity over a row's table
+DEFAULT_PAGED_CANDIDATES: Tuple[Tuple[int, int], ...] = (
+    (16, 1), (16, 2), (16, 4), (32, 1), (32, 2), (32, 4),
+    (64, 1), (64, 2), (128, 1),
 )
 
 
@@ -161,3 +174,139 @@ def record_blocks(key: str, bq: int, bk: int) -> None:
 
 def clear_table() -> None:
     _TABLE.clear()
+    _PAGED_TABLE.clear()
+
+
+# ---------------------------------------------------------------------------
+# paged decode kernel: (page_size, pages_per_block)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PagedTuneRecord:
+    """Outcome of one paged-decode sweep (all candidates + the winner)."""
+
+    key: str
+    page_size: int
+    pages_per_block: int
+    score_s: float
+    scores: Dict[Tuple[int, int], float]  # (ps, ppb) -> score (inf = skipped)
+    lowerings: int
+
+
+# per-(shape, page_size) pages_per_block choices consulted by
+# dispatch.run_paged_decode on every pallas_paged run
+_PAGED_TABLE: Dict[str, PagedTuneRecord] = {}
+
+
+def paged_tune_key(*, b: int, kvh: int, g: int, dh: int, page_size: int,
+                   dtype, backend: Optional[str] = None) -> str:
+    # deliberately NOT keyed on the page-table width: the scheduler's
+    # live-mix bucket changes segment to segment, and the winning fetch
+    # granularity is a per-page property — keying on width would make
+    # every serving lookup miss the sweep's record
+    backend = backend or jax.default_backend()
+    return (f"paged-b{b}kvh{kvh}g{g}dh{dh}ps{page_size}"
+            f"-{jnp.dtype(dtype).name}-{backend}")
+
+
+def paged_vmem_footprint(ps: int, ppb: int, g: int, dh: int,
+                         itemsize: int = 4) -> int:
+    """VMEM bytes for one grid step: q + ppb double-buffered k/v page
+    tiles + out, plus the f32 [g, ps] score tile and m/l/acc scratch."""
+    io = 2 * (g * dh + 2 * ppb * ps * dh + 2 * dh + g * dh) * itemsize
+    compute = (g * ps + g * dh + 2 * g) * 4
+    return io + compute
+
+
+def _paged_probe(q4, kp, vp, pt, lens, kn, vn, *, ppb: int,
+                 interpret: bool):
+    """Module-level probe target (stable ProfileSession fingerprint per
+    (page_size via shapes, ppb via partial) candidate)."""
+    from repro.kernels.paged_decode import paged_decode_attention_grouped
+    return paged_decode_attention_grouped(q4, kp, vp, pt, lens, kn, vn,
+                                          pages_per_block=ppb,
+                                          interpret=interpret)
+
+
+def autotune_paged_decode(*, b: int, kvh: int, g: int, dh: int, ctx: int,
+                          session, dtype=jnp.float32,
+                          candidates: Optional[Sequence[Tuple[int, int]]] = None,
+                          chip: Optional[hwinfo.ChipSpec] = None,
+                          backend: Optional[str] = None,
+                          interpret: Optional[bool] = None,
+                          vmem_fraction: float = 0.9) -> PagedTuneRecord:
+    """Sweep (page_size, pages_per_block) for a decode shape serving up to
+    ``ctx`` tokens of context per row; record winners per page_size.
+
+    Each candidate's pool shapes derive from (ctx, page_size):
+    ``table_width = ceil(ctx / ps)`` logical pages per row, one distinct
+    physical page per logical page plus the null page.  Every probe goes
+    through ``session.measure`` (lower+compile cold, disk lookup warm,
+    never executed); the winner per page_size lands in the table
+    ``dispatch.run_paged_decode`` consults, and the overall winner's
+    ``page_size`` is the pool-sizing recommendation for the launcher.
+    """
+    from repro.kernels.dispatch import default_interpret
+    chip = chip or getattr(session, "chip", None) or hwinfo.DEFAULT_CHIP
+    if interpret is None:
+        interpret = default_interpret(backend)
+    budget = chip.vmem_bytes * vmem_fraction
+    itemsize = jnp.dtype(dtype).itemsize
+
+    lowerings0 = session.lowerings
+    scores: Dict[Tuple[int, int], float] = {}
+    per_ps_best: Dict[int, Tuple[int, float]] = {}   # ps -> (ppb, score)
+    for ps, ppb in (candidates or DEFAULT_PAGED_CANDIDATES):
+        np_w = max(-(-ctx // ps), 1)
+        if paged_vmem_footprint(ps, ppb, g, dh, itemsize) > budget:
+            scores[(ps, ppb)] = float("inf")     # gated before any XLA work
+            continue
+        p_total = b * np_w + 1
+        q_s = jax.ShapeDtypeStruct((b, kvh, g, dh), dtype)
+        kp_s = jax.ShapeDtypeStruct((p_total, ps, kvh, dh), dtype)
+        pt_s = jax.ShapeDtypeStruct((b, np_w), jnp.int32)
+        lens_s = jax.ShapeDtypeStruct((b,), jnp.int32)
+        kn_s = jax.ShapeDtypeStruct((b, kvh, dh), dtype)
+        probe = functools.partial(_paged_probe, ppb=ppb, interpret=interpret)
+        key = paged_tune_key(b=b, kvh=kvh, g=g, dh=dh, page_size=ps,
+                             dtype=dtype, backend=backend)
+        m = session.measure(probe, q_s, kp_s, kp_s, pt_s, lens_s, kn_s, kn_s,
+                            region=f"paged[{key}][ppb{ppb}]", chip=chip)
+        score = _roofline_seconds(m.events, chip)
+        scores[(ps, ppb)] = score
+        best = per_ps_best.get(ps)
+        if best is None or (score, ppb) < (best[1], best[0]):
+            per_ps_best[ps] = (ppb, score)
+
+    finite = {c: s for c, s in scores.items() if s != float("inf")}
+    if not finite:
+        raise ValueError("no (page_size, pages_per_block) candidate fits "
+                         f"VMEM for ctx={ctx}")
+    (ps_win, ppb_win), score = min(finite.items(), key=lambda kv: (kv[1],
+                                                                   kv[0]))
+    lowerings = session.lowerings - lowerings0
+    # record the winning ppb for EVERY swept page_size, so whatever
+    # page_size the pool was built with dispatch finds its tiling
+    for ps, (ppb, s) in per_ps_best.items():
+        key = paged_tune_key(b=b, kvh=kvh, g=g, dh=dh, page_size=ps,
+                             dtype=dtype, backend=backend)
+        _PAGED_TABLE[key] = PagedTuneRecord(
+            key=key, page_size=ps, pages_per_block=ppb, score_s=s,
+            scores=scores, lowerings=lowerings)
+    win_key = paged_tune_key(b=b, kvh=kvh, g=g, dh=dh, page_size=ps_win,
+                             dtype=dtype, backend=backend)
+    return PagedTuneRecord(key=win_key, page_size=ps_win,
+                           pages_per_block=ppb_win, score_s=score,
+                           scores=scores, lowerings=lowerings)
+
+
+def best_paged_block(*, b: int, kvh: int, g: int, dh: int, page_size: int,
+                     dtype, backend: Optional[str] = None) -> int:
+    """The tuned pages_per_block for this shape/page_size if a sweep
+    recorded one, else the default (dispatch consults this per run —
+    width-agnostic, so every live-mix bucket the scheduler traces finds
+    the same record)."""
+    rec = _PAGED_TABLE.get(paged_tune_key(
+        b=b, kvh=kvh, g=g, dh=dh, page_size=page_size,
+        dtype=dtype, backend=backend))
+    return rec.pages_per_block if rec is not None else DEFAULT_PAGES_PER_BLOCK

@@ -19,6 +19,14 @@ full            models/attention.py naive/fused paths (scores materialized;
                 faithful baseline and the small-shape fast path.
 ==============  ============================================================
 
+Decode attention over the PAGED cache (serve/kv_pool.py) has its own pair
+of impls behind :func:`select_paged_decode_impl`/:func:`run_paged_decode`:
+``pallas_paged`` (kernels/paged_decode.py — bytes/token O(length)) and
+``jnp_paged`` (models/attention.py::paged_decode_jnp, the gather-based
+masked-dense oracle/fallback).  The override name ``paged_decode`` rides
+the same env/context/ServeConfig ladder: it forces the Pallas kernel on
+the decode side and is transparent to prefill selection.
+
 Selection (:func:`select_attention_impl`) is static — backend, shapes and
 env only, never traced values — so it happens once at trace time:
 
@@ -45,10 +53,22 @@ from typing import Optional, Tuple
 
 import jax
 
-__all__ = ["ATTENTION_IMPLS", "default_interpret", "select_attention_impl",
-           "use_attention_impl", "attention_impl_override", "run_attention"]
+__all__ = ["ATTENTION_IMPLS", "OVERRIDE_IMPLS", "PAGED_DECODE_IMPLS",
+           "default_interpret", "select_attention_impl",
+           "use_attention_impl", "attention_impl_override", "run_attention",
+           "select_paged_decode_impl", "run_paged_decode"]
 
 ATTENTION_IMPLS = ("pallas_flash", "jnp_flash", "full")
+
+#: the two concrete paged decode-attention implementations (selected by
+#: :func:`select_paged_decode_impl`; ``paged_decode`` in the override
+#: ladder forces the Pallas kernel)
+PAGED_DECODE_IMPLS = ("pallas_paged", "jnp_paged")
+
+#: names accepted by the override ladder (env / context / ServeConfig).
+#: ``paged_decode`` pins the DECODE side to the Pallas paged kernel and is
+#: transparent to prefill selection (prefill falls through to heuristics).
+OVERRIDE_IMPLS = ATTENTION_IMPLS + ("paged_decode",)
 
 _TLS = threading.local()
 
@@ -73,9 +93,9 @@ def use_attention_impl(name: Optional[str]):
     each other); ``None`` is a no-op so callers can thread an optional
     config field straight through.
     """
-    if name is not None and name not in ATTENTION_IMPLS:
+    if name is not None and name not in OVERRIDE_IMPLS:
         raise ValueError(f"unknown attention impl {name!r}; "
-                         f"choose from {ATTENTION_IMPLS}")
+                         f"choose from {OVERRIDE_IMPLS}")
     prev = getattr(_TLS, "attn_impl", None)
     _TLS.attn_impl = name if name is not None else prev
     try:
@@ -91,9 +111,9 @@ def attention_impl_override() -> Optional[str]:
         return ctx
     env = os.environ.get("REPRO_ATTN_IMPL")
     if env:
-        if env not in ATTENTION_IMPLS:
+        if env not in OVERRIDE_IMPLS:
             raise ValueError(f"REPRO_ATTN_IMPL={env!r} not in "
-                             f"{ATTENTION_IMPLS}")
+                             f"{OVERRIDE_IMPLS}")
         return env
     return None
 
@@ -112,6 +132,8 @@ def select_attention_impl(*, sq: int, sk: int, dh: int, causal: bool = True,
     """
     del sk, causal                  # part of the contract, unused for now
     forced = attention_impl_override()
+    if forced == "paged_decode":
+        forced = None               # decode-side pin; prefill picks freely
     if forced is not None:
         return forced
     if differentiable:
@@ -162,5 +184,63 @@ def run_attention(name: str, q, k, v, *, q_offset=0, causal: bool = True,
                                                mode, kv_len=kv_len)
         return attn_mod._full_attention_offset(q, k, v, q_offset, causal,
                                                mode, kv_len=kv_len)
+    if name == "paged_decode":
+        raise ValueError("paged_decode is a decode-attention impl; use "
+                         "select_paged_decode_impl/run_paged_decode (it is "
+                         "only a valid *override* name, pinning the decode "
+                         "side while prefill keeps its heuristics)")
     raise ValueError(f"unknown attention impl {name!r}; "
                      f"choose from {ATTENTION_IMPLS}")
+
+
+# ---------------------------------------------------------------------------
+# paged decode attention (serve/kv_pool.py storage)
+# ---------------------------------------------------------------------------
+
+def select_paged_decode_impl(*, backend: Optional[str] = None) -> str:
+    """Pick the paged decode-attention implementation (trace-time, static).
+
+    The SAME override ladder as prefill (env / thread-local context /
+    ``ServeConfig.attn_impl``), mapped onto the two paged impls:
+    ``paged_decode`` or ``pallas_flash`` force the Pallas kernel,
+    ``jnp_flash``/``full`` force the gather-based jnp reference (the
+    masked-dense oracle/fallback).  Unforced: TPU compiles the kernel,
+    interpret-mode hosts take the reference — same policy as prefill.
+    """
+    forced = attention_impl_override()
+    if forced in ("paged_decode", "pallas_flash"):
+        return "pallas_paged"
+    if forced in ("jnp_flash", "full"):
+        return "jnp_paged"
+    backend = backend or jax.default_backend()
+    return "pallas_paged" if backend == "tpu" else "jnp_paged"
+
+
+def run_paged_decode(name: str, q, k_pages, v_pages, page_table, length,
+                     k_new, v_new, *, pages_per_block: Optional[int] = None,
+                     interpret: Optional[bool] = None):
+    """Run paged decode impl ``name`` in model layout.
+
+    q [B,1,H,Dh]; k/v_pages [P,ps,KVH,Dh] (one layer's pool slice);
+    page_table [B,NP] int32; length [B] int32 (past tokens — the new
+    token's K/V ride separately in ``k_new``/``v_new`` [B,1,KVH,Dh] and
+    are folded into the softmax, NOT written; the caller scatters them
+    into their page afterwards).  Returns [B,1,H,Dh].
+    """
+    if name == "pallas_paged":
+        from repro.kernels import autotune
+        from repro.kernels.paged_decode import paged_decode_attention
+        ppb = pages_per_block or autotune.best_paged_block(
+            b=q.shape[0], kvh=k_pages.shape[2],
+            g=q.shape[2] // k_pages.shape[2], dh=q.shape[-1],
+            page_size=k_pages.shape[1], dtype=q.dtype)
+        return paged_decode_attention(q, k_pages, v_pages, page_table,
+                                      length, k_new, v_new,
+                                      pages_per_block=ppb,
+                                      interpret=interpret)
+    if name == "jnp_paged":
+        from repro.models.attention import paged_decode_jnp
+        return paged_decode_jnp(q, k_pages, v_pages, page_table, length,
+                                k_new, v_new)
+    raise ValueError(f"unknown paged decode impl {name!r}; "
+                     f"choose from {PAGED_DECODE_IMPLS}")

@@ -1,0 +1,205 @@
+"""Paged decode attention (Pallas, TPU-targeted): O(length) bytes/token.
+
+The decode hot path used to score the ENTIRE [B, max_seq, KVH, Dh] cache
+buffer every token and mask — bytes/token was O(max_seq) even for rows
+holding 30 tokens of context.  This kernel walks each row's *page table*
+instead: the KV cache lives in a pool of fixed-size pages
+(``serve/kv_pool.py``), each row owns exactly ``ceil(length / page_size)``
+of them, and decode touches only those.
+
+Structure (grid = batch x kv-heads x page-blocks, page-blocks innermost):
+
+* the page table ``[B, NP]`` and per-row lengths ``[B]`` are scalar-
+  prefetched (``pltpu.PrefetchScalarGridSpec``), so the k/v BlockSpec
+  index maps translate *logical* page j of row b to its *physical* page
+  ``pt[b, j]`` before the DMA is issued — the gather happens in the
+  pipeline, no materialized gathered copy;
+* dead logical pages (``j * page_size >= length[b]``) clamp their index
+  map to the row's last live page — consecutive grid steps then request
+  the SAME block, which the pipeline does not re-fetch — and skip their
+  matmuls entirely via ``pl.when``;
+* online softmax state (running max / denominator / accumulator) lives in
+  VMEM scratch across the page-block iterations; at the last block the
+  NEW token's K/V (one [KVH, Dh] row, passed separately so the caller can
+  scatter it into its page afterwards) is folded into the same softmax
+  and the output normalized — the exact two-part-softmax contract of
+  ``models/attention.py::decode_attention_token``;
+* ``pages_per_block`` fetches that many pages per grid step (each its own
+  BlockSpec, so non-contiguous physical pages still pipeline); together
+  with ``page_size`` it is the tile knob ``kernels/autotune.py`` sweeps.
+
+Layout contract: q grouped [B, KVH, G, Dh]; pages [P, page_size, KVH, Dh]
+(the pool layout, one layer's slice).  ``paged_decode_attention`` adapts
+from the model's [B, 1, H, Dh].  Oracle: kernels/ref.py::paged_decode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import jax.experimental.pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["paged_decode_attention", "paged_decode_attention_grouped"]
+
+NEG_INF = -2.0e38
+
+
+def _paged_kernel(lens_ref, pt_ref, q_ref, *refs,
+                  scale: float, ps: int, ppb: int):
+    """refs: k_0..k_{ppb-1}, v_0..v_{ppb-1}, k_new, v_new, o, m, l, acc."""
+    k_refs = refs[:ppb]
+    v_refs = refs[ppb:2 * ppb]
+    kn_ref, vn_ref, o_ref, m_ref, l_ref, acc_ref = refs[2 * ppb:]
+    b = pl.program_id(0)
+    j = pl.program_id(2)                  # page block (innermost, sequential)
+    njb = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lens_ref[b]                  # this row's past-token count
+    q = q_ref[...].astype(jnp.float32) * scale            # [G, Dh]
+
+    for i in range(ppb):
+        p = j * ppb + i                   # logical page index
+
+        # dead pages (entirely past this row's context) skip both matmuls;
+        # their index map already clamps to a live page, so no new DMA
+        # was issued for them either
+        @pl.when(p * ps < length)
+        def _accumulate(i=i, p=p):
+            k = k_refs[i][...].astype(jnp.float32)        # [ps, Dh]
+            v = v_refs[i][...].astype(jnp.float32)        # [ps, Dh]
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+            kpos = p * ps + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)
+            ok = kpos < length            # partial last page
+            s = jnp.where(ok, s, NEG_INF)
+            m_prev = m_ref[...]                           # [G, 1]
+            m_new = jnp.maximum(m_prev,
+                                jnp.max(s, axis=1, keepdims=True))
+            alpha = jnp.exp(m_prev - m_new)
+            pr = jnp.exp(s - m_new)
+            pr = jnp.where(ok, pr, 0.0)
+            l_ref[...] = l_ref[...] * alpha + jnp.sum(pr, axis=1,
+                                                      keepdims=True)
+            acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(pr, v)
+            m_ref[...] = m_new
+
+    @pl.when(j == njb - 1)
+    def _fold_token_and_finish():
+        # the new token attends itself: fold its single K/V row into the
+        # running softmax, then normalize — rows with length == 0 (empty
+        # slots) come through here with (m, l, acc) untouched and output
+        # exactly softmax over {the token} = v_new
+        kt = kn_ref[...].astype(jnp.float32)              # [1, Dh]
+        vt = vn_ref[...].astype(jnp.float32)              # [1, Dh]
+        s_t = jax.lax.dot_general(q, kt, (((1,), (1,)), ((), ())))  # [G, 1]
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s_t)
+        alpha = jnp.exp(m_prev - m_new)
+        p_t = jnp.exp(s_t - m_new)
+        l = l_ref[...] * alpha + p_t
+        acc = acc_ref[...] * alpha + p_t * vt
+        o_ref[...] = (acc / jnp.maximum(l, 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("pages_per_block", "interpret"))
+def paged_decode_attention_grouped(q4: jnp.ndarray, k_pages: jnp.ndarray,
+                                   v_pages: jnp.ndarray,
+                                   page_table: jnp.ndarray,
+                                   lengths: jnp.ndarray,
+                                   k_new: jnp.ndarray, v_new: jnp.ndarray, *,
+                                   pages_per_block: int = 1,
+                                   interpret: bool | None = None
+                                   ) -> jnp.ndarray:
+    """q4: [B,KVH,G,Dh]; k/v_pages: [P,ps,KVH,Dh]; page_table: [B,NP] int32;
+    lengths: [B] int32 (past tokens; the new token is NOT in the pages yet);
+    k_new/v_new: [B,KVH,Dh].  Returns [B,KVH,G,Dh].
+
+    ``page_table[b, j]`` is the physical page holding row b's tokens
+    ``[j*ps, (j+1)*ps)``; entries past ``ceil(lengths[b]/ps)`` are never
+    read (their index maps clamp to the last live page, their compute is
+    skipped).  Physical page 0 is the pool's null page by convention —
+    rows with ``lengths[b] == 0`` resolve to it but accumulate nothing.
+    """
+    if interpret is None:
+        from repro.kernels.dispatch import default_interpret
+        interpret = default_interpret()
+    b, kvh, g, dh = q4.shape
+    p_total, ps, kvh_p, _ = k_pages.shape
+    assert kvh_p == kvh, (kvh_p, kvh)
+    np_w = page_table.shape[1]
+    ppb = max(1, min(pages_per_block, np_w))
+    njb = -(-np_w // ppb)
+    scale = 1.0 / (dh ** 0.5)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    page_table = jnp.asarray(page_table, jnp.int32)
+    kn = k_new.reshape(b, kvh, 1, dh)
+    vn = v_new.reshape(b, kvh, 1, dh)
+
+    def page_map(i):
+        # logical page j*ppb+i of row b -> physical page, clamped to the
+        # row's last LIVE page so dead grid steps re-request the block
+        # already resident (the pipeline elides the copy)
+        def imap(b_, h_, j_, lens, pt):
+            p_log = j_ * ppb + i
+            live = jnp.maximum((lens[b_] + ps - 1) // ps - 1, 0)
+            p_eff = jnp.minimum(jnp.minimum(p_log, np_w - 1), live)
+            return (pt[b_, p_eff], 0, h_, 0)
+        return imap
+
+    kv_specs = [pl.BlockSpec((None, ps, None, dh), page_map(i))
+                for i in range(ppb)]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # lengths, page_table
+        grid=(b, kvh, njb),
+        in_specs=[
+            pl.BlockSpec((None, None, g, dh),
+                         lambda b_, h_, j_, lens, pt: (b_, h_, 0, 0)),
+            *kv_specs,                    # k pages
+            *kv_specs,                    # v pages (same maps)
+            pl.BlockSpec((None, None, 1, dh),
+                         lambda b_, h_, j_, lens, pt: (b_, h_, 0, 0)),
+            pl.BlockSpec((None, None, 1, dh),
+                         lambda b_, h_, j_, lens, pt: (b_, h_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, g, dh),
+                               lambda b_, h_, j_, lens, pt: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),      # running max
+            pltpu.VMEM((g, 1), jnp.float32),      # denominator
+            pltpu.VMEM((g, dh), jnp.float32),     # output accumulator
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, scale=scale, ps=ps, ppb=ppb)
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), q4.dtype),
+        interpret=interpret,
+    )(lengths, page_table,
+      q4, *([k_pages] * ppb), *([v_pages] * ppb), kn, vn)
+
+
+def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,
+                           v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                           lengths: jnp.ndarray, k_new: jnp.ndarray,
+                           v_new: jnp.ndarray, *,
+                           pages_per_block: int = 1,
+                           interpret: bool | None = None) -> jnp.ndarray:
+    """Model layout: q [B,1,H,Dh], k_new/v_new [B,1,KVH,Dh] -> [B,1,H,Dh]."""
+    b, _, h, dh = q.shape
+    kvh = k_pages.shape[2]
+    g = h // kvh
+    q4 = q.reshape(b, kvh, g, dh)
+    out = paged_decode_attention_grouped(
+        q4, k_pages, v_pages, page_table, lengths,
+        k_new.reshape(b, kvh, dh), v_new.reshape(b, kvh, dh),
+        pages_per_block=pages_per_block, interpret=interpret)
+    return out.reshape(b, 1, h, dh)

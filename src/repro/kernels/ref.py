@@ -22,7 +22,7 @@ import numpy as np
 from repro.models.linear_scan import sequential_linear_attention
 
 __all__ = ["stream_triad", "jacobi7_sweep", "jacobi7_valid",
-           "flash_attention", "ssd_scan"]
+           "flash_attention", "paged_decode", "ssd_scan"]
 
 
 def stream_triad(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
@@ -81,6 +81,41 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     probs = jnp.where(ok.any(-1, keepdims=True), probs, 0.0).astype(q.dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
     return out.reshape(b, sq, h, dh)
+
+
+def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                 page_table: jnp.ndarray, lengths: jnp.ndarray,
+                 k_new: jnp.ndarray, v_new: jnp.ndarray) -> jnp.ndarray:
+    """Paged decode-attention oracle <- kernels/paged_decode.py.
+
+    q: [B,1,H,Dh]; k/v_pages: [P,ps,KVH,Dh]; page_table: [B,NP] int32;
+    lengths: [B] int32 (past tokens, new token excluded); k_new/v_new:
+    [B,1,KVH,Dh].  Deliberately obvious: gather every listed page into a
+    dense context, append the new token, run one full masked softmax.
+    """
+    b, _, h, dh = q.shape
+    ps, kvh = k_pages.shape[1], k_pages.shape[2]
+    np_w = page_table.shape[1]
+    lengths = jnp.asarray(lengths, jnp.int32)
+    k_ctx = k_pages[page_table].reshape(b, np_w * ps, kvh, dh)
+    v_ctx = v_pages[page_table].reshape(b, np_w * ps, kvh, dh)
+    k_full = jnp.concatenate([k_ctx, k_new.astype(k_ctx.dtype)], axis=1)
+    v_full = jnp.concatenate([v_ctx, v_new.astype(v_ctx.dtype)], axis=1)
+    sk = np_w * ps + 1
+    # positional validity: context keys below each row's length, plus the
+    # appended token itself (always valid) — not a causal triangle
+    ok = jnp.concatenate(
+        [jnp.arange(np_w * ps)[None, :] < lengths[:, None],
+         jnp.ones((b, 1), bool)], axis=1)
+    g = h // kvh
+    qg = q.reshape(b, 1, kvh, g, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg,
+                        k_full.astype(q.dtype)).astype(jnp.float32)
+    scores = scores / np.sqrt(dh)
+    scores = jnp.where(ok[:, None, None, None, :], scores, -2.0e38)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_full.astype(q.dtype))
+    return out.reshape(b, 1, h, dh)
 
 
 def ssd_scan(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

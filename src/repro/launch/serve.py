@@ -30,9 +30,20 @@ def main(argv=None) -> int:
     ap.add_argument("--admission-chunk", type=int, default=8,
                     help="decode steps between admission points")
     ap.add_argument("--attn-impl", default=None,
-                    choices=["pallas_flash", "jnp_flash", "full"],
-                    help="pin the prefill attention impl (default: "
-                         "kernels/dispatch.py picks by backend/shape)")
+                    choices=["pallas_flash", "jnp_flash", "full",
+                             "paged_decode"],
+                    help="pin the attention impl (default: "
+                         "kernels/dispatch.py picks by backend/shape; "
+                         "paged_decode pins the Pallas paged kernel on "
+                         "the decode side only)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged KV cache: tokens per page (0 = dense "
+                         "call-sized caches; decode traffic becomes "
+                         "O(context) instead of O(max_seq))")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="KV pool capacity in pages (default: dense "
+                         "worst case + segment headroom; size from "
+                         "expected traffic to actually save memory)")
     ap.add_argument("--instrument", action="store_true",
                     help="probe serve regions through PerfCtr and report")
     ap.add_argument("--ckpt-dir", default=None)
@@ -63,9 +74,13 @@ def main(argv=None) -> int:
         max_seq=args.max_seq, batch_slots=args.slots,
         temperature=args.temperature,
         admission_chunk=args.admission_chunk,
-        attn_impl=args.attn_impl))
+        attn_impl=args.attn_impl,
+        page_size=args.page_size, pool_pages=args.pool_pages))
     if args.attn_impl:
-        print(f"[serve] prefill attention pinned to {args.attn_impl}")
+        print(f"[serve] attention pinned to {args.attn_impl}")
+    if eng.paged:
+        print(f"[serve] paged KV cache: page_size={args.page_size} "
+              f"pool_pages={eng.pool_pages} table_width={eng.table_width}")
     ctr = None
     if args.instrument:
         from repro.core.perfctr import PerfCtr

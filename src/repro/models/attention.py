@@ -26,7 +26,10 @@ from repro.models.layers import (Params, Specs, apply_mrope, apply_rope,
                                  dense_init, truncated_normal_init)
 
 __all__ = ["AttnConfig", "init_attn", "attn_specs", "attention",
-           "KVCache", "init_kv_cache", "decode_attention", "prefill_into_cache"]
+           "KVCache", "init_kv_cache", "decode_attention",
+           "prefill_into_cache", "PagedKVCache", "init_paged_kv_cache",
+           "prefill_into_paged_cache", "paged_decode_attention_token",
+           "paged_decode_jnp"]
 
 NEG_INF = -2.0e38
 
@@ -434,25 +437,13 @@ def _row_lengths(length: jnp.ndarray, batch: int) -> jnp.ndarray:
     return length
 
 
-def prefill_into_cache(p: Params, x: jnp.ndarray, cfg: AttnConfig,
-                       cache: KVCache,
-                       positions3: Optional[jnp.ndarray] = None,
-                       lengths: Optional[jnp.ndarray] = None
-                       ) -> Tuple[jnp.ndarray, KVCache]:
-    """Run prefill attention AND populate the cache with this segment's K/V.
-
-    ``lengths`` [B] marks the real (unpadded) prompt length per row: keys at
-    positions >= lengths[b] are masked out of every query's softmax, so
-    right-padded ragged prompts attend only their own tokens.  The cache
-    rows record their true lengths — decode continues each row at its own
-    position.
-
-    The attention itself goes through the kernel dispatch layer
-    (:mod:`repro.kernels.dispatch`): on TPU the Pallas flash kernel IS the
-    prefill path (ragged lengths masked in-kernel via ``kv_valid``); on
-    interpret-mode hosts the jnp family runs, and ``REPRO_ATTN_IMPL`` /
-    ``use_attention_impl`` force a specific impl either way.
-    """
+def _prefill_qkv_attend(p: Params, x: jnp.ndarray, cfg: AttnConfig,
+                        positions3: Optional[jnp.ndarray] = None,
+                        lengths: Optional[jnp.ndarray] = None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """The cache-agnostic half of prefill: project q/k/v and run the
+    dispatched prefill attention.  Returns (attn out [B,S,H,Dh], k, v) —
+    the dense and paged prefill paths differ only in where k/v land."""
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     q, k, v = _project_qkv(p, x, cfg, positions, positions3)
@@ -474,6 +465,30 @@ def prefill_into_cache(p: Params, x: jnp.ndarray, cfg: AttnConfig,
                if s > cfg.chunk_threshold
                else _full_attention(q, k, v, causal=cfg.causal,
                                     softmax_mode=mode, kv_len=lengths))
+    return out, k, v
+
+
+def prefill_into_cache(p: Params, x: jnp.ndarray, cfg: AttnConfig,
+                       cache: KVCache,
+                       positions3: Optional[jnp.ndarray] = None,
+                       lengths: Optional[jnp.ndarray] = None
+                       ) -> Tuple[jnp.ndarray, KVCache]:
+    """Run prefill attention AND populate the cache with this segment's K/V.
+
+    ``lengths`` [B] marks the real (unpadded) prompt length per row: keys at
+    positions >= lengths[b] are masked out of every query's softmax, so
+    right-padded ragged prompts attend only their own tokens.  The cache
+    rows record their true lengths — decode continues each row at its own
+    position.
+
+    The attention itself goes through the kernel dispatch layer
+    (:mod:`repro.kernels.dispatch`): on TPU the Pallas flash kernel IS the
+    prefill path (ragged lengths masked in-kernel via ``kv_valid``); on
+    interpret-mode hosts the jnp family runs, and ``REPRO_ATTN_IMPL`` /
+    ``use_attention_impl`` force a specific impl either way.
+    """
+    b, s, _ = x.shape
+    out, k, v = _prefill_qkv_attend(p, x, cfg, positions3, lengths)
     newk = jax.lax.dynamic_update_slice(
         cache.k, k.astype(cache.k.dtype), (0, 0, 0, 0))
     newv = jax.lax.dynamic_update_slice(
@@ -483,6 +498,36 @@ def prefill_into_cache(p: Params, x: jnp.ndarray, cfg: AttnConfig,
     new_cache = KVCache(k=newk, v=newv, length=new_len)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return y, new_cache
+
+
+def _decode_token_attend(q: jnp.ndarray, k_ctx: jnp.ndarray,
+                         v_ctx: jnp.ndarray, valid: jnp.ndarray,
+                         k_tok: jnp.ndarray, v_tok: jnp.ndarray
+                         ) -> jnp.ndarray:
+    """Two-part softmax over (masked context, the new token itself).
+
+    q [B,1,H,Dh]; k/v_ctx [B,S,KVH,Dh]; valid [B,S] (which context keys
+    are real); k/v_tok [B,1,KVH,Dh].  Returns [B,1,H,Dh].  Shared by the
+    dense decode path and the gather-based paged reference so both run
+    the IDENTICAL op sequence.
+    """
+    b = q.shape[0]
+    s_c = _gqa_scores(q, k_ctx.astype(q.dtype)).astype(jnp.float32)
+    s_c = jnp.where(valid[:, None, None, None, :], s_c, NEG_INF)
+    s_t = _gqa_scores(q, k_tok.astype(q.dtype)).astype(jnp.float32)  # [.,1,1]
+    m = jnp.maximum(jnp.max(s_c, -1, keepdims=True), s_t)
+    p_c = jnp.exp(s_c - m)
+    p_t = jnp.exp(s_t - m)
+    denom = jnp.sum(p_c, -1, keepdims=True) + p_t
+    out_c = _gqa_out((p_c / denom).astype(q.dtype),
+                     v_ctx.astype(q.dtype))            # [b,1,h,dh]
+    w_t = (p_t / denom).astype(q.dtype)                # [b,kvh,g,1,1]
+    # token contribution: broadcast v [b,1,kvh,dh] over the g groups
+    vt = v_tok.astype(q.dtype).transpose(0, 2, 1, 3)[:, :, None, :, :]
+    out_t = w_t * vt                                   # [b,kvh,g,1,dh]
+    kvh, g = w_t.shape[1], w_t.shape[2]
+    out_t = out_t.transpose(0, 3, 1, 2, 4).reshape(b, 1, kvh * g, -1)
+    return out_c + out_t
 
 
 def decode_attention_token(p: Params, x: jnp.ndarray, cfg: AttnConfig,
@@ -504,23 +549,9 @@ def decode_attention_token(p: Params, x: jnp.ndarray, cfg: AttnConfig,
     positions = length[:, None]
     q, k, v = _project_qkv(p, x, cfg, positions, positions3)
     smax = k_cache.shape[1]
-    s_c = _gqa_scores(q, k_cache.astype(q.dtype)).astype(jnp.float32)
     valid = jnp.arange(smax)[None, :] < length[:, None]   # strictly the past
-    s_c = jnp.where(valid[:, None, None, None, :], s_c, NEG_INF)
-    s_t = _gqa_scores(q, k.astype(q.dtype)).astype(jnp.float32)  # [.,1,1]
-    m = jnp.maximum(jnp.max(s_c, -1, keepdims=True), s_t)
-    p_c = jnp.exp(s_c - m)
-    p_t = jnp.exp(s_t - m)
-    denom = jnp.sum(p_c, -1, keepdims=True) + p_t
-    out_c = _gqa_out((p_c / denom).astype(q.dtype),
-                     v_cache.astype(q.dtype))          # [b,1,h,dh]
-    w_t = (p_t / denom).astype(q.dtype)                # [b,kvh,g,1,1]
-    # token contribution: broadcast v [b,1,kvh,dh] over the g groups
-    vt = v.transpose(0, 2, 1, 3)[:, :, None, :, :]     # [b,kvh,1,1,dh]
-    out_t = w_t * vt                                   # [b,kvh,g,1,dh]
-    kvh, g = w_t.shape[1], w_t.shape[2]
-    out_t = out_t.transpose(0, 3, 1, 2, 4).reshape(b, 1, kvh * g, -1)
-    y = jnp.einsum("bshk,hkd->bsd", out_c + out_t, p["wo"].astype(x.dtype))
+    out = _decode_token_attend(q, k_cache, v_cache, valid, k, v)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return y, k, v
 
 
@@ -553,3 +584,131 @@ def decode_attention(p: Params, x: jnp.ndarray, cfg: AttnConfig,
     out = _gqa_out(probs, newv.astype(q.dtype))
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return y, KVCache(k=newk, v=newv, length=length + 1)
+
+
+# ---------------------------------------------------------------------------
+# paged KV cache + decode (serve/kv_pool.py storage)
+# ---------------------------------------------------------------------------
+
+class PagedKVCache(NamedTuple):
+    """Block/page KV storage: rows own ``ceil(length/page_size)`` pages.
+
+    ``k_pages``/``v_pages`` are the POOL — pages are not per-row, the
+    page table maps row b's logical page j to physical page
+    ``page_table[b, j]``.  Physical page 0 is the null page: unallocated
+    table entries point at it, and writes routed there are trash by
+    convention (never read — attention masks by ``length``).
+    """
+
+    k_pages: jnp.ndarray     # [P, page_size, KVH, Dh]
+    v_pages: jnp.ndarray     # [P, page_size, KVH, Dh]
+    page_table: jnp.ndarray  # [B, NP] int32 physical page ids
+    length: jnp.ndarray      # [B] int32 — tokens filled so far, per row
+
+    @property
+    def page_size(self) -> int:
+        return self.k_pages.shape[-3]
+
+
+def init_paged_kv_cache(batch: int, num_pages: int, table_width: int,
+                        page_size: int, cfg: AttnConfig,
+                        dtype=jnp.bfloat16) -> PagedKVCache:
+    shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    return PagedKVCache(
+        k_pages=jnp.zeros(shape, dtype), v_pages=jnp.zeros(shape, dtype),
+        page_table=jnp.zeros((batch, table_width), jnp.int32),
+        length=jnp.zeros((batch,), jnp.int32))
+
+
+def _scatter_pages(pages: jnp.ndarray, page_table: jnp.ndarray,
+                   seq: jnp.ndarray) -> jnp.ndarray:
+    """Write [B,S,KVH,Dh] token rows into their pages.
+
+    Position t of row b lands in physical page ``page_table[b, t//ps]`` at
+    offset ``t%ps``.  S is padded up to a page multiple; positions whose
+    table entry is unallocated (0) land in the null page — harmless, and
+    rows never share live pages so the scatter has no real collisions.
+    """
+    b, s, kvh, dh = seq.shape
+    ps = pages.shape[1]
+    pad = (-s) % ps
+    if pad:
+        seq = jnp.pad(seq, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    npp = seq.shape[1] // ps
+    npp_eff = min(npp, page_table.shape[1])
+    tiles = seq[:, :npp_eff * ps].reshape(b, npp_eff, ps, kvh, dh)
+    ids = page_table[:, :npp_eff].reshape(-1)
+    return pages.at[ids].set(
+        tiles.reshape(b * npp_eff, ps, kvh, dh).astype(pages.dtype))
+
+
+def prefill_into_paged_cache(p: Params, x: jnp.ndarray, cfg: AttnConfig,
+                             cache: PagedKVCache,
+                             positions3: Optional[jnp.ndarray] = None,
+                             lengths: Optional[jnp.ndarray] = None
+                             ) -> Tuple[jnp.ndarray, PagedKVCache]:
+    """:func:`prefill_into_cache` with the K/V landing in pages.
+
+    Identical attention compute (same dispatch, same ragged ``lengths``
+    masking); only the cache write differs — each row's K/V tokens are
+    scattered into the pages its table already lists (the pool allocates
+    them before the prefill program runs).
+    """
+    b, s, _ = x.shape
+    out, k, v = _prefill_qkv_attend(p, x, cfg, positions3, lengths)
+    newk = _scatter_pages(cache.k_pages, cache.page_table, k)
+    newv = _scatter_pages(cache.v_pages, cache.page_table, v)
+    new_len = (_row_lengths(lengths, b) if lengths is not None
+               else jnp.full((b,), s, jnp.int32))
+    new_cache = PagedKVCache(k_pages=newk, v_pages=newv,
+                             page_table=cache.page_table, length=new_len)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, new_cache
+
+
+def paged_decode_jnp(q: jnp.ndarray, k_pages: jnp.ndarray,
+                     v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                     length: jnp.ndarray, k_new: jnp.ndarray,
+                     v_new: jnp.ndarray) -> jnp.ndarray:
+    """The gather-based paged decode reference (dispatch ``jnp_paged``).
+
+    Gathers each row's listed pages into a dense [B, NP*ps, KVH, Dh]
+    context view and runs the SAME two-part softmax as the dense decode
+    path (:func:`_decode_token_attend`) — the masked-dense oracle the
+    Pallas kernel is checked against, and the interpret-mode fallback.
+    """
+    b = q.shape[0]
+    ps, kvh, dh = k_pages.shape[1], k_pages.shape[2], k_pages.shape[3]
+    np_w = page_table.shape[1]
+    k_ctx = k_pages[page_table].reshape(b, np_w * ps, kvh, dh)
+    v_ctx = v_pages[page_table].reshape(b, np_w * ps, kvh, dh)
+    valid = jnp.arange(np_w * ps)[None, :] < length[:, None]
+    return _decode_token_attend(q, k_ctx, v_ctx, valid, k_new, v_new)
+
+
+def paged_decode_attention_token(p: Params, x: jnp.ndarray, cfg: AttnConfig,
+                                 k_pages: jnp.ndarray, v_pages: jnp.ndarray,
+                                 page_table: jnp.ndarray,
+                                 length: jnp.ndarray,
+                                 positions3: Optional[jnp.ndarray] = None
+                                 ) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                            jnp.ndarray]:
+    """One-token decode against READ-ONLY pages: the paged twin of
+    :func:`decode_attention_token`.
+
+    Attention touches only the pages each row's table lists — bytes/token
+    is O(length), not O(max_seq).  Which implementation runs (the Pallas
+    paged kernel or the gather reference) is a dispatch decision
+    (:func:`repro.kernels.dispatch.select_paged_decode_impl`); the new
+    token's K/V are returned for the caller to scatter into its page.
+    """
+    b = x.shape[0]
+    length = _row_lengths(length, b)
+    positions = length[:, None]
+    q, k, v = _project_qkv(p, x, cfg, positions, positions3)
+    from repro.kernels import dispatch
+    impl = dispatch.select_paged_decode_impl()
+    out = dispatch.run_paged_decode(impl, q, k_pages, v_pages, page_table,
+                                    length, k, v)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, k, v

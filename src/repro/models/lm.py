@@ -368,12 +368,32 @@ class LM:
         return total, {"ce": ce, "aux": aux, "ntok": ntok}
 
     # ============================================================== serve
-    def init_decode_state(self, batch_size: int, max_seq: int) -> Any:
+    def init_decode_state(self, batch_size: int, max_seq: int,
+                          page_size: int = 0,
+                          num_pages: Optional[int] = None,
+                          table_width: Optional[int] = None) -> Any:
+        """Fresh decode state.  ``page_size > 0`` builds PAGED KV caches
+        (attention-cache families only): a pool of ``num_pages`` pages of
+        ``page_size`` tokens shared by all rows, addressed through per-row
+        page tables of ``table_width`` logical pages (defaults provision
+        the dense worst case — callers that know their traffic pass a
+        smaller pool, which is the whole point)."""
         cfg = self.cfg
         fam = cfg.family
         ac = cfg.attn_config()
+        if page_size > 0 and fam not in ("dense", "moe", "vlm"):
+            raise ValueError(
+                f"paged KV caches need an attention-cache family, not {fam!r}"
+                " (recurrent states have no pages to swap)")
         if fam in ("dense", "moe", "vlm"):
-            cache = attn_mod.init_kv_cache(batch_size, max_seq, ac, self.dtype)
+            if page_size > 0:
+                nppr = -(-max_seq // page_size)
+                cache = attn_mod.init_paged_kv_cache(
+                    batch_size, num_pages or batch_size * nppr + 1,
+                    table_width or nppr, page_size, ac, self.dtype)
+            else:
+                cache = attn_mod.init_kv_cache(batch_size, max_seq, ac,
+                                               self.dtype)
             return {"caches": _stack_tree(cache, cfg.n_layers)}
         if fam == "xlstm":
             xc = cfg.xlstm_config()

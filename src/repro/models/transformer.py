@@ -114,6 +114,20 @@ def apply_block(p: Params, x: jnp.ndarray, cfg: BlockConfig, *,
     return y, aux
 
 
+def _block_mlp(p: Params, h: jnp.ndarray, cfg: BlockConfig,
+               rules, mesh) -> jnp.ndarray:
+    """The post-attention MLP half of a block (aux loss dropped — the
+    decode/prefill paths never train)."""
+    if cfg.mlp == "moe":
+        cst = (lambda a, axes: constrain(a, axes, rules, mesh, soft=True))
+        m, _ = moe_mlp(p["moe"], _norm(h, p["ln2"], cfg), cfg.moe,
+                       constrain_fn=cst)
+        return m
+    mp = p["mlp"]
+    return swiglu(_norm(h, p["ln2"], cfg), mp["w_gate"].astype(h.dtype),
+                  mp["w_up"].astype(h.dtype), mp["w_down"].astype(h.dtype))
+
+
 def apply_block_decode(p: Params, x: jnp.ndarray, cfg: BlockConfig,
                        cache: KVCache, *, rules=DEFAULT_RULES, mesh=None,
                        positions3=None) -> Tuple[jnp.ndarray, KVCache]:
@@ -121,34 +135,23 @@ def apply_block_decode(p: Params, x: jnp.ndarray, cfg: BlockConfig,
         p["attn"], _norm(x, p["ln1"], cfg), cfg.attn, cache,
         positions3=positions3)
     h = x + a
-    if cfg.mlp == "moe":
-        cst = (lambda a, axes: constrain(a, axes, rules, mesh, soft=True))
-        m, _ = moe_mlp(p["moe"], _norm(h, p["ln2"], cfg), cfg.moe,
-                       constrain_fn=cst)
-    else:
-        mp = p["mlp"]
-        m = swiglu(_norm(h, p["ln2"], cfg), mp["w_gate"].astype(x.dtype),
-                   mp["w_up"].astype(x.dtype), mp["w_down"].astype(x.dtype))
-    return h + m, new_cache
+    return h + _block_mlp(p, h, cfg, rules, mesh), new_cache
 
 
 def apply_block_prefill(p: Params, x: jnp.ndarray, cfg: BlockConfig,
-                        cache: KVCache, *, rules=DEFAULT_RULES, mesh=None,
-                        positions3=None, lengths=None
-                        ) -> Tuple[jnp.ndarray, KVCache]:
-    a, new_cache = attn_mod.prefill_into_cache(
+                        cache, *, rules=DEFAULT_RULES, mesh=None,
+                        positions3=None, lengths=None):
+    """Prefill one block; ``cache`` may be dense (:class:`KVCache`) or
+    paged (:class:`~repro.models.attention.PagedKVCache`) — the attention
+    compute is identical, only the K/V landing zone differs."""
+    prefill_fn = (attn_mod.prefill_into_paged_cache
+                  if isinstance(cache, attn_mod.PagedKVCache)
+                  else attn_mod.prefill_into_cache)
+    a, new_cache = prefill_fn(
         p["attn"], _norm(x, p["ln1"], cfg), cfg.attn, cache,
         positions3=positions3, lengths=lengths)
     h = x + a
-    if cfg.mlp == "moe":
-        cst = (lambda a, axes: constrain(a, axes, rules, mesh, soft=True))
-        m, _ = moe_mlp(p["moe"], _norm(h, p["ln2"], cfg), cfg.moe,
-                       constrain_fn=cst)
-    else:
-        mp = p["mlp"]
-        m = swiglu(_norm(h, p["ln2"], cfg), mp["w_gate"].astype(x.dtype),
-                   mp["w_up"].astype(x.dtype), mp["w_down"].astype(x.dtype))
-    return h + m, new_cache
+    return h + _block_mlp(p, h, cfg, rules, mesh), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -224,7 +227,16 @@ def apply_stack_decode(stacked: Params, x: jnp.ndarray, cfg: BlockConfig,
     -loop aliasing).  Scanning caches as xs and re-stacking them as ys — the
     obvious form — rewrites each layer's full [B,S,KVH,Dh] slice every
     decoded token (§Perf hillclimb 3: 53 GB/step on mistral-large).
+
+    A paged cache (:class:`~repro.models.attention.PagedKVCache`) takes its
+    own path: per-layer paged decode attention over the page table, plus a
+    single-page token write — bytes/token O(length), not O(max_seq).
     """
+    if isinstance(caches, attn_mod.PagedKVCache) \
+            and block_fn is apply_block_decode:
+        return _apply_stack_decode_paged(stacked, x, cfg, caches, features,
+                                         rules=rules, mesh=mesh,
+                                         positions3=positions3)
     if features.scan_layers and features.decode_inplace_cache \
             and block_fn is apply_block_decode:
         b = x.shape[0]
@@ -242,18 +254,7 @@ def apply_stack_decode(stacked: Params, x: jnp.ndarray, cfg: BlockConfig,
                 layer_p["attn"], _norm(h, layer_p["ln1"], cfg), cfg.attn,
                 k_l, v_l, length, positions3=positions3)
             h2 = h + a
-            if cfg.mlp == "moe":
-                cst = (lambda a_, axes: constrain(a_, axes, rules, mesh,
-                                                  soft=True))
-                m, _ = moe_mlp(layer_p["moe"], _norm(h2, layer_p["ln2"], cfg),
-                               cfg.moe, constrain_fn=cst)
-            else:
-                mp = layer_p["mlp"]
-                hn = _norm(h2, layer_p["ln2"], cfg)
-                m = swiglu(hn, mp["w_gate"].astype(h2.dtype),
-                           mp["w_up"].astype(h2.dtype),
-                           mp["w_down"].astype(h2.dtype))
-            y = h2 + m
+            y = h2 + _block_mlp(layer_p, h2, cfg, rules, mesh)
             # per-row scatter: row b's token lands at its own length[b]
             kst = kst.at[i, rows, length].set(k_t[:, 0].astype(kst.dtype))
             vst = vst.at[i, rows, length].set(v_t[:, 0].astype(vst.dtype))
@@ -283,3 +284,59 @@ def apply_stack_decode(stacked: Params, x: jnp.ndarray, cfg: BlockConfig,
         outs.append(nc)
     new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
     return h, new_caches
+
+
+def _apply_stack_decode_paged(stacked: Params, x: jnp.ndarray,
+                              cfg: BlockConfig,
+                              caches: "attn_mod.PagedKVCache",
+                              features: FeatureSet, *,
+                              rules=DEFAULT_RULES, mesh=None,
+                              positions3=None):
+    """One-token decode through stacked blocks over PAGED caches.
+
+    Pages are carried in place (scan carry, while-loop aliasing, exactly
+    like the dense in-place path); the page table and per-row lengths are
+    shared across layers (every layer's slice holds the same values, so
+    layer 0's are read once).  The token write touches ONE page per layer:
+    row b's token lands in physical page ``pt[b, length[b] // ps]`` at
+    offset ``length[b] % ps`` — the pool guarantees that page is
+    allocated before the segment runs.
+    """
+    b = x.shape[0]
+    length = attn_mod._row_lengths(
+        caches.length[0] if caches.length.ndim > 1 else caches.length, b)
+    pt = (caches.page_table[0] if caches.page_table.ndim > 2
+          else caches.page_table)
+    ps = caches.k_pages.shape[-3]
+    np_w = pt.shape[-1]
+    rows = jnp.arange(b)
+    page = pt[rows, jnp.minimum(length // ps, np_w - 1)]
+    off = length % ps
+    n = jax.tree.leaves(stacked)[0].shape[0]
+
+    def body(carry, scanned):
+        h, kst, vst = carry
+        i, layer_p = scanned
+        k_l = jax.lax.dynamic_index_in_dim(kst, i, 0, keepdims=False)
+        v_l = jax.lax.dynamic_index_in_dim(vst, i, 0, keepdims=False)
+        a, k_t, v_t = attn_mod.paged_decode_attention_token(
+            layer_p["attn"], _norm(h, layer_p["ln1"], cfg), cfg.attn,
+            k_l, v_l, pt, length, positions3=positions3)
+        h2 = h + a
+        y = h2 + _block_mlp(layer_p, h2, cfg, rules, mesh)
+        kst = kst.at[i, page, off].set(k_t[:, 0].astype(kst.dtype))
+        vst = vst.at[i, page, off].set(v_t[:, 0].astype(vst.dtype))
+        return (y, kst, vst), None
+
+    if features.scan_layers:
+        (y, kst, vst), _ = jax.lax.scan(
+            body, (x, caches.k_pages, caches.v_pages),
+            (jnp.arange(n), stacked))
+    else:
+        y, kst, vst = x, caches.k_pages, caches.v_pages
+        for i in range(n):
+            layer_p = jax.tree.map(lambda a: a[i], stacked)
+            (y, kst, vst), _ = body((y, kst, vst), (jnp.asarray(i), layer_p))
+    return y, attn_mod.PagedKVCache(k_pages=kst, v_pages=vst,
+                                    page_table=caches.page_table,
+                                    length=caches.length + 1)

@@ -1,2 +1,3 @@
 from repro.serve.engine import (MASKED_FAMILIES, BatchScheduler,  # noqa
                                 Engine, Request, ServeConfig)
+from repro.serve.kv_pool import KVPool  # noqa

@@ -79,8 +79,16 @@ class ServeConfig:
     admission_chunk: int = 8        # decode steps between admission points
     # attention impl forced for every program this engine traces (None ->
     # repro.kernels.dispatch picks by backend/shape/$REPRO_ATTN_IMPL);
-    # fixed per-engine because jitted programs are traced once and cached
+    # fixed per-engine because jitted programs are traced once and cached.
+    # "paged_decode" pins the Pallas paged kernel on the decode side and
+    # leaves prefill to the heuristics.
     attn_impl: Optional[str] = None
+    # paged KV cache: tokens per page (0 -> dense call-sized caches).
+    # Attention-cache families only; decode traffic becomes O(length).
+    page_size: int = 0
+    # pool capacity in pages (None -> dense worst case + segment headroom,
+    # which is safe but savings-free; size from expected traffic instead)
+    pool_pages: Optional[int] = None
 
 
 @dataclasses.dataclass
@@ -114,19 +122,74 @@ class Engine:
         self.perfctr = perfctr          # optional repro.core.perfctr.PerfCtr
         self.host_syncs = 0             # device->host transfers (audited)
         self.fused_calls = 0            # fused-loop dispatches
+        self.paged = cfg.page_size > 0
+        if self.paged and lm.cfg.family not in MASKED_FAMILIES:
+            raise ValueError(
+                f"page_size={cfg.page_size} needs an attention-cache "
+                f"family ({MASKED_FAMILIES}), not {lm.cfg.family!r}")
+        if cfg.attn_impl == "paged_decode" and not self.paged:
+            raise ValueError(
+                "attn_impl='paged_decode' pins the paged decode kernel, "
+                "but this engine is dense (page_size=0) — the pin would "
+                "silently measure the dense path; set page_size too")
+        if self.paged:
+            from repro.serve import kv_pool
+            # table/pool headroom: power-of-two segments may overshoot a
+            # request's budget by up to one segment of writes
+            self.table_width = kv_pool.table_width_for(
+                cfg.max_seq, cfg.page_size, self.seg_cap)
+            self.pool_pages = cfg.pool_pages or kv_pool.recommended_pages(
+                cfg.batch_slots, cfg.max_seq, cfg.page_size, self.seg_cap)
         self._prefill = jax.jit(lm.prefill)
         self._decode = jax.jit(lm.decode_step)
-        # fused generate programs, keyed by static max_new_tokens
-        self._fused: Dict[int, Callable] = {}
+        # fused generate programs: keyed by max_new (dense) or by
+        # (max_new, pool pages, table width) (paged — pool is call-sized)
+        self._fused: Dict[Any, Callable] = {}
         # continuous-batching decode segments, keyed by static step count
+        # (power-of-two quantized: at most log2(admission_chunk)+1 entries)
         self._segments: Dict[int, Callable] = {}
         # slot prefill: init+prefill a single row in one jitted program
         self._slot_prefill = jax.jit(self._slot_prefill_impl)
         # slot merge: scatter a single-row state into the shared state;
         # the big buffers are donated — admission rewrites one row in place
         self._merge = jax.jit(self._merge_impl, donate_argnums=(0, 1))
+        # paged slot prefill: writes the row's K/V straight into the shared
+        # pool pages (no row-sized twin state to merge), donated in place
+        self._paged_slot_prefill = jax.jit(self._paged_slot_prefill_impl,
+                                           donate_argnums=(1, 2))
 
     # -------------------------------------------------------------- helpers
+    @property
+    def seg_cap(self) -> int:
+        """Largest power-of-two segment: quantized steps never exceed it."""
+        return 1 << (max(self.cfg.admission_chunk, 1).bit_length() - 1)
+
+    def quantize_steps(self, steps: int) -> int:
+        """Round a requested step count UP to a power of two (capped at the
+        admission chunk), so the scheduler's churn of distinct remaining-
+        budget values compiles at most log2(chunk)+1 segment programs.
+        Overshoot past a request's budget is masked by the scheduler
+        against ``max_new_tokens`` — no token is ever *returned* past it.
+        """
+        steps = max(int(steps), 1)
+        return min(1 << (steps - 1).bit_length(), self.seg_cap)
+
+    def _state_kwargs(self) -> Dict[str, Any]:
+        """init_decode_state kwargs for this engine's cache flavor."""
+        if not self.paged:
+            return {}
+        return dict(page_size=self.cfg.page_size,
+                    num_pages=self.pool_pages,
+                    table_width=self.table_width)
+
+    def set_page_table(self, state, table) -> Any:
+        """Swap the (host-managed) page table into a decode state."""
+        caches = state["caches"]
+        n_layers = caches.length.shape[0]
+        tbl = jnp.broadcast_to(jnp.asarray(table, jnp.int32)[None],
+                               (n_layers,) + tuple(table.shape))
+        return dict(state, caches=caches._replace(page_table=tbl))
+
     def _fetch(self, tree):
         """THE device->host sync point: every transfer is counted here."""
         self.host_syncs += 1
@@ -165,18 +228,25 @@ class Engine:
         return toks, lens
 
     # ------------------------------------------------- fused generate (jit)
-    def _make_fused(self, max_new: int) -> Callable:
+    def _make_fused(self, max_new: int,
+                    paged_dims: Optional[Tuple[int, int]] = None) -> Callable:
         """Build the single-dispatch generate program for a fixed budget.
 
         prefill + the whole decode loop live in ONE jitted computation:
         the loop body samples on device, records the token into a [B,T]
         buffer, folds eos into a per-row done mask, and early-exits the
         while_loop as soon as every row is done — zero host round-trips.
+
+        ``paged_dims`` = (num_pages, table_width) builds the paged twin:
+        the KV pool inside the program is sized to THIS call's actual
+        demand (sum over rows of ceil((len+max_new)/page)), and the host-
+        planned page table rides in as an argument — one long prompt no
+        longer inflates every row's buffer.
         """
         cfg = self.cfg
         masked = self.lm.cfg.family in MASKED_FAMILIES
 
-        def fused(params, toks, lens, rng, extra):
+        def fused(params, toks, lens, rng, extra, table=None):
             b = toks.shape[0]
             # size the cache to THIS call's worst case, not cfg.max_seq:
             # every decode step streams the whole cache buffer, so capacity
@@ -184,7 +254,14 @@ class Engine:
             # nearby shapes share layouts)
             need = toks.shape[1] + max_new
             seq_cap = min(cfg.max_seq, -(-need // 32) * 32)
-            state = self.lm.init_decode_state(b, seq_cap)
+            if paged_dims is not None:
+                num_pages, table_width = paged_dims
+                state = self.lm.init_decode_state(
+                    b, seq_cap, page_size=cfg.page_size,
+                    num_pages=num_pages, table_width=table_width)
+                state = self.set_page_table(state, table)
+            else:
+                state = self.lm.init_decode_state(b, seq_cap)
             batch = dict(extra, tokens=toks)
             if masked:
                 batch["lengths"] = lens
@@ -230,14 +307,32 @@ class Engine:
                 f"exceeds max_seq ({cfg.max_seq})")
         extra = ({k: jnp.asarray(v) for k, v in extra_batch.items()}
                  if extra_batch else {})
-        fused = self._fused.get(max_new_tokens)
+        args = ()
+        paged_dims = None
+        if self.paged:
+            # call-sized pool plan: exactly the pages this call can touch,
+            # laid out row-major (rounded up so nearby calls share layouts)
+            from repro.serve.kv_pool import pages_for
+            per_row = [pages_for(len(p) + max_new_tokens, cfg.page_size)
+                       for p in prompts]
+            table_width = max(per_row)
+            num_pages = -(-(1 + sum(per_row)) // 16) * 16
+            table = np.zeros((len(prompts), table_width), np.int32)
+            nxt = 1
+            for i, npages in enumerate(per_row):
+                table[i, :npages] = np.arange(nxt, nxt + npages)
+                nxt += npages
+            paged_dims = (num_pages, table_width)
+            args = (jnp.asarray(table),)
+        key = (max_new_tokens, paged_dims)
+        fused = self._fused.get(key)
         if fused is None:
-            fused = self._fused[max_new_tokens] = \
-                self._make_fused(max_new_tokens)
+            fused = self._fused[key] = \
+                self._make_fused(max_new_tokens, paged_dims)
         self.fused_calls += 1
         with self._region_timer(DECODE_REGION), self._impl_ctx():
             out, n = fused(self.params, jnp.asarray(toks), jnp.asarray(lens),
-                           jax.random.PRNGKey(cfg.seed), extra)
+                           jax.random.PRNGKey(cfg.seed), extra, *args)
             out_np, n_np = self._fetch((out, n))    # the ONE sync
         return [out_np[i, :n_np[i]].tolist() for i in range(len(prompts))]
 
@@ -300,10 +395,58 @@ class Engine:
             logits_buf, row_logits.astype(logits_buf.dtype), slot, axis=0)
         return merged, logits_buf
 
+    def _paged_slot_prefill_impl(self, params, state, logits_buf, toks,
+                                 slot, table_row):
+        """Prefill ONE row straight into the shared page pool.
+
+        The row's pages already belong to it (the pool allocated them
+        before this program runs), so there is no row-sized twin state to
+        merge afterwards: prefill runs over a 1-row VIEW that shares the
+        big page buffers, then the slot's table row, length and logits are
+        scattered in.  ``state`` and ``logits_buf`` are donated — admission
+        rewrites pages and one table row in place.
+        """
+        from repro.models.attention import PagedKVCache
+        caches = state["caches"]
+        n_layers, s = caches.length.shape[0], toks.shape[1]
+        np_w = caches.page_table.shape[-1]
+        row_view = PagedKVCache(
+            k_pages=caches.k_pages, v_pages=caches.v_pages,
+            page_table=jnp.broadcast_to(table_row[None, None],
+                                        (n_layers, 1, np_w)),
+            length=jnp.zeros((n_layers, 1), jnp.int32))
+        row_logits, new_row = self.lm.prefill(
+            params, {"tokens": toks}, {"caches": row_view})
+        nc = new_row["caches"]
+        new_caches = PagedKVCache(
+            k_pages=nc.k_pages, v_pages=nc.v_pages,
+            page_table=jax.lax.dynamic_update_slice_in_dim(
+                caches.page_table,
+                jnp.broadcast_to(table_row[None, None], (n_layers, 1, np_w)),
+                slot, axis=1),
+            length=jax.lax.dynamic_update_slice_in_dim(
+                caches.length, jnp.full((n_layers, 1), s, jnp.int32),
+                slot, axis=1))
+        logits_buf = jax.lax.dynamic_update_slice_in_dim(
+            logits_buf, row_logits.astype(logits_buf.dtype), slot, axis=0)
+        return dict(state, caches=new_caches), logits_buf
+
     def prefill_slot(self, state, logits_buf, prompt: Sequence[int],
-                     slot: int):
-        """Admission point: prefill `prompt` into slot `slot` mid-flight."""
+                     slot: int, table_row=None):
+        """Admission point: prefill `prompt` into slot `slot` mid-flight.
+
+        Paged engines pass the slot's freshly-allocated ``table_row`` and
+        the K/V lands directly in its pool pages; dense engines keep the
+        row-twin prefill + donated scatter-merge.
+        """
         toks = jnp.asarray([list(prompt)], jnp.int32)
+        if self.paged:
+            assert table_row is not None, "paged admission needs a table row"
+            with self._region_timer(PREFILL_REGION), self._impl_ctx():
+                return self._paged_slot_prefill(
+                    self.params, state, logits_buf, toks,
+                    jnp.asarray(slot, jnp.int32),
+                    jnp.asarray(table_row, jnp.int32))
         with self._region_timer(PREFILL_REGION), self._impl_ctx():
             row_logits, row_state = self._slot_prefill(self.params, toks)
         return self._merge(state, logits_buf, row_state, row_logits,
@@ -312,11 +455,18 @@ class Engine:
     def decode_segment(self, steps: int) -> Callable:
         """The jitted `steps`-token decode over all slots.
 
-        ``lax.scan`` over the fused sample->decode body; decode state and
-        the logits buffer are DONATED, so segment-to-segment the cache
-        buffers alias instead of reallocating.  Returns
-        (tokens [B,steps], logits, state, rng).
+        ``steps`` is quantized UP to a power of two (``quantize_steps``),
+        so scheduler churn across distinct remaining-budget values keeps
+        at most log2(admission_chunk)+1 jitted entry points — the caller
+        masks any overshoot against per-request budgets.  (On a paged
+        engine each entry point additionally retraces per page-table
+        WIDTH it is fed — the scheduler's live-mix buckets, x4-page
+        quantized, bound that churn.)  ``lax.scan`` over the fused
+        sample->decode body; decode state and the logits buffer are
+        DONATED, so segment-to-segment the cache buffers alias instead of
+        reallocating.  Returns (tokens [B,steps], logits, state, rng).
         """
+        steps = self.quantize_steps(steps)
         fn = self._segments.get(steps)
         if fn is None:
             def seg(params, state, logits, rng):
@@ -351,7 +501,8 @@ class Engine:
         params_s = jax.tree.map(
             lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), self.params)
         state_s = jax.eval_shape(
-            lambda: self.lm.init_decode_state(b, cfg.max_seq))
+            lambda: self.lm.init_decode_state(b, cfg.max_seq,
+                                              **self._state_kwargs()))
         toks_s = jax.ShapeDtypeStruct((b, prompt_len), jnp.int32)
         with perfctr.marker(PREFILL_REGION), self._impl_ctx():
             perfctr.probe(self.lm.prefill, params_s,
@@ -365,13 +516,25 @@ class BatchScheduler:
     """True continuous batching over an Engine's shared decode state.
 
     A slot table of ``batch_slots`` rows.  Decode runs in jitted
-    multi-token segments (``admission_chunk`` steps; never more than any
-    active row's remaining budget, so no token is generated past its
-    request's ``max_new_tokens``).  After each segment ONE host sync
-    fetches the segment's tokens; finished rows (eos or budget) release
-    their slots immediately and queued requests prefill into the freed
-    slots at their exact prompt length before the next segment — no
-    full-batch barrier, no wave drains.
+    multi-token segments (power-of-two quantized, at most
+    ``admission_chunk`` steps; a segment may overshoot the tightest
+    remaining budget by a few on-device tokens, but retire masks every
+    row against its own ``max_new_tokens`` — no token is ever RETURNED
+    past a request's budget, and at most log2(chunk)+1 segment entry
+    points ever exist, retraced per table-width bucket on paged
+    engines).  After each segment ONE host sync fetches the
+    segment's tokens; finished rows (eos or budget) release their slots
+    immediately and queued requests prefill into the freed slots at their
+    exact prompt length before the next segment — no full-batch barrier,
+    no wave drains.
+
+    On a paged engine (``ServeConfig.page_size > 0``) the scheduler also
+    drives the KV pool (:class:`repro.serve.kv_pool.KVPool`): admission
+    allocates exactly ``ceil(len/page)`` pages (deferring when the pool is
+    full — backpressure instead of overcommit), each segment pre-extends
+    active rows to cover its writes and uploads the fresh page table, and
+    retirement returns the pages — one long request no longer inflates
+    every slot's buffer.
     """
 
     def __init__(self, engine: Engine,
@@ -384,6 +547,7 @@ class BatchScheduler:
         self.metrics: Dict[str, float] = {"segments": 0, "admissions": 0,
                                           "decode_steps": 0}
         self.admission_log: List[Tuple[int, int]] = []   # (rid, slot)
+        self.pool = None    # KVPool, created per run() on paged engines
 
     def submit(self, req: Request) -> None:
         if req.max_new_tokens < 1:
@@ -403,35 +567,90 @@ class BatchScheduler:
         if not self.queue:
             return self.completed
         nslots = cfg.batch_slots
-        state = eng.lm.init_decode_state(nslots, cfg.max_seq)
+        if eng.paged:
+            from repro.serve.kv_pool import KVPool
+            self.pool = KVPool(eng.pool_pages, cfg.page_size, nslots,
+                               eng.table_width)
+        state = eng.lm.init_decode_state(nslots, cfg.max_seq,
+                                         **eng._state_kwargs())
         logits = jnp.zeros((nslots, eng.lm.cfg.vocab), eng.lm.dtype)
         rng = jax.random.PRNGKey(cfg.seed)
         slots: List[Optional[Request]] = [None] * nslots
         remaining = np.zeros(nslots, np.int64)
+        # device-side row length (includes segment overshoot the request
+        # never sees — the page a token was WRITTEN to must stay covered)
+        slot_len = np.zeros(nslots, np.int64)
 
         while self.queue or any(s is not None for s in slots):
             # ---- admission: freed slots take queued requests mid-flight
+            width_restored = False
             for i in range(nslots):
                 if slots[i] is None and self.queue:
-                    req = self.queue.popleft()
+                    req = self.queue[0]
+                    table_row = None
+                    if self.pool is not None:
+                        # admission allocates exactly ceil(len/page) pages
+                        # for the prompt and RESERVES the request's worst
+                        # case (budget + segment overshoot), so decode
+                        # growth can never exhaust the pool mid-run; a
+                        # full pool defers admission (backpressure)
+                        worst = (len(req.prompt) + req.max_new_tokens
+                                 + eng.seg_cap)
+                        if not self.pool.can_reserve(worst):
+                            if not any(s is not None for s in slots):
+                                raise RuntimeError(
+                                    f"request {req.rid}: needs more pages "
+                                    f"than the whole pool can promise "
+                                    f"({self.pool!r})")
+                            break
+                        self.pool.reserve(i, worst)
+                        self.pool.alloc(i, len(req.prompt))
+                        table_row = self.pool.tables[i]
+                        # admission programs key on the FULL table width
+                        # (prefill only scatter-writes through the table,
+                        # and writes its own slot's row on device; one
+                        # width-restoring upload per round suffices — the
+                        # next segment re-slices to the live mix)
+                        if not width_restored:
+                            state = eng.set_page_table(state,
+                                                       self.pool.table())
+                            width_restored = True
+                    self.queue.popleft()
                     state, logits = eng.prefill_slot(state, logits,
-                                                     req.prompt, i)
+                                                     req.prompt, i,
+                                                     table_row=table_row)
                     slots[i] = req
                     remaining[i] = req.max_new_tokens
+                    slot_len[i] = len(req.prompt)
                     self.metrics["admissions"] += 1
                     self.admission_log.append((req.rid, i))
 
             active = np.array([s is not None for s in slots])
-            # largest power of two that fits every active row's remaining
-            # budget: never over-generates past a request's max_new_tokens,
-            # and only log2(admission_chunk)+1 distinct segment programs
-            # ever compile
-            fit = int(min(self.admission_chunk, remaining[active].min()))
-            steps = 1 << (fit.bit_length() - 1)
+            # requested steps fit the tightest active budget; the engine
+            # quantizes UP to a power of two (so at most log2(chunk)+1
+            # segment programs ever compile) and overshoot is masked
+            # against each request's budget at retire time
+            steps = eng.quantize_steps(
+                min(self.admission_chunk, int(remaining[active].min())))
+            if self.pool is not None:
+                # cover every page this segment can write, then hand the
+                # device a table sliced to the width the LIVE mix needs
+                # (quantized so programs are shared): decode traffic —
+                # and the traffic model's gather window — tracks actual
+                # context, not max_seq.  A long request widens segments
+                # only while it is resident.
+                for i in np.nonzero(active)[0]:
+                    self.pool.ensure(int(i), int(slot_len[i]) + steps)
+                width = max(self.pool.slot_pages(int(i))
+                            for i in np.nonzero(active)[0])
+                bucket = min(-(-max(width, 1) // 4) * 4, eng.table_width)
+                state = eng.set_page_table(state,
+                                           self.pool.table()[:, :bucket])
             with eng._region_timer(DECODE_REGION):
                 toks, logits, state, rng = eng.decode_segment(steps)(
                     eng.params, state, logits, rng)
                 toks_np = eng._fetch(toks)       # ONE sync per segment
+            slot_len[active] += steps
             self.metrics["segments"] += 1
             self.metrics["decode_steps"] += steps
             now = time.perf_counter()
@@ -441,7 +660,7 @@ class BatchScheduler:
                 req = slots[i]
                 if not req.generated and not req.first_token_time:
                     req.first_token_time = now
-                take = toks_np[i]
+                take = toks_np[i][:remaining[i]]   # mask segment overshoot
                 finished = False
                 if cfg.eos_token >= 0:
                     hits = np.nonzero(take == cfg.eos_token)[0]
@@ -455,4 +674,7 @@ class BatchScheduler:
                     self.completed[req.rid] = req
                     slots[i] = None
                     remaining[i] = 0
+                    slot_len[i] = 0
+                    if self.pool is not None:
+                        self.pool.release(int(i))
         return self.completed

@@ -1,0 +1,179 @@
+"""Host-side page allocator for the paged KV cache (the pool manager).
+
+The device state (:class:`repro.models.attention.PagedKVCache`) is dumb
+storage: a pool of ``[num_pages, page_size, KVH, Dh]`` pages per layer and
+per-slot page tables.  THIS class owns the policy: a global free list of
+physical pages, per-slot ownership, and the ``[slots, max_pages]`` int32
+table mirror the scheduler uploads before every decode segment.
+
+Contract (asserted by :meth:`check`, tested under scheduler churn):
+
+* physical page 0 is the NULL page — never allocated, the landing zone
+  for every unallocated table entry's (masked, unread) traffic;
+* admission allocates exactly ``ceil(len/page_size)`` pages for the
+  prompt and RESERVES the slot's worst-case growth (:meth:`reserve`) so
+  decode-time :meth:`ensure` calls can never exhaust the pool mid-run —
+  a request that cannot reserve simply waits in the queue (backpressure,
+  not a mid-flight abort);
+* decode growth (:meth:`ensure`) adds pages one boundary at a time;
+  retirement (:meth:`release`) returns every page AND the reservation;
+* a page is owned by at most one slot at a time (no double-alloc, no
+  double-free), and ``free + owned == all pages`` at every step.
+
+Sizing: :func:`recommended_pages` provisions the dense worst case plus
+segment-overshoot headroom — safe but savings-free.  Real deployments set
+``ServeConfig.pool_pages`` from expected traffic (mean context, not
+``max_seq``); the pool then admission-gates when fragmentation would
+otherwise overcommit, which is the scheduler's backpressure signal.
+"""
+
+from __future__ import annotations
+
+import collections
+from typing import Deque, List
+
+import numpy as np
+
+__all__ = ["KVPool", "pages_for", "recommended_pages", "table_width_for"]
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``tokens`` tokens: ceil(tokens / page_size)."""
+    return -(-tokens // page_size)
+
+
+def table_width_for(max_seq: int, page_size: int, headroom: int = 0) -> int:
+    """Logical pages per slot: ceil((max_seq + headroom) / page_size).
+
+    ``headroom`` covers decode-segment overshoot (power-of-two quantized
+    segments may write up to a segment past a request's budget)."""
+    return pages_for(max_seq + headroom, page_size)
+
+
+def recommended_pages(slots: int, max_seq: int, page_size: int,
+                      headroom: int = 0) -> int:
+    """Worst-case pool size: every slot at max_seq (+headroom), plus the
+    null page.  A safe default — pools sized below it are the point."""
+    return slots * table_width_for(max_seq, page_size, headroom) + 1
+
+
+class KVPool:
+    """Global free list + per-slot page tables over a fixed page pool."""
+
+    def __init__(self, num_pages: int, page_size: int, slots: int,
+                 table_width: int):
+        if num_pages < 2:
+            raise ValueError(f"pool needs >= 2 pages (got {num_pages}): "
+                             "page 0 is reserved as the null page")
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        self.slots = int(slots)
+        self.table_width = int(table_width)
+        # LIFO free list: recently-released pages are re-used first (their
+        # contents are dead anyway and they are likelier cache-warm)
+        self.free: Deque[int] = collections.deque(range(1, num_pages))
+        self.owned: List[List[int]] = [[] for _ in range(slots)]
+        self.reserved: List[int] = [0] * slots   # worst-case pages promised
+        self.tables = np.zeros((slots, table_width), np.int32)
+        self.allocs = 0          # pages handed out (audited)
+        self.releases = 0        # pages returned
+
+    # ------------------------------------------------------------- queries
+    def available(self) -> int:
+        return len(self.free)
+
+    def unpromised(self) -> int:
+        """Free pages not already promised to active slots' future growth."""
+        outstanding = sum(max(r - len(o), 0)
+                          for r, o in zip(self.reserved, self.owned))
+        return len(self.free) - outstanding
+
+    def can_fit(self, tokens: int, slot: int) -> bool:
+        """Would :meth:`ensure` for ``tokens`` total tokens succeed?"""
+        need = pages_for(tokens, self.page_size) - len(self.owned[slot])
+        return need <= len(self.free)
+
+    def can_reserve(self, worst_tokens: int) -> bool:
+        """Could a NEW slot reserving ``worst_tokens`` of growth be
+        admitted without ever failing an :meth:`ensure` later?"""
+        need = min(pages_for(worst_tokens, self.page_size),
+                   self.table_width)
+        return need <= self.unpromised()
+
+    def reserve(self, slot: int, worst_tokens: int) -> None:
+        """Promise ``worst_tokens`` of total coverage to ``slot`` — gated
+        by :meth:`can_reserve` at admission, so every later ensure() up
+        to the reservation is guaranteed to find free pages."""
+        self.reserved[slot] = min(pages_for(worst_tokens, self.page_size),
+                                  self.table_width)
+
+    def slot_pages(self, slot: int) -> int:
+        return len(self.owned[slot])
+
+    def table(self) -> np.ndarray:
+        """A copy of the [slots, table_width] table for device upload."""
+        return self.tables.copy()
+
+    # ----------------------------------------------------------- lifecycle
+    def ensure(self, slot: int, tokens: int) -> int:
+        """Grow slot ``slot`` to cover ``tokens`` total tokens; returns the
+        number of pages newly allocated.  Raises on pool exhaustion or
+        table overflow — the scheduler admission-gates so decode-time
+        growth never fails in a correctly-sized deployment."""
+        need = pages_for(tokens, self.page_size)
+        if need > self.table_width:
+            raise ValueError(
+                f"slot {slot}: {tokens} tokens need {need} pages "
+                f"> table_width {self.table_width}")
+        grow = need - len(self.owned[slot])
+        if grow > len(self.free):
+            raise RuntimeError(
+                f"KV pool exhausted: slot {slot} needs {grow} more pages, "
+                f"{len(self.free)} free of {self.num_pages - 1} "
+                "(size the pool with ServeConfig.pool_pages)")
+        for _ in range(max(grow, 0)):
+            pid = self.free.pop()
+            self.tables[slot, len(self.owned[slot])] = pid
+            self.owned[slot].append(pid)
+            self.allocs += 1
+        return max(grow, 0)
+
+    # admission vocabulary: a new prompt allocates exactly ceil(len/page)
+    alloc = ensure
+
+    def release(self, slot: int) -> int:
+        """Retire a slot: return its pages + reservation, zero its table."""
+        n = len(self.owned[slot])
+        for pid in self.owned[slot]:
+            self.free.append(pid)
+            self.releases += 1
+        self.owned[slot] = []
+        self.reserved[slot] = 0
+        self.tables[slot, :] = 0
+        return n
+
+    # ----------------------------------------------------------- invariants
+    def check(self) -> None:
+        """Assert the pool invariants (cheap; tests call it every step)."""
+        seen = set(self.free)
+        assert len(seen) == len(self.free), "double-free in the free list"
+        assert 0 not in seen, "null page leaked into the free list"
+        for slot, pages in enumerate(self.owned):
+            for j, pid in enumerate(pages):
+                assert pid not in seen, \
+                    f"page {pid} both free and owned by slot {slot}"
+                assert self.tables[slot, j] == pid, "table/ownership skew"
+                seen.add(pid)
+            assert (self.tables[slot, len(pages):] == 0).all(), \
+                f"slot {slot}: stale table entries past its allocation"
+        assert seen == set(range(1, self.num_pages)), \
+            f"page leak: {set(range(1, self.num_pages)) - seen} unaccounted"
+
+    def all_free(self) -> bool:
+        return len(self.free) == self.num_pages - 1
+
+    def __repr__(self) -> str:
+        used = self.num_pages - 1 - len(self.free)
+        return (f"KVPool(pages={self.num_pages}, page_size={self.page_size},"
+                f" used={used}, free={len(self.free)},"
+                f" allocs={self.allocs}, releases={self.releases})")

@@ -179,3 +179,100 @@ def test_slice_charged_at_window_not_operand():
     dyn = analyze_text(_compile(f, w).as_text())
     # traffic must be ~2x the 16 KiB window + reduction, nowhere near 393 KiB
     assert dyn.bytes_accessed < 100_000
+
+
+# ---------------------------------------------------------------------------
+# the paged path: gather/dynamic-slice index operands are charged
+# ---------------------------------------------------------------------------
+
+def test_gather_charges_index_operand_bytes():
+    """Hand-written paged-KV gather HLO pins the byte model exactly:
+    2x the gathered window + the page-table indices — NOT the pool."""
+    txt = """
+HloModule paged
+
+ENTRY %main (pool: f32[33,16,2,32], table: s32[4,8]) -> f32[4,8,16,2,32] {
+  %pool = f32[33,16,2,32]{3,2,1,0} parameter(0)
+  %table = s32[4,8]{1,0} parameter(1)
+  ROOT %g = f32[4,8,16,2,32]{4,3,2,1,0} gather(%pool, %table), offset_dims={2,3,4}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=2, slice_sizes={1,16,2,32}
+}
+"""
+    dyn = analyze_text(txt)
+    window = 4 * 8 * 16 * 2 * 32 * 4          # the gathered result, f32
+    table = 4 * 8 * 4                          # s32 page-table read
+    assert dyn.bytes_accessed == pytest.approx(2 * window + table)
+
+
+def test_dynamic_slice_charges_start_index_operands():
+    txt = """
+HloModule ds
+
+ENTRY %main (buf: f32[128,64], i: s32[], j: s32[]) -> f32[8,64] {
+  %buf = f32[128,64]{1,0} parameter(0)
+  %i = s32[] parameter(1)
+  %j = s32[] parameter(2)
+  ROOT %w = f32[8,64]{1,0} dynamic-slice(%buf, %i, %j), dynamic_slice_sizes={8,64}
+}
+"""
+    dyn = analyze_text(txt)
+    assert dyn.bytes_accessed == pytest.approx(2 * 8 * 64 * 4 + 2 * 4)
+
+
+def test_paged_decode_bytes_track_table_width_not_pool():
+    """Compiled regression: the jnp paged decode reference's modeled
+    traffic scales with the gathered window (table_width * page_size),
+    not the pool size — doubling the POOL leaves bytes untouched, while
+    doubling the TABLE roughly doubles them."""
+    from repro.models.attention import paged_decode_jnp
+
+    def compile_bytes(p_total, np_w):
+        B, H, KVH, Dh, ps = 4, 4, 2, 32, 16
+        args = (jax.ShapeDtypeStruct((B, 1, H, Dh), jnp.float32),
+                jax.ShapeDtypeStruct((p_total, ps, KVH, Dh), jnp.float32),
+                jax.ShapeDtypeStruct((p_total, ps, KVH, Dh), jnp.float32),
+                jax.ShapeDtypeStruct((B, np_w), jnp.int32),
+                jax.ShapeDtypeStruct((B,), jnp.int32),
+                jax.ShapeDtypeStruct((B, 1, KVH, Dh), jnp.float32),
+                jax.ShapeDtypeStruct((B, 1, KVH, Dh), jnp.float32))
+        c = jax.jit(paged_decode_jnp).lower(*args).compile()
+        return analyze_text(c.as_text()).bytes_accessed
+
+    base = compile_bytes(33, 8)
+    double_pool = compile_bytes(65, 8)
+    double_table = compile_bytes(65, 16)
+    assert double_pool == pytest.approx(base, rel=0.02)
+    assert double_table > 1.6 * base
+
+
+def test_fusion_scatter_destination_is_in_place():
+    """A fused scatter whose destination aliases a fusion param (the paged
+    token write on TPU-style HLO) charges update+index traffic, not a
+    full-pool round trip per visit."""
+    txt = """
+HloModule ps
+
+%assign (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  ROOT %b = f32[] parameter(1)
+}
+
+%fused_scatter (p0: f32[256,16,64], p1: s32[2,1], p2: f32[2,16,64]) -> f32[256,16,64] {
+  %p0 = f32[256,16,64]{2,1,0} parameter(0)
+  %p1 = s32[2,1]{1,0} parameter(1)
+  %p2 = f32[2,16,64]{2,1,0} parameter(2)
+  ROOT %sc = f32[256,16,64]{2,1,0} scatter(%p0, %p1, %p2), update_window_dims={1,2}, inserted_window_dims={0}, scatter_dims_to_operand_dims={0}, index_vector_dim=1, to_apply=%assign
+}
+
+ENTRY %main (pool: f32[256,16,64], ids: s32[2,1], upd: f32[2,16,64]) -> f32[256,16,64] {
+  %pool = f32[256,16,64]{2,1,0} parameter(0)
+  %ids = s32[2,1]{1,0} parameter(1)
+  %upd = f32[2,16,64]{2,1,0} parameter(2)
+  ROOT %f = f32[256,16,64]{2,1,0} fusion(%pool, %ids, %upd), kind=kLoop, calls=%fused_scatter
+}
+"""
+    dyn = analyze_text(txt)
+    upd = 2 * 16 * 64 * 4
+    idx = 2 * 1 * 4
+    # write: update region + indices; read: indices + updates; pool: 0
+    assert dyn.bytes_accessed == pytest.approx(upd + idx + idx + upd)
+    assert dyn.bytes_accessed < 256 * 16 * 64 * 4 / 10

@@ -141,6 +141,30 @@ def test_scheduler_eos_releases_slot(lm_params):
     assert len(done[1].generated) <= 3
 
 
+def test_segment_cache_is_bounded_by_pow2_quantization(lm_params):
+    """Scheduler churn across many distinct remaining-budget values must
+    NOT compile a segment program per value: requested steps quantize UP
+    to powers of two (overshoot masked against each request's budget), so
+    at most log2(admission_chunk)+1 programs ever exist."""
+    lm, params = lm_params
+    eng = Engine(lm, params, ServeConfig(max_seq=64, batch_slots=2,
+                                         temperature=0.0,
+                                         admission_chunk=8))
+    assert [eng.quantize_steps(s) for s in (1, 2, 3, 5, 7, 8, 13)] \
+        == [1, 2, 4, 8, 8, 8, 8]
+    sched = BatchScheduler(eng)
+    budgets = {rid: rid + 1 for rid in range(7)}      # 1..7: all distinct
+    for rid, budget in budgets.items():
+        sched.submit(Request(rid=rid, prompt=[rid + 1, rid + 2],
+                             max_new_tokens=budget))
+    done = sched.run()
+    # nobody is RETURNED a token past their budget (overshoot is masked)
+    assert all(len(done[r].generated) == budgets[r] for r in budgets)
+    bound = eng.cfg.admission_chunk.bit_length()       # log2(chunk)+1
+    assert len(eng._segments) <= bound, sorted(eng._segments)
+    assert all(s & (s - 1) == 0 for s in eng._segments)   # powers of two
+
+
 def test_scheduler_host_syncs_scale_with_segments(lm_params):
     lm, params = lm_params
     eng = Engine(lm, params, ServeConfig(max_seq=64, batch_slots=2,
