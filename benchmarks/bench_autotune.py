@@ -1,0 +1,124 @@
+"""Registry autotune suite: every tunable family, disk-warm restarts.
+
+The registry's acceptance bar made measurable: sweep the tune space of
+EVERY registered kernel family (attention blocks, paged-decode page
+geometry, triad block_rows, jacobi7 slab width, ssd chunk) through one
+``ProfileSession``, persisting winners in the artifact cache.  Because
+both the probes AND the sweep outcomes are content-addressed cache
+entries, a re-run in a **fresh process** must do **zero sweeps and zero
+lowerings** — ``--assert-warm`` enforces exactly that, and CI runs this
+bench twice (cold-or-cache-warm, then fresh-process warm) so a
+regression in tune-table persistence fails the build.  ``--dump`` writes
+the resolved tune table next to the ``BENCH_*.json`` artifacts.
+
+    PYTHONPATH=src python -m benchmarks.bench_autotune --smoke --json BENCH_autotune.json
+    PYTHONPATH=src python -m benchmarks.bench_autotune --smoke --assert-warm --dump TUNE_TABLE.json
+"""
+
+import argparse
+import json
+import time
+
+
+def _suite(smoke: bool):
+    """Canonical (family -> shape facts, candidates) cells.
+
+    The smoke candidate sets are subsets of the defaults; candidates are
+    part of the persisted record identity, so cold and warm runs must
+    agree on them (CI passes --smoke to both).
+    """
+    cells = {
+        "attention": dict(b=2, h=4, kvh=2, sq=128, sk=192, dh=32),
+        "paged_decode": dict(b=4, kvh=2, g=2, dh=32, ctx=128),
+        "stream_triad": dict(n=128 * 512),
+        "jacobi7": dict(shape=(24, 16, 16), sweeps=2),
+        "ssd_scan": dict(b=2, s=128, h=2, dk=16, dv=16, normalize=False),
+    }
+    if smoke:
+        cands = {
+            "attention": ((64, 64), (64, 128), (128, 128)),
+            "paged_decode": ((16, 1), (16, 2), (32, 1)),
+            "stream_triad": ((128,), (256,)),
+            "jacobi7": ((4,), (8,)),
+            "ssd_scan": ((32,), (64,)),
+        }
+    else:
+        cands = {k: None for k in cells}        # each family's full space
+    return cells, cands
+
+
+def run(csv, session=None, smoke=False):
+    from repro.core.session import ProfileSession
+    from repro.kernels import registry
+
+    if session is None:
+        session = ProfileSession()
+    cells, cands = _suite(smoke)
+    summary = {"families": {}, "sweeps": 0, "lowerings": 0}
+    print("== registry autotune: every tunable family through one session ==")
+    for family, facts in cells.items():
+        t0 = time.perf_counter()
+        rec = registry.autotune(family, session,
+                                candidates=cands[family], **facts)
+        dt = time.perf_counter() - t0
+        summary["sweeps"] += int(rec.swept)
+        summary["lowerings"] += rec.lowerings
+        summary["families"][family] = {
+            "key": rec.key, "choice": list(rec.choice),
+            "score_us": rec.score_s * 1e6, "swept": rec.swept,
+            "lowerings": rec.lowerings, "seconds": round(dt, 3),
+        }
+        src = "swept" if rec.swept else "tune table (disk)"
+        print(f"{family:>13}: choice={tuple(rec.choice)}  "
+              f"roofline {rec.score_s*1e6:9.3f} us  [{src}, "
+              f"{rec.lowerings} lowerings, {dt:.2f}s]")
+        csv.append((f"autotune_{family}", rec.score_s * 1e6,
+                    f"choice={'x'.join(str(c) for c in rec.choice)},"
+                    f"swept={int(rec.swept)},lowerings={rec.lowerings}"))
+    print(f"total: {summary['sweeps']} sweeps, "
+          f"{summary['lowerings']} lowerings ({session.stats()})")
+    summary["table"] = registry.dump_tune_table()
+    return summary
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: reduced candidate sets")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the summary here (BENCH_autotune.json)")
+    ap.add_argument("--assert-warm", action="store_true",
+                    help="fail unless EVERY family resolved from the "
+                         "persisted tune table: zero sweeps, zero "
+                         "lowerings (the fresh-process warm-start bar)")
+    ap.add_argument("--dump", default=None, metavar="PATH",
+                    help="write the resolved tune-table dump here "
+                         "(TUNE_TABLE.json, a CI artifact)")
+    args = ap.parse_args(argv)
+    from repro.core.session import ProfileSession
+    session = ProfileSession()
+    csv = []
+    summary = run(csv, session=session, smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.2f},{derived}")
+    if args.dump:
+        from repro.kernels import registry
+        with open(args.dump, "w") as f:
+            json.dump(registry.dump_tune_table(), f, indent=1)
+        print(f"[bench_autotune] wrote tune table dump to {args.dump}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, **summary}, f, indent=1)
+        print(f"[bench_autotune] wrote {args.json}")
+    if args.assert_warm:
+        assert summary["sweeps"] == 0 and session.lowerings == 0, (
+            f"warm restart swept {summary['sweeps']} families and lowered "
+            f"{session.lowerings} programs — the persisted tune table "
+            f"should have served everything")
+        print("[bench_autotune] warm restart: 0 sweeps, 0 lowerings ✓")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -212,10 +212,15 @@ def main(argv=None) -> int:
                     help="CI scale: tiny model, short mixes")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the summary here (BENCH_paged.json)")
+    ap.add_argument("--impl", default=None, metavar="FAM=NAME[,...]",
+                    help="pin kernel impls per registry family for the "
+                         "bench (e.g. paged_decode=pallas_paged)")
     args = ap.parse_args(argv)
     from repro.core.session import ProfileSession
+    from repro.kernels import registry
     csv = []
-    summary = run(csv, session=ProfileSession(), smoke=args.smoke)
+    with registry.use_impl(args.impl):
+        summary = run(csv, session=ProfileSession(), smoke=args.smoke)
     print("name,us_per_call,derived")
     for name, us, derived in csv:
         print(f"{name},{us:.2f},{derived}")

@@ -15,15 +15,17 @@ compile-artifact cache instead of re-lowering.
 """
 
 import argparse
+import contextlib
 import json
 import sys
 import time
 import traceback
 
-from benchmarks import (bench_bandwidth_map, bench_flash_prefill,
-                        bench_jacobi_traffic, bench_marker_overhead,
-                        bench_paged_decode, bench_perfctr, bench_serve,
-                        bench_stencil_pinning, bench_stream_pinning)
+from benchmarks import (bench_autotune, bench_bandwidth_map,
+                        bench_flash_prefill, bench_jacobi_traffic,
+                        bench_marker_overhead, bench_paged_decode,
+                        bench_perfctr, bench_serve, bench_stencil_pinning,
+                        bench_stream_pinning)
 
 BENCHES = {
     "perfctr": bench_perfctr,              # §II-A listing
@@ -35,6 +37,7 @@ BENCHES = {
     "serve": bench_serve,                   # measurement-driven serving loop
     "flash_prefill": bench_flash_prefill,  # dispatched kernel + autotuner
     "paged_decode": bench_paged_decode,    # paged KV pool: bytes/token
+    "autotune": bench_autotune,            # registry tune table warm starts
 }
 
 
@@ -50,6 +53,12 @@ def main(argv=None) -> int:
                     help="compile-artifact cache root (default "
                          "$REPRO_CACHE_DIR or ~/.cache/repro-perfctr)")
     ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--impl", default=None, metavar="FAM=NAME[,...]",
+                    help="pin kernel impls per registry family for every "
+                         "bench (e.g. attention=pallas_flash)")
+    ap.add_argument("--tune", action="store_true",
+                    help="run the registry autotune suite first so every "
+                         "later bench dispatches tuned kernels")
     args = ap.parse_args(argv)
 
     from repro.core.session import ProfileSession
@@ -57,29 +66,38 @@ def main(argv=None) -> int:
                              enabled=not args.no_cache)
 
     names = args.names or list(BENCHES)
+    if args.tune:
+        # the tune suite must run FIRST so every later bench dispatches
+        # tuned kernels (it is also last in the default BENCHES order)
+        names = ["autotune"] + [n for n in names if n != "autotune"]
     unknown = [n for n in names if n not in BENCHES]
     if unknown:
         ap.error(f"unknown bench(es) {unknown}; choose from {list(BENCHES)}")
+    from repro.kernels import registry
+    impl_ctx = (registry.use_impl(args.impl) if args.impl
+                else contextlib.nullcontext())
     csv = []
     report = []
     failures = 0
-    for name in names:
-        mod = BENCHES[name]
-        print("=" * 72)
-        print(f"== bench: {name}   ({mod.__doc__.strip().splitlines()[0]})")
-        print("=" * 72)
-        t0 = time.perf_counter()
-        status = "ok"
-        try:
-            mod.run(csv, session=session, smoke=args.smoke)
-        except Exception:
-            failures += 1
-            status = "FAILED"
-            traceback.print_exc()
-        dt = time.perf_counter() - t0
-        report.append({"name": name, "status": status,
-                       "seconds": round(dt, 3)})
-        print(f"[{name}] {dt:.1f}s\n")
+    with impl_ctx:
+        for name in names:
+            mod = BENCHES[name]
+            print("=" * 72)
+            print(f"== bench: {name}   "
+                  f"({mod.__doc__.strip().splitlines()[0]})")
+            print("=" * 72)
+            t0 = time.perf_counter()
+            status = "ok"
+            try:
+                mod.run(csv, session=session, smoke=args.smoke)
+            except Exception:
+                failures += 1
+                status = "FAILED"
+                traceback.print_exc()
+            dt = time.perf_counter() - t0
+            report.append({"name": name, "status": status,
+                           "seconds": round(dt, 3)})
+            print(f"[{name}] {dt:.1f}s\n")
 
     print("name,us_per_call,derived")
     for name, us, derived in csv:

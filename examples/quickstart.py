@@ -1,4 +1,4 @@
-"""Quickstart: the four LIKWID-analogue tools in one minute.
+"""Quickstart: the LIKWID-analogue tools in one minute.
 
     PYTHONPATH=src python examples/quickstart.py
 
@@ -8,6 +8,8 @@
    (through a ProfileSession: the second run of this script serves every
    probe from the compile-artifact cache instead of re-compiling)
 4. repro-features  — view/toggle the switchable compilation features
+5. kernel registry — one named, overridable surface over every Pallas
+   kernel family, with measured (and disk-persisted) autotuning
 """
 
 import jax
@@ -17,6 +19,7 @@ from repro.core import pin, topology
 from repro.core.features import default_features, render_state
 from repro.core.perfctr import PerfCtr
 from repro.core.session import ProfileSession
+from repro.kernels import registry
 
 
 def main():
@@ -46,6 +49,37 @@ def main():
     print(render_state(feats))
     print("\nflip remat off ->")
     print(render_state(feats.with_(remat_policy="none")))
+
+    # -- 5. the kernel registry -------------------------------------------
+    # every Pallas kernel is a named impl in a family; selection is
+    # static and overridable from ONE ladder (use_impl context,
+    # REPRO_IMPL="attention=pallas_flash,...", family heuristics)
+    print("\nregistered kernel families:")
+    print(registry.describe())
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 32, 4, 16))
+    k = jax.random.normal(ks[1], (1, 32, 2, 16))
+    v = jax.random.normal(ks[2], (1, 32, 2, 16))
+    picked = registry.select("attention", sq=32, sk=32, dh=16)
+    out = registry.run("attention", q, k, v, causal=True)   # self-selects
+    print(f"\nattention heuristics picked {picked!r} "
+          f"(out {out.shape})")
+    with registry.use_impl(attention="jnp_flash"):
+        forced = registry.select("attention", sq=32, sk=32, dh=16)
+        print(f"inside use_impl(attention='jnp_flash'): {forced!r}")
+
+    # autotune a family through the session: candidates are VMEM-gated,
+    # roofline-scored from compile artifacts (never executed), and the
+    # winner persists in the artifact cache — a fresh process resolves
+    # best() from disk with ZERO sweeps and ZERO lowerings
+    rec = registry.autotune("stream_triad", session, n=128 * 512,
+                            candidates=((128,), (256,)))
+    src = "swept" if rec.swept else "warm from the persisted tune table"
+    print(f"stream_triad tuned: block_rows={rec.choice[0]} "
+          f"({src}, {rec.lowerings} lowerings)")
+    print(f"best() now serves {registry.best('stream_triad', n=128 * 512)} "
+          f"to every dispatch of that shape")
+    print(f"[{session.stats()}]")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 """Serve a small model with batched requests (the paper-kind e2e driver's
-serving twin): prefill -> KV-cache decode -> batch scheduler.
+serving twin): prefill -> KV-cache decode -> batch scheduler, with the
+kernel registry picking (or pinned to) the attention implementations.
 
     PYTHONPATH=src python examples/serve_batched.py
 """
@@ -7,8 +8,10 @@ serving twin): prefill -> KV-cache decode -> batch scheduler.
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.core.features import default_features
+from repro.kernels import registry
 from repro.models.lm import LM, LMConfig
 from repro.serve.engine import BatchScheduler, Engine, Request, ServeConfig
 
@@ -17,10 +20,21 @@ def main():
     cfg = LMConfig(name="serve-demo", family="dense", vocab=2048,
                    d_model=256, n_layers=4, num_heads=8, num_kv_heads=4,
                    d_ff=1024)
-    lm = LM(cfg, default_features().with_(remat_policy="none"))
+    # fp32: greedy argmax ties are then identical across softmax
+    # algorithms, so switching kernel impls cannot change the tokens
+    lm = LM(cfg, default_features().with_(remat_policy="none"),
+            dtype=jnp.float32)
     params = lm.init(jax.random.PRNGKey(0))
-    engine = Engine(lm, params, ServeConfig(max_seq=128, batch_slots=4,
-                                            temperature=0.0))
+    # ServeConfig.impls pins kernel impls per registry family for every
+    # program the engine traces (the same ladder REPRO_IMPL and
+    # registry.use_impl drive); None entries / omitted families keep the
+    # backend heuristics.
+    engine = Engine(lm, params, ServeConfig(
+        max_seq=128, batch_slots=4, temperature=0.0,
+        impls={"attention": "jnp_flash"}))
+    picked = registry.select("attention", sq=128, sk=128, dh=32)
+    print(f"attention unpinned would pick {picked!r}; this engine pins "
+          f"{engine.cfg.impls!r}\n")
 
     # -- direct batched generate (fused on-device loop) -------------------
     # ragged prompts are exact: per-row masks keep pads out of attention
@@ -35,13 +49,21 @@ def main():
           f"({total_tokens/dt:.1f} tok/s incl. compile, CPU) — "
           f"{engine.host_syncs} host sync(s) total")
 
+    # the same pin is available ad hoc: every program traced inside this
+    # block dispatches the forced impls (thread-local, nestable)
+    with registry.use_impl(attention="full"):
+        outs_full = Engine(lm, params, ServeConfig(max_seq=128)).generate(
+            prompts, max_new_tokens=16)
+    assert outs_full == outs, "fp32 greedy tokens are impl-independent"
+    print("use_impl(attention='full') reproduced the same tokens\n")
+
     # -- continuous batching over more requests than slots ----------------
     sched = BatchScheduler(engine)
     for rid in range(10):
         sched.submit(Request(rid=rid, prompt=[rid + 1, rid + 2],
                              max_new_tokens=8))
     done = sched.run()
-    print(f"\nscheduler finished {len(done)} requests "
+    print(f"scheduler finished {len(done)} requests "
           f"(batch_slots={engine.cfg.batch_slots}, "
           f"segments={sched.metrics['segments']:.0f}, "
           f"admissions={sched.metrics['admissions']:.0f})")

@@ -8,15 +8,23 @@ jacobi7.py                paper case studies 2+3 (stencil + temporal
                           blocking in VMEM, §IV-§V, Table I)
 flash_attention.py        32k-prefill hot-spot for the LM zoo (blockwise
                           online-softmax GQA)
+paged_decode.py           decode attention over the serve/kv_pool pages
 ssd_scan.py               mLSTM / Mamba2 chunked gated linear attention
 ========================  ===================================================
 
 ops.py holds the jit'd layout adapters; ref.py the pure-jnp oracles every
 kernel is allclose-tested against (interpret=True on this CPU container).
-dispatch.py names the attention implementations (pallas_flash / jnp_flash /
-full) and picks one per backend/shape/env; autotune.py sweeps the flash
-kernel's (bq, bk) tilings through ProfileSession and feeds the winners
-back into dispatch.
+
+registry.py is the ONE entry point over all of them: every implementation
+is a declarative ``KernelSpec`` registered into a family (``attention``,
+``paged_decode``, ``stream_triad``, ``jacobi7``, ``ssd_scan``) with a
+static capability predicate, layout contract, oracle link and tune
+space; ``registry.select/run`` dispatch through a single per-family
+override ladder (``use_impl`` context > ``REPRO_IMPL`` env > legacy
+``REPRO_ATTN_IMPL`` > heuristics) and ``registry.autotune/best`` sweep
+tune spaces through ProfileSession with winners persisted in the
+artifact cache (fresh processes warm-start with zero sweeps).
+dispatch.py and autotune.py remain as the legacy attention-only shims.
 """
 
-from repro.kernels import dispatch, ops, ref  # noqa: F401
+from repro.kernels import dispatch, ops, ref, registry  # noqa: F401

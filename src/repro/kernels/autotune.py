@@ -1,33 +1,40 @@
-"""Flash-attention block-size autotuner, measured by our own tools.
+"""Legacy autotune surface — thin shims over the registry's one tuner.
 
-The paper's workflow: don't guess a tiling, *measure* the candidates and
-keep the bookkeeping cheap enough to re-run on every shape.  This module
-sweeps ``(bq, bk)`` candidates for ``flash_attention_bhsd`` through
-:meth:`repro.core.session.ProfileSession.measure` — each candidate is
-lowered+compiled once, its event counts (FLOPs including padded-block
-waste, HBM bytes) extracted from the artifact, and scored with the chip's
-roofline.  Because every probe is a content-addressed cache entry, a warm
-re-run of the whole sweep does **zero lowerings** (asserted in
-``benchmarks/bench_flash_prefill.py`` and tests).
+PR 3 and PR 4 each carried their own sweep function and process-local
+winner dict (``_TABLE`` / ``_PAGED_TABLE``); those dicts raced under
+``ProfileSession.sweep`` workers and died on restart even though every
+probe was already disk-cached.  :mod:`repro.kernels.registry` now owns
+the one generic autotuner (lock-guarded table, ArtifactCache-persisted
+winners, per-spec tune spaces) for every family; this module keeps the
+historical entry points alive:
 
-Candidates that cannot fit the kernel's VMEM working set (q/k/v/out tiles
-double-buffered + the [bq,bk] score tile + scratch) are skipped before any
-XLA work.  Chosen tilings are recorded per (shape, dtype, causal, backend)
-in a process-wide table that :func:`repro.kernels.dispatch.run_attention`
-consults via :func:`best_blocks` — so tuning once makes every later
-dispatch of that shape use the winning tiling.
+* :func:`autotune_flash_blocks` / :func:`best_blocks` — the attention
+  family's (bq, bk) sweep.  The tune key buckets batch to powers of two
+  (:func:`repro.kernels.registry.attention_tune_key`), so the
+  continuous-batching scheduler's varying live mixes hit sweep records
+  instead of silently falling back to ``DEFAULT_BLOCKS``.
+* :func:`autotune_paged_decode` / :func:`best_paged_block` — the
+  paged_decode family's (page_size, pages_per_block) sweep, recorded
+  per page_size and width-agnostic as before.
+
+Both return the historical record types; a warm call (same key, same
+candidates, same toolchain) is served from the persisted tune table with
+**zero sweeps and zero lowerings** — across processes, not just within
+one.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Dict, Optional, Sequence, Tuple
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import hwinfo
+from repro.kernels import registry
+from repro.kernels.registry import (DEFAULT_BLOCKS, DEFAULT_CANDIDATES,
+                                    DEFAULT_PAGED_CANDIDATES,
+                                    DEFAULT_PAGES_PER_BLOCK)
 
 __all__ = ["DEFAULT_BLOCKS", "DEFAULT_CANDIDATES", "TuneRecord",
            "vmem_footprint", "tune_key", "autotune_flash_blocks",
@@ -36,28 +43,10 @@ __all__ = ["DEFAULT_BLOCKS", "DEFAULT_CANDIDATES", "TuneRecord",
            "PagedTuneRecord", "paged_tune_key", "paged_vmem_footprint",
            "autotune_paged_decode", "best_paged_block"]
 
-DEFAULT_BLOCKS: Tuple[int, int] = (128, 256)
-
-#: (bq, bk) grid — multiples of the 8-sublane/128-lane layout quanta
-DEFAULT_CANDIDATES: Tuple[Tuple[int, int], ...] = (
-    (64, 64), (64, 128), (128, 128), (128, 256), (256, 128), (256, 256),
-    (512, 256),
-)
-
-DEFAULT_PAGES_PER_BLOCK = 1
-
-#: (page_size, pages_per_block) grid for the paged decode kernel —
-#: page_size trades pool fragmentation against per-page DMA efficiency,
-#: pages_per_block is the kernel's fetch granularity over a row's table
-DEFAULT_PAGED_CANDIDATES: Tuple[Tuple[int, int], ...] = (
-    (16, 1), (16, 2), (16, 4), (32, 1), (32, 2), (32, 4),
-    (64, 1), (64, 2), (128, 1),
-)
-
 
 @dataclasses.dataclass(frozen=True)
 class TuneRecord:
-    """Outcome of one autotune sweep (all candidates + the winner)."""
+    """Outcome of one flash-blocks sweep (all candidates + the winner)."""
 
     key: str
     bq: int
@@ -66,120 +55,6 @@ class TuneRecord:
     scores: Dict[Tuple[int, int], float]  # candidate -> score (inf = skipped)
     lowerings: int                       # real compiles this sweep (0 = warm)
 
-
-# process-wide choice table consulted by dispatch.run_attention
-_TABLE: Dict[str, TuneRecord] = {}
-
-
-def vmem_footprint(bq: int, bk: int, dh: int, itemsize: int = 4) -> int:
-    """Bytes of VMEM the kernel needs for one (bq, bk) tile pair.
-
-    I/O tiles (q, k, v, out) are double-buffered by the pipeline; the
-    [bq,bk] score/probs tile plus the m/l/acc scratch rows live once.
-    """
-    io = 2 * (bq * dh + 2 * bk * dh + bq * dh) * itemsize
-    compute = (bq * bk + bq * dh + 2 * bq) * 4     # f32 scores + scratch
-    return io + compute
-
-
-def tune_key(*, b: int, h: int, kvh: int, sq: int, sk: int, dh: int,
-             dtype, causal: bool, backend: Optional[str] = None) -> str:
-    backend = backend or jax.default_backend()
-    return (f"b{b}h{h}kvh{kvh}sq{sq}sk{sk}dh{dh}"
-            f"-{jnp.dtype(dtype).name}-{'causal' if causal else 'full'}"
-            f"-{backend}")
-
-
-def _flash_probe(q, k, v, kv_valid, *, causal: bool, bq: int, bk: int,
-                 interpret: bool):
-    """Module-level probe target: partial-wrapping this per candidate gives
-    every (bq, bk) its own stable fingerprint (ProfileSession cache key)."""
-    from repro.kernels.flash_attention import flash_attention_bhsd
-    return flash_attention_bhsd(q, k, v, causal=causal, kv_valid=kv_valid,
-                                bq=bq, bk=bk, interpret=interpret)
-
-
-def _roofline_seconds(ev, chip: hwinfo.ChipSpec) -> float:
-    """max(compute term, memory term) from measured artifact events."""
-    t_c = ev["FLOPS_TOTAL"] / chip.peak_bf16_flops
-    t_m = ev["BYTES_ACCESSED"] / chip.hbm_bw
-    return max(t_c, t_m)
-
-
-def autotune_flash_blocks(*, b: int, h: int, kvh: int, sq: int, sk: int,
-                          dh: int, session, dtype=jnp.float32,
-                          causal: bool = True,
-                          candidates: Optional[Sequence[Tuple[int, int]]] = None,
-                          chip: Optional[hwinfo.ChipSpec] = None,
-                          backend: Optional[str] = None,
-                          interpret: Optional[bool] = None,
-                          vmem_fraction: float = 0.9) -> TuneRecord:
-    """Sweep (bq, bk) candidates for one attention shape; record the winner.
-
-    Every candidate goes through ``session.measure`` against abstract
-    inputs — lower+compile on a cold cache, pure disk lookup on a warm one
-    (``session.lowerings`` stays 0), never executed either way.
-    """
-    from repro.kernels.dispatch import default_interpret
-    chip = chip or getattr(session, "chip", None) or hwinfo.DEFAULT_CHIP
-    if interpret is None:
-        interpret = default_interpret(backend)
-    key = tune_key(b=b, h=h, kvh=kvh, sq=sq, sk=sk, dh=dh, dtype=dtype,
-                   causal=causal, backend=backend)
-    q_s = jax.ShapeDtypeStruct((b, h, sq, dh), dtype)
-    k_s = jax.ShapeDtypeStruct((b, kvh, sk, dh), dtype)
-    v_s = jax.ShapeDtypeStruct((b, kvh, sk, dh), dtype)
-    kvv_s = jax.ShapeDtypeStruct((b,), jnp.int32)
-    budget = chip.vmem_bytes * vmem_fraction
-    itemsize = jnp.dtype(dtype).itemsize
-
-    lowerings0 = session.lowerings
-    scores: Dict[Tuple[int, int], float] = {}
-    for bq, bk in (candidates or DEFAULT_CANDIDATES):
-        eff_bq, eff_bk = min(bq, sq), min(bk, sk)
-        if vmem_footprint(eff_bq, eff_bk, dh, itemsize) > budget:
-            scores[(bq, bk)] = float("inf")     # gated before any XLA work
-            continue
-        probe = functools.partial(_flash_probe, causal=causal, bq=bq, bk=bk,
-                                  interpret=interpret)
-        m = session.measure(probe, q_s, k_s, v_s, kvv_s,
-                            region=f"flash[{key}][bq{bq}bk{bk}]", chip=chip)
-        scores[(bq, bk)] = _roofline_seconds(m.events, chip)
-
-    finite = {c: s for c, s in scores.items() if s != float("inf")}
-    if not finite:
-        raise ValueError(f"no (bq, bk) candidate fits VMEM for {key}")
-    (bq, bk), score = min(finite.items(), key=lambda kv: (kv[1], kv[0]))
-    rec = TuneRecord(key=key, bq=bq, bk=bk, score_s=score, scores=scores,
-                     lowerings=session.lowerings - lowerings0)
-    _TABLE[key] = rec
-    return rec
-
-
-def best_blocks(*, b: int, h: int, kvh: int, sq: int, sk: int, dh: int,
-                dtype, causal: bool,
-                backend: Optional[str] = None) -> Tuple[int, int]:
-    """The tuned tiling for this shape if a sweep recorded one, else the
-    MXU-shaped default (dispatch calls this on every pallas_flash run)."""
-    rec = _TABLE.get(tune_key(b=b, h=h, kvh=kvh, sq=sq, sk=sk, dh=dh,
-                              dtype=dtype, causal=causal, backend=backend))
-    return (rec.bq, rec.bk) if rec is not None else DEFAULT_BLOCKS
-
-
-def record_blocks(key: str, bq: int, bk: int) -> None:
-    """Pin a tiling manually (e.g. replayed from a saved bench record)."""
-    _TABLE[key] = TuneRecord(key=key, bq=bq, bk=bk, score_s=float("nan"),
-                             scores={}, lowerings=0)
-
-
-def clear_table() -> None:
-    _TABLE.clear()
-    _PAGED_TABLE.clear()
-
-
-# ---------------------------------------------------------------------------
-# paged decode kernel: (page_size, pages_per_block)
-# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class PagedTuneRecord:
@@ -193,39 +68,78 @@ class PagedTuneRecord:
     lowerings: int
 
 
-# per-(shape, page_size) pages_per_block choices consulted by
-# dispatch.run_paged_decode on every pallas_paged run
-_PAGED_TABLE: Dict[str, PagedTuneRecord] = {}
-
-
-def paged_tune_key(*, b: int, kvh: int, g: int, dh: int, page_size: int,
-                   dtype, backend: Optional[str] = None) -> str:
-    # deliberately NOT keyed on the page-table width: the scheduler's
-    # live-mix bucket changes segment to segment, and the winning fetch
-    # granularity is a per-page property — keying on width would make
-    # every serving lookup miss the sweep's record
-    backend = backend or jax.default_backend()
-    return (f"paged-b{b}kvh{kvh}g{g}dh{dh}ps{page_size}"
-            f"-{jnp.dtype(dtype).name}-{backend}")
+def vmem_footprint(bq: int, bk: int, dh: int, itemsize: int = 4) -> int:
+    """Bytes of VMEM the flash kernel needs for one (bq, bk) tile pair."""
+    return registry.attention_vmem(bq, bk, dh, itemsize)
 
 
 def paged_vmem_footprint(ps: int, ppb: int, g: int, dh: int,
                          itemsize: int = 4) -> int:
-    """VMEM bytes for one grid step: q + ppb double-buffered k/v page
-    tiles + out, plus the f32 [g, ps] score tile and m/l/acc scratch."""
-    io = 2 * (g * dh + 2 * ppb * ps * dh + 2 * dh + g * dh) * itemsize
-    compute = (g * ps + g * dh + 2 * g) * 4
-    return io + compute
+    """VMEM bytes for one paged-decode grid step."""
+    return registry.paged_vmem(ps, ppb, g, dh, itemsize)
 
 
-def _paged_probe(q4, kp, vp, pt, lens, kn, vn, *, ppb: int,
-                 interpret: bool):
-    """Module-level probe target (stable ProfileSession fingerprint per
-    (page_size via shapes, ppb via partial) candidate)."""
-    from repro.kernels.paged_decode import paged_decode_attention_grouped
-    return paged_decode_attention_grouped(q4, kp, vp, pt, lens, kn, vn,
-                                          pages_per_block=ppb,
-                                          interpret=interpret)
+def tune_key(*, b: int, h: int, kvh: int, sq: int, sk: int, dh: int,
+             dtype, causal: bool, backend: Optional[str] = None) -> str:
+    """The attention tune key (batch bucketed to powers of two)."""
+    return registry.attention_tune_key(b=b, h=h, kvh=kvh, sq=sq, sk=sk,
+                                       dh=dh, dtype=dtype, causal=causal,
+                                       backend=backend)
+
+
+def paged_tune_key(*, b: int, kvh: int, g: int, dh: int, page_size: int,
+                   dtype, backend: Optional[str] = None) -> str:
+    """The paged lookup key (page-table-width-agnostic, as ever)."""
+    return registry.paged_lookup_key(b=b, kvh=kvh, g=g, dh=dh,
+                                     page_size=page_size, dtype=dtype,
+                                     backend=backend)
+
+
+def autotune_flash_blocks(*, b: int, h: int, kvh: int, sq: int, sk: int,
+                          dh: int, session, dtype=jnp.float32,
+                          causal: bool = True,
+                          candidates: Optional[Sequence[Tuple[int, int]]] = None,
+                          chip: Optional[hwinfo.ChipSpec] = None,
+                          backend: Optional[str] = None,
+                          interpret: Optional[bool] = None,
+                          vmem_fraction: float = 0.9) -> TuneRecord:
+    """Sweep (bq, bk) candidates for one attention shape; record the winner.
+
+    Delegates to ``registry.autotune("attention", ...)``: probes go
+    through ``session.measure`` (lower+compile cold, disk lookup warm,
+    never executed) and the whole sweep outcome persists in the artifact
+    cache — a repeat in a FRESH process returns the stored record with
+    zero sweeps and zero lowerings.
+    """
+    rec = registry.autotune("attention", session, candidates=candidates,
+                            chip=chip, backend=backend, interpret=interpret,
+                            vmem_fraction=vmem_fraction, b=b, h=h, kvh=kvh,
+                            sq=sq, sk=sk, dh=dh, dtype=dtype, causal=causal)
+    return TuneRecord(key=rec.key, bq=rec.choice[0], bk=rec.choice[1],
+                      score_s=rec.score_s, scores=dict(rec.scores),
+                      lowerings=rec.lowerings)
+
+
+def best_blocks(*, b: int, h: int, kvh: int, sq: int, sk: int, dh: int,
+                dtype, causal: bool,
+                backend: Optional[str] = None) -> Tuple[int, int]:
+    """The tuned tiling for this shape if a sweep recorded one (in this
+    process or on disk), else the MXU-shaped default.  The key buckets
+    ``b`` to powers of two, so the scheduler's varying live mixes find
+    the sweep's record."""
+    return tuple(registry.best("attention", b=b, h=h, kvh=kvh, sq=sq, sk=sk,
+                               dh=dh, dtype=dtype, causal=causal,
+                               backend=backend))
+
+
+def record_blocks(key: str, bq: int, bk: int) -> None:
+    """Pin a tiling manually (e.g. replayed from a saved bench record)."""
+    registry.record("attention", key, (bq, bk))
+
+
+def clear_table() -> None:
+    """Forget every in-process winner (disk-persisted records survive)."""
+    registry.clear_tune_table()
 
 
 def autotune_paged_decode(*, b: int, kvh: int, g: int, dh: int, ctx: int,
@@ -238,75 +152,30 @@ def autotune_paged_decode(*, b: int, kvh: int, g: int, dh: int, ctx: int,
     """Sweep (page_size, pages_per_block) for a decode shape serving up to
     ``ctx`` tokens of context per row; record winners per page_size.
 
-    Each candidate's pool shapes derive from (ctx, page_size):
-    ``table_width = ceil(ctx / ps)`` logical pages per row, one distinct
-    physical page per logical page plus the null page.  Every probe goes
-    through ``session.measure`` (lower+compile cold, disk lookup warm,
-    never executed); the winner per page_size lands in the table
-    ``dispatch.run_paged_decode`` consults, and the overall winner's
-    ``page_size`` is the pool-sizing recommendation for the launcher.
+    Delegates to ``registry.autotune("paged_decode", ...)``; the winner
+    per page_size lands in the table ``dispatch.run_paged_decode``
+    consults (and on disk for the next process), and the overall
+    winner's ``page_size`` is the pool-sizing recommendation for the
+    launcher.
     """
-    from repro.kernels.dispatch import default_interpret
-    chip = chip or getattr(session, "chip", None) or hwinfo.DEFAULT_CHIP
-    if interpret is None:
-        interpret = default_interpret(backend)
-    budget = chip.vmem_bytes * vmem_fraction
-    itemsize = jnp.dtype(dtype).itemsize
-
-    lowerings0 = session.lowerings
-    scores: Dict[Tuple[int, int], float] = {}
-    per_ps_best: Dict[int, Tuple[int, float]] = {}   # ps -> (ppb, score)
-    for ps, ppb in (candidates or DEFAULT_PAGED_CANDIDATES):
-        np_w = max(-(-ctx // ps), 1)
-        if paged_vmem_footprint(ps, ppb, g, dh, itemsize) > budget:
-            scores[(ps, ppb)] = float("inf")     # gated before any XLA work
-            continue
-        p_total = b * np_w + 1
-        q_s = jax.ShapeDtypeStruct((b, kvh, g, dh), dtype)
-        kp_s = jax.ShapeDtypeStruct((p_total, ps, kvh, dh), dtype)
-        pt_s = jax.ShapeDtypeStruct((b, np_w), jnp.int32)
-        lens_s = jax.ShapeDtypeStruct((b,), jnp.int32)
-        kn_s = jax.ShapeDtypeStruct((b, kvh, dh), dtype)
-        probe = functools.partial(_paged_probe, ppb=ppb, interpret=interpret)
-        key = paged_tune_key(b=b, kvh=kvh, g=g, dh=dh, page_size=ps,
-                             dtype=dtype, backend=backend)
-        m = session.measure(probe, q_s, kp_s, kp_s, pt_s, lens_s, kn_s, kn_s,
-                            region=f"paged[{key}][ppb{ppb}]", chip=chip)
-        score = _roofline_seconds(m.events, chip)
-        scores[(ps, ppb)] = score
-        best = per_ps_best.get(ps)
-        if best is None or (score, ppb) < (best[1], best[0]):
-            per_ps_best[ps] = (ppb, score)
-
-    finite = {c: s for c, s in scores.items() if s != float("inf")}
-    if not finite:
-        raise ValueError("no (page_size, pages_per_block) candidate fits "
-                         f"VMEM for ctx={ctx}")
-    (ps_win, ppb_win), score = min(finite.items(), key=lambda kv: (kv[1],
-                                                                   kv[0]))
-    lowerings = session.lowerings - lowerings0
-    # record the winning ppb for EVERY swept page_size, so whatever
-    # page_size the pool was built with dispatch finds its tiling
-    for ps, (ppb, s) in per_ps_best.items():
-        key = paged_tune_key(b=b, kvh=kvh, g=g, dh=dh, page_size=ps,
-                             dtype=dtype, backend=backend)
-        _PAGED_TABLE[key] = PagedTuneRecord(
-            key=key, page_size=ps, pages_per_block=ppb, score_s=s,
-            scores=scores, lowerings=lowerings)
+    rec = registry.autotune("paged_decode", session, candidates=candidates,
+                            chip=chip, backend=backend, interpret=interpret,
+                            vmem_fraction=vmem_fraction, b=b, kvh=kvh, g=g,
+                            dh=dh, ctx=ctx, dtype=dtype)
+    ps_win, ppb_win = rec.choice
     win_key = paged_tune_key(b=b, kvh=kvh, g=g, dh=dh, page_size=ps_win,
                              dtype=dtype, backend=backend)
     return PagedTuneRecord(key=win_key, page_size=ps_win,
-                           pages_per_block=ppb_win, score_s=score,
-                           scores=scores, lowerings=lowerings)
+                           pages_per_block=ppb_win, score_s=rec.score_s,
+                           scores=dict(rec.scores), lowerings=rec.lowerings)
 
 
 def best_paged_block(*, b: int, kvh: int, g: int, dh: int, page_size: int,
                      dtype, backend: Optional[str] = None) -> int:
     """The tuned pages_per_block for this shape/page_size if a sweep
-    recorded one, else the default (dispatch consults this per run —
+    recorded one (in this process or on disk), else the default —
     width-agnostic, so every live-mix bucket the scheduler traces finds
-    the same record)."""
-    rec = _PAGED_TABLE.get(paged_tune_key(
-        b=b, kvh=kvh, g=g, dh=dh, page_size=page_size,
-        dtype=dtype, backend=backend))
-    return rec.pages_per_block if rec is not None else DEFAULT_PAGES_PER_BLOCK
+    the same record."""
+    return registry.best("paged_decode", b=b, kvh=kvh, g=g, dh=dh,
+                         page_size=page_size, dtype=dtype,
+                         backend=backend)[1]

@@ -1,44 +1,26 @@
-"""Kernel dispatch layer: named attention implementations, one chooser.
+"""Legacy attention-dispatch surface — thin shims over kernels/registry.py.
 
-The prefill/attention hot path used to hardwire a pure-jnp "flash twin"
-while the real Pallas kernel sat unwired.  This module makes implementation
-choice a first-class, inspectable decision:
+PR 3 introduced this module as the attention ladder and PR 4 grew it a
+second ladder for paged decode; the registry (:mod:`repro.kernels.
+registry`) now owns implementation naming, the override ladder and
+selection for EVERY kernel family.  Everything exported here keeps its
+exact historical semantics so existing call sites and tests migrate
+without behavior change:
 
-==============  ============================================================
-name            implementation
-==============  ============================================================
-pallas_flash    kernels/flash_attention.py::flash_attention_bhsd (BSHD
-                transposed in/out; q_offset + per-row kv_valid in-kernel;
-                block sizes from kernels/autotune.py when not given).
-                Forward-only — serving prefill, not training.
-jnp_flash       models/attention.py::_flash_attention_offset — the online-
-                softmax oracle twin, with the flash custom-VJP (training-
-                safe) and the same ragged/offset semantics.
-full            models/attention.py naive/fused paths (scores materialized;
-                chunked over q above ``chunk_threshold``) — the paper-
-                faithful baseline and the small-shape fast path.
-==============  ============================================================
+* :func:`select_attention_impl` / :func:`run_attention` — the attention
+  family (``pallas_flash`` / ``jnp_flash`` / ``full``), BSHD layout.
+* :func:`select_paged_decode_impl` / :func:`run_paged_decode` — the
+  paged_decode family (``pallas_paged`` / ``jnp_paged``).
+* :func:`use_attention_impl` / ``REPRO_ATTN_IMPL`` — the legacy override
+  names, mapped onto BOTH families (``"paged_decode"`` pins the decode
+  side only and stays transparent to prefill selection; the other names
+  pin prefill and pull decode to the matching paged impl).  New code
+  should prefer ``registry.use_impl(attention=..., paged_decode=...)``
+  or ``REPRO_IMPL="attention=...,paged_decode=..."``.
 
-Decode attention over the PAGED cache (serve/kv_pool.py) has its own pair
-of impls behind :func:`select_paged_decode_impl`/:func:`run_paged_decode`:
-``pallas_paged`` (kernels/paged_decode.py — bytes/token O(length)) and
-``jnp_paged`` (models/attention.py::paged_decode_jnp, the gather-based
-masked-dense oracle/fallback).  The override name ``paged_decode`` rides
-the same env/context/ServeConfig ladder: it forces the Pallas kernel on
-the decode side and is transparent to prefill selection.
-
-Selection (:func:`select_attention_impl`) is static — backend, shapes and
-env only, never traced values — so it happens once at trace time:
-
-* ``REPRO_ATTN_IMPL`` env var or :func:`use_attention_impl` context
-  override everything (tests force ``pallas_flash`` on CPU this way);
-* grad paths (``differentiable=True``) stay on ``jnp_flash`` until a
-  backward kernel lands;
-* TPU backends take ``pallas_flash`` for MXU-shaped inputs;
-* interpret-mode hosts (CPU CI) take the jnp family — the Pallas
-  interpreter is a correctness tool, orders of magnitude off the hot path.
-
-All impls share one calling convention, model layout (BSHD)::
+Selection stays static (backend, shapes, env — never traced values), so
+it happens once at trace time; all impls share one calling convention in
+model layout (BSHD)::
 
     run_attention(name, q[B,Sq,H,Dh], k[B,Sk,KVH,Dh], v, *, q_offset=0,
                   causal=True, kv_len=None, ...) -> [B,Sq,H,Dh]
@@ -47,11 +29,10 @@ All impls share one calling convention, model layout (BSHD)::
 from __future__ import annotations
 
 import contextlib
-import os
-import threading
 from typing import Optional, Tuple
 
-import jax
+from repro.kernels import registry
+from repro.kernels.registry import default_interpret  # noqa: F401 (re-export)
 
 __all__ = ["ATTENTION_IMPLS", "OVERRIDE_IMPLS", "PAGED_DECODE_IMPLS",
            "default_interpret", "select_attention_impl",
@@ -65,56 +46,44 @@ ATTENTION_IMPLS = ("pallas_flash", "jnp_flash", "full")
 #: ladder forces the Pallas kernel)
 PAGED_DECODE_IMPLS = ("pallas_paged", "jnp_paged")
 
-#: names accepted by the override ladder (env / context / ServeConfig).
-#: ``paged_decode`` pins the DECODE side to the Pallas paged kernel and is
-#: transparent to prefill selection (prefill falls through to heuristics).
+#: names accepted by the LEGACY override ladder (use_attention_impl /
+#: $REPRO_ATTN_IMPL / ServeConfig.attn_impl).  ``paged_decode`` pins the
+#: DECODE side to the Pallas paged kernel and is transparent to prefill
+#: selection (prefill falls through to heuristics).
 OVERRIDE_IMPLS = ATTENTION_IMPLS + ("paged_decode",)
-
-_TLS = threading.local()
-
-
-def default_interpret(backend: Optional[str] = None) -> bool:
-    """Pallas interpret mode from backend detection (not a hardcoded True).
-
-    ``REPRO_KERNEL_COMPILE=1`` forces compiled, ``=0`` forces interpret;
-    otherwise TPU compiles and everything else interprets.
-    """
-    env = os.environ.get("REPRO_KERNEL_COMPILE")
-    if env is not None:
-        return env != "1"
-    return (backend or jax.default_backend()) != "tpu"
 
 
 @contextlib.contextmanager
 def use_attention_impl(name: Optional[str]):
     """Force every attention dispatch traced inside the block to ``name``.
 
-    Thread-local (ProfileSession.sweep workers don't leak overrides into
-    each other); ``None`` is a no-op so callers can thread an optional
+    Legacy spelling: the single name expands through
+    ``registry.LEGACY_ATTN_MAP`` onto the attention AND paged_decode
+    families (``"paged_decode"`` touches only the decode side).
+    Thread-local; ``None`` is a no-op so callers can thread an optional
     config field straight through.
     """
-    if name is not None and name not in OVERRIDE_IMPLS:
+    if name is None:
+        with registry.use_impl():
+            yield
+        return
+    mapping = registry.LEGACY_ATTN_MAP.get(name)
+    if mapping is None:
         raise ValueError(f"unknown attention impl {name!r}; "
                          f"choose from {OVERRIDE_IMPLS}")
-    prev = getattr(_TLS, "attn_impl", None)
-    _TLS.attn_impl = name if name is not None else prev
-    try:
+    with registry.use_impl(**mapping):
         yield
-    finally:
-        _TLS.attn_impl = prev
 
 
 def attention_impl_override() -> Optional[str]:
-    """The active forced impl: context override, else $REPRO_ATTN_IMPL."""
-    ctx = getattr(_TLS, "attn_impl", None)
-    if ctx is not None:
-        return ctx
-    env = os.environ.get("REPRO_ATTN_IMPL")
-    if env:
-        if env not in OVERRIDE_IMPLS:
-            raise ValueError(f"REPRO_ATTN_IMPL={env!r} not in "
-                             f"{OVERRIDE_IMPLS}")
-        return env
+    """The active forced impl in LEGACY vocabulary: the attention-family
+    override if one is set, ``"paged_decode"`` when only the decode side
+    is pinned to the Pallas paged kernel, else None."""
+    attn = registry.override_for("attention")
+    if attn is not None:
+        return attn
+    if registry.override_for("paged_decode") == "pallas_paged":
+        return "paged_decode"
     return None
 
 
@@ -130,21 +99,9 @@ def select_attention_impl(*, sq: int, sk: int, dh: int, causal: bool = True,
     twin — the Pallas kernel is forward-only.  An override (env/context)
     beats every heuristic, including ``differentiable``.
     """
-    del sk, causal                  # part of the contract, unused for now
-    forced = attention_impl_override()
-    if forced == "paged_decode":
-        forced = None               # decode-side pin; prefill picks freely
-    if forced is not None:
-        return forced
-    if differentiable:
-        return "jnp_flash"
-    backend = backend or jax.default_backend()
-    if backend == "tpu":
-        # MXU-shaped work only; degenerate shapes stay on fused XLA ops
-        return "pallas_flash" if (sq >= 8 and dh % 8 == 0) else "full"
-    if flash_min_seq is not None and sq > flash_min_seq:
-        return "jnp_flash"
-    return "full"
+    return registry.select("attention", sq=sq, sk=sk, dh=dh, causal=causal,
+                           backend=backend, flash_min_seq=flash_min_seq,
+                           differentiable=differentiable)
 
 
 def run_attention(name: str, q, k, v, *, q_offset=0, causal: bool = True,
@@ -159,38 +116,19 @@ def run_attention(name: str, q, k, v, *, q_offset=0, causal: bool = True,
     axis.  ``softmax_mode``/``chunk_*`` parameterize the ``full`` impl;
     ``blocks``/``interpret`` the ``pallas_flash`` impl.
     """
-    if name == "pallas_flash":
-        from repro.kernels import autotune, ops
-        b, sq, h, dh = q.shape
-        bq, bk = blocks or autotune.best_blocks(
-            b=b, h=h, kvh=k.shape[2], sq=sq, sk=k.shape[1], dh=dh,
-            dtype=q.dtype, causal=causal)
-        # ops.flash_attention owns the BSHD<->BHSD layout contract
-        return ops.flash_attention(q, k, v, causal=causal,
-                                   q_offset=q_offset, kv_valid=kv_len,
-                                   bq=bq, bk=bk, interpret=interpret)
-    if name == "jnp_flash":
-        from repro.models.attention import _flash_attention_offset
-        return _flash_attention_offset(q, k, v, q_offset, causal,
-                                       kv_len=kv_len)
-    if name == "full":
-        from repro.models import attention as attn_mod
-        mode = "naive" if softmax_mode == "kernel" else softmax_mode
-        # the q-chunked scan derives its own offsets from 0, so it only
-        # substitutes for the flat path when q really starts at 0
-        if (q.shape[1] > chunk_threshold
-                and isinstance(q_offset, int) and q_offset == 0):
-            return attn_mod._chunked_attention(q, k, v, chunk_size, causal,
-                                               mode, kv_len=kv_len)
-        return attn_mod._full_attention_offset(q, k, v, q_offset, causal,
-                                               mode, kv_len=kv_len)
     if name == "paged_decode":
         raise ValueError("paged_decode is a decode-attention impl; use "
                          "select_paged_decode_impl/run_paged_decode (it is "
                          "only a valid *override* name, pinning the decode "
                          "side while prefill keeps its heuristics)")
-    raise ValueError(f"unknown attention impl {name!r}; "
-                     f"choose from {ATTENTION_IMPLS}")
+    if name not in ATTENTION_IMPLS:
+        raise ValueError(f"unknown attention impl {name!r}; "
+                         f"choose from {ATTENTION_IMPLS}")
+    return registry.run("attention", q, k, v, impl=name, q_offset=q_offset,
+                        causal=causal, kv_len=kv_len,
+                        softmax_mode=softmax_mode, chunk_size=chunk_size,
+                        chunk_threshold=chunk_threshold, blocks=blocks,
+                        interpret=interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -200,20 +138,14 @@ def run_attention(name: str, q, k, v, *, q_offset=0, causal: bool = True,
 def select_paged_decode_impl(*, backend: Optional[str] = None) -> str:
     """Pick the paged decode-attention implementation (trace-time, static).
 
-    The SAME override ladder as prefill (env / thread-local context /
-    ``ServeConfig.attn_impl``), mapped onto the two paged impls:
-    ``paged_decode`` or ``pallas_flash`` force the Pallas kernel,
-    ``jnp_flash``/``full`` force the gather-based jnp reference (the
-    masked-dense oracle/fallback).  Unforced: TPU compiles the kernel,
-    interpret-mode hosts take the reference — same policy as prefill.
+    The SAME override ladder as prefill — the legacy names map onto the
+    paged family (``paged_decode``/``pallas_flash`` force the Pallas
+    kernel, ``jnp_flash``/``full`` force the gather-based reference) and
+    ``registry.use_impl(paged_decode=...)`` / ``REPRO_IMPL`` pin it
+    directly.  Unforced: TPU compiles the kernel, interpret-mode hosts
+    take the reference — same policy as prefill.
     """
-    forced = attention_impl_override()
-    if forced in ("paged_decode", "pallas_flash"):
-        return "pallas_paged"
-    if forced in ("jnp_flash", "full"):
-        return "jnp_paged"
-    backend = backend or jax.default_backend()
-    return "pallas_paged" if backend == "tpu" else "jnp_paged"
+    return registry.select("paged_decode", backend=backend)
 
 
 def run_paged_decode(name: str, q, k_pages, v_pages, page_table, length,
@@ -227,20 +159,10 @@ def run_paged_decode(name: str, q, k_pages, v_pages, page_table, length,
     are folded into the softmax, NOT written; the caller scatters them
     into their page afterwards).  Returns [B,1,H,Dh].
     """
-    if name == "pallas_paged":
-        from repro.kernels import autotune
-        from repro.kernels.paged_decode import paged_decode_attention
-        ppb = pages_per_block or autotune.best_paged_block(
-            b=q.shape[0], kvh=k_pages.shape[2],
-            g=q.shape[2] // k_pages.shape[2], dh=q.shape[-1],
-            page_size=k_pages.shape[1], dtype=q.dtype)
-        return paged_decode_attention(q, k_pages, v_pages, page_table,
-                                      length, k_new, v_new,
-                                      pages_per_block=ppb,
-                                      interpret=interpret)
-    if name == "jnp_paged":
-        from repro.models.attention import paged_decode_jnp
-        return paged_decode_jnp(q, k_pages, v_pages, page_table, length,
-                                k_new, v_new)
-    raise ValueError(f"unknown paged decode impl {name!r}; "
-                     f"choose from {PAGED_DECODE_IMPLS}")
+    if name not in PAGED_DECODE_IMPLS:
+        raise ValueError(f"unknown paged decode impl {name!r}; "
+                         f"choose from {PAGED_DECODE_IMPLS}")
+    return registry.run("paged_decode", q, k_pages, v_pages, page_table,
+                        length, k_new, v_new, impl=name,
+                        pages_per_block=pages_per_block,
+                        interpret=interpret)

@@ -30,6 +30,10 @@ write-allocate property with no TPU analogue (TPU stores don't read the
 destination line — every TPU store is already "NT");
 benchmarks/bench_jacobi_traffic.py models the x86 write-allocate cost on
 the XLA side with a read-modify-write buffer.  Traffic: :func:`traffic_model`.
+
+Registered as the ``jacobi7`` family in kernels/registry.py
+(``wavefront`` vs ``naive``); the slab width ``block_x`` is its tune
+space, VMEM-gated through :func:`vmem_footprint`.
 """
 
 from __future__ import annotations

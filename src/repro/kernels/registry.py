@@ -1,0 +1,1218 @@
+"""One kernel registry: declarative impls, one override ladder, one tuner.
+
+LIKWID's API bet (the paper, §II) is a *small, stable, named* surface:
+event groups and marker regions you can force from the environment,
+instead of PAPI's per-counter sprawl.  Our kernel layer had drifted the
+PAPI way — PR 3 and PR 4 each grew their own select/run/autotune trio,
+``paged_decode`` rode the attention ladder as a pseudo-impl that
+``run_attention`` had to explicitly reject, tuned winners lived in two
+process-local dicts that died on restart, and three kernels sat outside
+dispatch entirely.  This module is the redesign:
+
+* **Declarative impls.**  Every implementation is a :class:`KernelSpec`
+  (family, name, callable, static capability predicate, layout contract,
+  oracle link, optional tune space) registered with
+  :func:`register_impl` — adding a kernel family is a registration, not
+  a new ladder.
+* **One override ladder**, per family:  the :func:`use_impl` thread-local
+  context, then ``REPRO_IMPL`` (``"attention=pallas_flash,
+  paged_decode=pallas_paged"``), then the legacy ``REPRO_ATTN_IMPL``
+  spelling (mapped onto the attention + paged_decode families so every
+  existing workflow keeps working), then the family's heuristic.
+  ``ServeConfig.impls`` pins through the same context, exactly like
+  ``attn_impl`` always did.
+* **One autotuner.**  :func:`autotune` reads each tuned spec's candidate
+  generator + VMEM estimator, sweeps the probes through
+  ``ProfileSession.measure`` (lower+compile cold, disk lookup warm,
+  never executed), scores with the chip roofline, and records winners in
+  a lock-guarded process table that :func:`best` serves to dispatch.
+* **Disk-persistent winners.**  Sweep outcomes are ArtifactCache entries
+  keyed like probes (family + tune key + toolchain, including the repo
+  source fingerprint), so a fresh process warm-starts with **zero
+  sweeps and zero lowerings**: ``autotune`` returns the persisted record
+  without measuring, and ``best`` resolves tuned choices straight from
+  disk even if ``autotune`` is never called.
+
+Registered families (see :func:`describe` for the live table)::
+
+    attention     pallas_flash | jnp_flash | full      tune: (bq, bk)
+    paged_decode  pallas_paged | jnp_paged             tune: (page_size, ppb)
+    stream_triad  pallas_triad | xla_triad             tune: (block_rows,)
+    jacobi7       wavefront | naive                    tune: (block_x,)
+    ssd_scan      pallas_ssd | jnp_scan                tune: (chunk,)
+
+``repro.kernels.dispatch`` and ``repro.kernels.autotune`` remain as thin
+deprecation shims over this module.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import functools
+import os
+import threading
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hwinfo
+from repro.core.artifact_cache import ArtifactCache, canonical_digest
+
+__all__ = [
+    "KernelSpec", "TuneSpace", "TuneRecord", "register_impl",
+    "register_family", "families", "impls", "get_spec", "describe",
+    "use_impl", "parse_impl_spec", "override_for", "select", "run",
+    "autotune", "best", "record", "clear_tune_table", "tune_table",
+    "dump_tune_table", "default_interpret", "LEGACY_ATTN_MAP",
+]
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+
+def default_interpret(backend: Optional[str] = None) -> bool:
+    """Pallas interpret mode from backend detection (not a hardcoded True).
+
+    ``REPRO_KERNEL_COMPILE=1`` forces compiled, ``=0`` forces interpret;
+    otherwise TPU compiles and everything else interprets.
+    """
+    env = os.environ.get("REPRO_KERNEL_COMPILE")
+    if env is not None:
+        return env != "1"
+    return (backend or jax.default_backend()) != "tpu"
+
+
+def _pow2_up(n: int) -> int:
+    """Round up to a power of two (>= 1)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+def _backend(backend: Optional[str]) -> str:
+    return backend or jax.default_backend()
+
+
+def _dtype_name(dtype) -> str:
+    return jnp.dtype(dtype).name
+
+
+# ---------------------------------------------------------------------------
+# the data model
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TuneSpace:
+    """Declarative tune space for one (tunable) implementation.
+
+    ``key(**facts)`` names the sweep (and, unless ``lookup_key`` is given,
+    the record :func:`best` looks up); ``candidates(**facts)`` yields
+    candidate tuples; ``vmem(cand, itemsize, **facts)`` estimates the
+    kernel's VMEM working set so oversized candidates are gated before
+    any XLA work; ``probe(cand, interpret, **facts)`` returns
+    ``(module-level fn, abstract args)`` for ``ProfileSession.measure``
+    (module-level so the fingerprint — the cache key — is stable across
+    processes); ``record_keys(scores, **facts)`` optionally fans one
+    sweep into several lookup records (the paged sweep records a winner
+    per page_size); ``default`` is the untuned fallback choice (a tuple,
+    or a callable over the lookup facts).
+    """
+
+    key: Callable[..., str]
+    candidates: Callable[..., Sequence[Tuple]]
+    vmem: Callable[..., int]
+    probe: Callable[..., Tuple[Callable, Tuple]]
+    default: Any
+    lookup_key: Optional[Callable[..., str]] = None
+    record_keys: Optional[Callable[..., Dict[str, Tuple[Tuple, float]]]] = None
+
+    def resolve_default(self, **facts) -> Tuple:
+        d = self.default
+        return tuple(d(**facts)) if callable(d) else tuple(d)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One registered implementation: everything dispatch, the autotuner
+    and the docs need to know about it, declared in one place."""
+
+    family: str
+    name: str
+    fn: Callable                               # runner, model layout
+    supports: Optional[Callable[..., bool]] = None   # static capability
+    layout: str = ""                           # calling-convention contract
+    oracle: str = ""                           # dotted path of the oracle
+    tune: Optional[TuneSpace] = None           # only on the tunable impl
+    doc: str = ""
+
+
+@dataclasses.dataclass
+class _Family:
+    name: str
+    impls: "Dict[str, KernelSpec]" = dataclasses.field(default_factory=dict)
+    heuristic: Optional[Callable[..., str]] = None
+    facts: Optional[Callable[..., Dict[str, Any]]] = None
+    layout: str = ""
+
+
+_FAMILIES: Dict[str, _Family] = {}
+
+
+def register_impl(family: str, name: str, *,
+                  supports: Optional[Callable[..., bool]] = None,
+                  layout: str = "", oracle: str = "",
+                  tune: Optional[TuneSpace] = None) -> Callable:
+    """Decorator: register the wrapped callable as impl ``name`` of
+    ``family``.  The callable is the runner (model layout in, model
+    layout out); registration is declarative — no ladder code."""
+    def deco(fn: Callable) -> Callable:
+        fam = _FAMILIES.setdefault(family, _Family(name=family))
+        fam.impls[name] = KernelSpec(
+            family=family, name=name, fn=fn, supports=supports,
+            layout=layout, oracle=oracle, tune=tune,
+            doc=(fn.__doc__ or "").strip().splitlines()[0]
+            if fn.__doc__ else "")
+        return fn
+    return deco
+
+
+def register_family(name: str, *, heuristic: Callable[..., str],
+                    facts: Optional[Callable] = None,
+                    layout: str = "") -> None:
+    """Attach the unforced-selection heuristic (and, optionally, the
+    static-fact extractor :func:`run` uses to self-select) to a family."""
+    fam = _FAMILIES.setdefault(name, _Family(name=name))
+    fam.heuristic = heuristic
+    fam.facts = facts
+    fam.layout = layout or fam.layout
+
+
+def _family(name: str) -> _Family:
+    fam = _FAMILIES.get(name)
+    if fam is None:
+        raise ValueError(f"unknown kernel family {name!r}; "
+                         f"choose from {sorted(_FAMILIES)}")
+    return fam
+
+
+def families() -> Tuple[str, ...]:
+    return tuple(sorted(_FAMILIES))
+
+
+def impls(family: str) -> Tuple[str, ...]:
+    return tuple(_family(family).impls)
+
+
+def get_spec(family: str, name: str) -> KernelSpec:
+    fam = _family(family)
+    spec = fam.impls.get(name)
+    if spec is None:
+        raise ValueError(f"unknown {family} impl {name!r}; "
+                         f"choose from {tuple(fam.impls)}")
+    return spec
+
+
+def describe() -> str:
+    """Human-readable registry table (families, impls, tune spaces)."""
+    lines = []
+    for fname in families():
+        fam = _FAMILIES[fname]
+        for spec in fam.impls.values():
+            tuned = "tunable" if spec.tune is not None else ""
+            lines.append(f"{fname:>13}  {spec.name:<13} {tuned:<8} "
+                         f"{spec.doc}")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# the override ladder (one per family)
+# ---------------------------------------------------------------------------
+
+_TLS = threading.local()
+
+#: legacy ``REPRO_ATTN_IMPL`` / ``use_attention_impl`` names, mapped onto
+#: per-family overrides.  ``paged_decode`` pins the DECODE side only and
+#: is transparent to prefill selection (no ``attention`` entry).
+LEGACY_ATTN_MAP: Dict[str, Dict[str, str]] = {
+    "pallas_flash": {"attention": "pallas_flash",
+                     "paged_decode": "pallas_paged"},
+    "jnp_flash": {"attention": "jnp_flash", "paged_decode": "jnp_paged"},
+    "full": {"attention": "full", "paged_decode": "jnp_paged"},
+    "paged_decode": {"paged_decode": "pallas_paged"},
+}
+
+
+def parse_impl_spec(spec: str) -> Dict[str, str]:
+    """Parse ``"attention=pallas_flash,paged_decode=pallas_paged"`` into a
+    validated {family: impl} mapping (the ``REPRO_IMPL`` / ``--impl``
+    grammar)."""
+    out: Dict[str, str] = {}
+    for part in spec.split(","):
+        part = part.strip()
+        if not part:
+            continue
+        if "=" not in part:
+            raise ValueError(
+                f"bad impl spec {part!r} (want family=impl[,family=impl...];"
+                f" families: {families()})")
+        fam, name = (t.strip() for t in part.split("=", 1))
+        get_spec(fam, name)                      # validates both halves
+        out[fam] = name
+    return out
+
+
+@contextlib.contextmanager
+def use_impl(spec: Optional[str] = None, **impl_kw: Optional[str]):
+    """Force per-family implementations for everything traced inside.
+
+    Accepts a spec string (``use_impl("attention=pallas_flash")``) and/or
+    keywords (``use_impl(attention="pallas_flash")``).  Thread-local
+    (sweep workers never leak overrides into each other); nested
+    contexts merge with inner-wins-per-family; ``None`` values are
+    no-ops so callers can thread optional config fields straight
+    through."""
+    wanted = dict(parse_impl_spec(spec)) if spec else {}
+    for fam, name in impl_kw.items():
+        if name is None:
+            continue
+        get_spec(fam, name)                      # validate eagerly
+        wanted[fam] = name
+    prev = getattr(_TLS, "impls", None)
+    _TLS.impls = {**(prev or {}), **wanted}
+    try:
+        yield
+    finally:
+        _TLS.impls = prev
+
+
+def override_for(family: str) -> Optional[str]:
+    """The forced impl for ``family``: context, else ``REPRO_IMPL``, else
+    the legacy ``REPRO_ATTN_IMPL`` mapping; None when unforced."""
+    ctx = getattr(_TLS, "impls", None)
+    if ctx and family in ctx:
+        return ctx[family]
+    env = os.environ.get("REPRO_IMPL")
+    if env:
+        mapping = parse_impl_spec(env)           # raises on bad spec
+        if family in mapping:
+            return mapping[family]
+    legacy = os.environ.get("REPRO_ATTN_IMPL")
+    if legacy:
+        mapping = LEGACY_ATTN_MAP.get(legacy)
+        if mapping is None:
+            raise ValueError(f"REPRO_ATTN_IMPL={legacy!r} not in "
+                             f"{tuple(LEGACY_ATTN_MAP)}")
+        if family in mapping:
+            return mapping[family]
+    return None
+
+
+def select(family: str, **facts) -> str:
+    """Pick an implementation name from STATIC facts only (trace-time).
+
+    An override (context / env) beats every heuristic — including
+    capability hints like ``differentiable`` — exactly as the legacy
+    attention ladder behaved.  Unforced, the family's registered
+    heuristic decides."""
+    fam = _family(family)
+    forced = override_for(family)
+    if forced is not None:
+        get_spec(family, forced)                 # late env validation
+        return forced
+    if fam.heuristic is None:
+        # declarative fallback: first impl whose capability predicate
+        # accepts these facts
+        for spec in fam.impls.values():
+            if spec.supports is None or spec.supports(**facts):
+                return spec.name
+        raise ValueError(f"no {family} impl supports {facts}")
+    return fam.heuristic(**facts)
+
+
+def run(family: str, *args, impl: Optional[str] = None, **kwargs):
+    """Run ``family`` on model-layout args; ``impl=None`` self-selects
+    via the family's fact extractor + :func:`select`."""
+    fam = _family(family)
+    if impl is None:
+        facts = fam.facts(*args, **kwargs) if fam.facts is not None else {}
+        impl = select(family, **facts)
+    return get_spec(family, impl).fn(*args, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# the tune table (lock-guarded: sweep workers race on it) + persistence
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TuneRecord:
+    """Outcome of one autotune sweep — or its disk-persisted resurrection
+    (``swept=False``: served from the tune cache, zero measurements)."""
+
+    family: str
+    key: str
+    choice: Tuple
+    score_s: float
+    scores: Dict[Tuple, float]          # candidate -> score (inf = gated)
+    lowerings: int                      # real compiles (0 = fully warm)
+    swept: bool = True                  # False: loaded, not measured
+
+
+class _TuneTable:
+    """The process-wide winner table, consulted by :func:`best` on every
+    dispatch.  Every access is lock-guarded: ``ProfileSession.sweep``
+    workers autotune concurrently (the PR-3/PR-4 dicts raced here).
+
+    Disk misses are negative-cached (``note_miss``/``missed``) so an
+    untuned shape pays the filesystem probe once per process, not once
+    per dispatch; recording a key discards its miss marker."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._recs: Dict[Tuple[str, str], TuneRecord] = {}
+        self._miss: set = set()
+
+    def get(self, family: str, key: str) -> Optional[TuneRecord]:
+        with self._lock:
+            return self._recs.get((family, key))
+
+    def put(self, rec: TuneRecord) -> None:
+        with self._lock:
+            self._recs[(rec.family, rec.key)] = rec
+            self._miss.discard((rec.family, rec.key))
+
+    def missed(self, family: str, key: str) -> bool:
+        with self._lock:
+            return (family, key) in self._miss
+
+    def note_miss(self, family: str, key: str) -> None:
+        with self._lock:
+            self._miss.add((family, key))
+
+    def clear(self, family: Optional[str] = None) -> None:
+        with self._lock:
+            if family is None:
+                self._recs.clear()
+                self._miss.clear()
+            else:
+                for k in [k for k in self._recs if k[0] == family]:
+                    del self._recs[k]
+                self._miss = {k for k in self._miss if k[0] != family}
+
+    def snapshot(self) -> List[TuneRecord]:
+        with self._lock:
+            return list(self._recs.values())
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._recs)
+
+
+_TABLE = _TuneTable()
+
+
+def tune_table() -> _TuneTable:
+    return _TABLE
+
+
+def clear_tune_table(family: Optional[str] = None) -> None:
+    """Forget everything this process learned about winners: the table,
+    the negative-cached misses and (on a full clear) the extra cache
+    roots.  Disk-persisted records survive — ``best`` re-reads the
+    default root on the next miss."""
+    _TABLE.clear(family)
+    if family is None:
+        _forget_tune_roots()
+
+
+def dump_tune_table() -> Dict[str, Any]:
+    """JSON-ready dump of every in-process record (the CI artifact)."""
+    return {"records": [
+        {"family": r.family, "key": r.key, "choice": list(r.choice),
+         "score_s": r.score_s, "lowerings": r.lowerings, "swept": r.swept,
+         "scores": {str(list(c)): s for c, s in sorted(r.scores.items())}}
+        for r in sorted(_TABLE.snapshot(), key=lambda r: (r.family, r.key))
+    ]}
+
+
+def _toolchain() -> Dict[str, str]:
+    from repro.core.session import _toolchain as tc
+    return tc()
+
+
+def _tune_digest(kind: str, family: str, key: str) -> str:
+    """Content digest for a persisted tune entry — keyed like probes
+    (toolchain includes the whole-repo source fingerprint, so a code
+    edit invalidates winners instead of serving stale tilings)."""
+    return canonical_digest({"kind": kind, "family": family, "key": key,
+                             "toolchain": _toolchain()})
+
+
+# cache roots autotune persisted winners to this process, beyond the
+# default root — best() consults these too, so a custom
+# ProfileSession(cache_dir=...) sweep is visible to dispatch even after
+# clear_tune_table().  (Cross-process, best()-only warm starts read the
+# DEFAULT root: point $REPRO_CACHE_DIR at the sweep's cache dir, or call
+# autotune once per process — free when warm — to re-register the root.)
+# Lock-guarded: sweep workers add roots while dispatches snapshot them.
+_EXTRA_TUNE_ROOTS: set = set()
+_ROOTS_LOCK = threading.Lock()
+
+
+def _note_tune_root(cache: ArtifactCache) -> None:
+    if cache.enabled and cache.root != ArtifactCache(None).root:
+        with _ROOTS_LOCK:
+            _EXTRA_TUNE_ROOTS.add(cache.root)
+
+
+def _forget_tune_roots() -> None:
+    with _ROOTS_LOCK:
+        _EXTRA_TUNE_ROOTS.clear()
+
+
+def _tune_caches() -> List[ArtifactCache]:
+    """The caches :func:`best` reads when the in-process table misses —
+    ``$REPRO_CACHE_DIR`` (resolved per call, i.e. the place
+    ProfileSession probes land by default) plus any roots winners were
+    persisted to this process."""
+    default = ArtifactCache(None)
+    with _ROOTS_LOCK:
+        extras = sorted(_EXTRA_TUNE_ROOTS)
+    return [default] + [ArtifactCache(r) for r in extras
+                        if r != default.root]
+
+
+def _rec_to_entry(rec: TuneRecord, candidates: Sequence[Tuple],
+                  vmem_fraction: float,
+                  records: Dict[str, Tuple[Tuple, float]]) -> Dict[str, Any]:
+    return {
+        "kind": "tune-sweep", "family": rec.family, "key": rec.key,
+        "choice": list(rec.choice), "score_s": rec.score_s,
+        "scores": [[list(c), s] for c, s in rec.scores.items()],
+        "candidates": [list(c) for c in candidates],
+        "vmem_fraction": vmem_fraction,
+        "records": {k: {"choice": list(c), "score_s": s}
+                    for k, (c, s) in records.items()},
+    }
+
+
+def _entry_to_rec(family: str, key: str, entry: Dict[str, Any]) -> TuneRecord:
+    return TuneRecord(
+        family=family, key=key, choice=tuple(entry["choice"]),
+        score_s=float(entry["score_s"]),
+        scores={tuple(c): float(s) for c, s in entry["scores"]},
+        lowerings=0, swept=False)
+
+
+def _roofline_seconds(ev, chip: hwinfo.ChipSpec) -> float:
+    """max(compute term, memory term) from measured artifact events."""
+    t_c = ev["FLOPS_TOTAL"] / chip.peak_bf16_flops
+    t_m = ev["BYTES_ACCESSED"] / chip.hbm_bw
+    return max(t_c, t_m)
+
+
+def _tuned_spec(family: str, impl: Optional[str] = None) -> KernelSpec:
+    fam = _family(family)
+    if impl is not None:
+        spec = get_spec(family, impl)
+        if spec.tune is None:
+            raise ValueError(f"{family}/{impl} declares no tune space")
+        return spec
+    tuned = [s for s in fam.impls.values() if s.tune is not None]
+    if not tuned:
+        raise ValueError(f"family {family!r} has no tunable impl")
+    return tuned[0]
+
+
+def autotune(family: str, session, *, impl: Optional[str] = None,
+             candidates: Optional[Sequence[Tuple]] = None,
+             chip: Optional[hwinfo.ChipSpec] = None,
+             backend: Optional[str] = None,
+             interpret: Optional[bool] = None,
+             vmem_fraction: float = 0.9, force: bool = False,
+             **facts) -> TuneRecord:
+    """Sweep the family's tune space for one shape; record + persist the
+    winner(s).
+
+    Warm start is two-level: a sweep whose persisted record matches
+    (same tune key, same candidate set, same VMEM budget, same
+    toolchain) returns WITHOUT measuring anything (``swept=False`` —
+    zero sweeps, zero lowerings); a changed candidate set re-sweeps, but
+    each probe is itself a content-addressed cache entry, so even that
+    re-lowers nothing that was measured before.  ``force=True`` ignores
+    the persisted record.  Winners land in the lock-guarded table
+    :func:`best` consults and on disk for the next process.
+    """
+    spec = _tuned_spec(family, impl)
+    ts = spec.tune
+    chip = chip or getattr(session, "chip", None) or hwinfo.DEFAULT_CHIP
+    backend = _backend(backend)
+    if interpret is None:
+        interpret = default_interpret(backend)
+    facts = dict(facts, backend=backend)
+    facts.setdefault("dtype", jnp.float32)
+    key = ts.key(**facts)
+    cands = tuple(tuple(c) for c in
+                  (candidates if candidates is not None
+                   else ts.candidates(**facts)))
+
+    _note_tune_root(session.cache)
+    digest = _tune_digest("tune-sweep", family, key)
+    if not force:
+        entry = session.cache.get(digest)
+        if (entry is not None
+                and entry.get("candidates") == [list(c) for c in cands]
+                and entry.get("vmem_fraction") == vmem_fraction):
+            rec = _entry_to_rec(family, key, entry)
+            for rkey, sub in entry.get("records", {}).items():
+                _TABLE.put(TuneRecord(
+                    family=family, key=rkey, choice=tuple(sub["choice"]),
+                    score_s=float(sub["score_s"]), scores=rec.scores,
+                    lowerings=0, swept=False))
+            return rec
+
+    itemsize = jnp.dtype(facts["dtype"]).itemsize
+    budget = chip.vmem_bytes * vmem_fraction
+    lowerings0 = session.lowerings
+    scores: Dict[Tuple, float] = {}
+    for cand in cands:
+        if ts.vmem(cand, itemsize, **facts) > budget:
+            scores[cand] = float("inf")          # gated before any XLA work
+            continue
+        fn, abstract_args = ts.probe(cand, interpret, **facts)
+        m = session.measure(fn, *abstract_args,
+                            region=f"{family}[{key}]{list(cand)}", chip=chip)
+        scores[cand] = _roofline_seconds(m.events, chip)
+
+    finite = {c: s for c, s in scores.items() if s != float("inf")}
+    if not finite:
+        raise ValueError(f"no {family} candidate fits VMEM for {key} "
+                         f"(candidates {cands})")
+    choice, score = min(finite.items(), key=lambda kv: (kv[1], kv[0]))
+    lowerings = session.lowerings - lowerings0
+    rec = TuneRecord(family=family, key=key, choice=choice, score_s=score,
+                     scores=scores, lowerings=lowerings, swept=True)
+
+    if ts.record_keys is not None:
+        records = ts.record_keys(scores, **facts)
+    else:
+        records = {key: (choice, score)}
+    for rkey, (rchoice, rscore) in records.items():
+        _TABLE.put(TuneRecord(family=family, key=rkey,
+                              choice=tuple(rchoice), score_s=rscore,
+                              scores=scores, lowerings=lowerings,
+                              swept=True))
+    session.cache.put(digest, _rec_to_entry(rec, cands, vmem_fraction,
+                                            records))
+    for rkey, (rchoice, rscore) in records.items():
+        session.cache.put(
+            _tune_digest("tune-choice", family, rkey),
+            {"kind": "tune-choice", "family": family, "key": rkey,
+             "choice": list(rchoice), "score_s": rscore})
+    return rec
+
+
+def best(family: str, *, impl: Optional[str] = None, **facts) -> Tuple:
+    """The tuned choice for this shape: in-process table, else the
+    disk-persisted record (a fresh process warm-starts with zero
+    sweeps), else the spec's declared default.  Called by runners at
+    trace time on every dispatch; a disk miss is negative-cached so
+    untuned shapes probe the filesystem once per process."""
+    ts = _tuned_spec(family, impl).tune
+    facts = dict(facts, backend=_backend(facts.get("backend")))
+    facts.setdefault("dtype", jnp.float32)
+    key = (ts.lookup_key or ts.key)(**facts)
+    rec = _TABLE.get(family, key)
+    if rec is not None:
+        return rec.choice
+    if not _TABLE.missed(family, key):
+        digest = _tune_digest("tune-choice", family, key)
+        for cache in _tune_caches():
+            entry = cache.get(digest)
+            if entry is not None and "choice" in entry:
+                choice = tuple(entry["choice"])
+                _TABLE.put(TuneRecord(
+                    family=family, key=key, choice=choice,
+                    score_s=float(entry.get("score_s", "nan")),
+                    scores={}, lowerings=0, swept=False))
+                return choice
+        _TABLE.note_miss(family, key)
+    return ts.resolve_default(**facts)
+
+
+def record(family: str, key: str, choice: Tuple,
+           score_s: float = float("nan")) -> None:
+    """Pin a choice manually (e.g. replayed from a saved bench record);
+    in-process only."""
+    _TABLE.put(TuneRecord(family=family, key=key, choice=tuple(choice),
+                          score_s=score_s, scores={}, lowerings=0,
+                          swept=False))
+
+
+# ===========================================================================
+# family: attention (prefill / dense attention, BSHD)
+# ===========================================================================
+
+DEFAULT_BLOCKS: Tuple[int, int] = (128, 256)
+
+#: (bq, bk) grid — multiples of the 8-sublane/128-lane layout quanta
+DEFAULT_CANDIDATES: Tuple[Tuple[int, int], ...] = (
+    (64, 64), (64, 128), (128, 128), (128, 256), (256, 128), (256, 256),
+    (512, 256),
+)
+
+
+def attention_tune_key(*, b: int, h: int, kvh: int, sq: int, sk: int,
+                       dh: int, dtype, causal: bool = True,
+                       backend: Optional[str] = None, **_ignored) -> str:
+    """Per-shape tune key.  ``b`` is bucketed to powers of two (the
+    lesson ``paged_tune_key`` learned for table width): the continuous-
+    batching scheduler's live mix varies batch from segment to segment,
+    and a winning (bq, bk) tiling is a per-row property — keying on the
+    exact batch made every serving lookup miss the sweep's record and
+    fall back to DEFAULT_BLOCKS."""
+    return (f"b{_pow2_up(b)}h{h}kvh{kvh}sq{sq}sk{sk}dh{dh}"
+            f"-{_dtype_name(dtype)}-{'causal' if causal else 'full'}"
+            f"-{_backend(backend)}")
+
+
+def attention_vmem(bq: int, bk: int, dh: int, itemsize: int = 4) -> int:
+    """Bytes of VMEM the flash kernel needs for one (bq, bk) tile pair:
+    I/O tiles (q, k, v, out) double-buffered by the pipeline, the
+    [bq,bk] f32 score tile plus m/l/acc scratch rows live once."""
+    io = 2 * (bq * dh + 2 * bk * dh + bq * dh) * itemsize
+    compute = (bq * bk + bq * dh + 2 * bq) * 4
+    return io + compute
+
+
+def _attention_vmem(cand, itemsize, *, sq, sk, dh, **facts) -> int:
+    bq, bk = cand
+    return attention_vmem(min(bq, sq), min(bk, sk), dh, itemsize)
+
+
+def _flash_probe(q, k, v, kv_valid, *, causal: bool, bq: int, bk: int,
+                 interpret: bool):
+    """Module-level probe target: partial-wrapping this per candidate
+    gives every (bq, bk) a stable cross-process fingerprint."""
+    from repro.kernels.flash_attention import flash_attention_bhsd
+    return flash_attention_bhsd(q, k, v, causal=causal, kv_valid=kv_valid,
+                                bq=bq, bk=bk, interpret=interpret)
+
+
+def _attention_probe(cand, interpret, *, b, h, kvh, sq, sk, dh, dtype,
+                     causal=True, **facts):
+    bq, bk = cand
+    fn = functools.partial(_flash_probe, causal=causal, bq=bq, bk=bk,
+                           interpret=interpret)
+    args = (jax.ShapeDtypeStruct((b, h, sq, dh), dtype),
+            jax.ShapeDtypeStruct((b, kvh, sk, dh), dtype),
+            jax.ShapeDtypeStruct((b, kvh, sk, dh), dtype),
+            jax.ShapeDtypeStruct((b,), jnp.int32))
+    return fn, args
+
+
+_ATTENTION_TUNE = TuneSpace(
+    key=attention_tune_key,
+    candidates=lambda **f: DEFAULT_CANDIDATES,
+    vmem=_attention_vmem,
+    probe=_attention_probe,
+    default=DEFAULT_BLOCKS,
+)
+
+_ATTENTION_LAYOUT = ("q [B,Sq,H,Dh]; k/v [B,Sk,KVH,Dh] -> [B,Sq,H,Dh]; "
+                     "q_offset scalar, kv_len scalar or [B] (traced ok)")
+
+
+def _attention_facts(q, k, v, *, causal: bool = True,
+                     chunk_threshold: int = 2048, **_kw) -> Dict[str, Any]:
+    return dict(sq=q.shape[1], sk=k.shape[1], dh=q.shape[-1], causal=causal,
+                flash_min_seq=chunk_threshold)
+
+
+def _attention_heuristic(*, sq: int, sk: int, dh: int, causal: bool = True,
+                         backend: Optional[str] = None,
+                         flash_min_seq: Optional[int] = None,
+                         differentiable: bool = False) -> str:
+    del sk, causal                  # part of the contract, unused for now
+    if differentiable:
+        return "jnp_flash"          # the Pallas kernel is forward-only
+    backend = _backend(backend)
+    if backend == "tpu":
+        # MXU-shaped work only; degenerate shapes stay on fused XLA ops
+        return "pallas_flash" if (sq >= 8 and dh % 8 == 0) else "full"
+    if flash_min_seq is not None and sq > flash_min_seq:
+        return "jnp_flash"
+    return "full"
+
+
+register_family("attention", heuristic=_attention_heuristic,
+                facts=_attention_facts, layout=_ATTENTION_LAYOUT)
+
+
+@register_impl("attention", "pallas_flash", tune=_ATTENTION_TUNE,
+               layout=_ATTENTION_LAYOUT,
+               oracle="repro.kernels.ref.flash_attention",
+               supports=lambda *, differentiable=False, **f:
+                   not differentiable)
+def _run_pallas_flash(q, k, v, *, q_offset=0, causal: bool = True,
+                      kv_len=None, softmax_mode: str = "naive",
+                      chunk_size: int = 512, chunk_threshold: int = 2048,
+                      blocks: Optional[Tuple[int, int]] = None,
+                      interpret: Optional[bool] = None):
+    """flash_attention_bhsd — blockwise online-softmax GQA (forward-only)."""
+    from repro.kernels import ops
+    b, sq, h, dh = q.shape
+    bq, bk = blocks or best("attention", b=b, h=h, kvh=k.shape[2], sq=sq,
+                            sk=k.shape[1], dh=dh, dtype=q.dtype,
+                            causal=causal)
+    # ops.flash_attention owns the BSHD<->BHSD layout contract
+    return ops.flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                               kv_valid=kv_len, bq=bq, bk=bk,
+                               interpret=interpret)
+
+
+@register_impl("attention", "jnp_flash", layout=_ATTENTION_LAYOUT,
+               oracle="repro.kernels.ref.flash_attention")
+def _run_jnp_flash(q, k, v, *, q_offset=0, causal: bool = True, kv_len=None,
+                   softmax_mode: str = "naive", chunk_size: int = 512,
+                   chunk_threshold: int = 2048, blocks=None, interpret=None):
+    """online-softmax twin with the flash custom-VJP (training-safe)."""
+    from repro.models.attention import _flash_attention_offset
+    return _flash_attention_offset(q, k, v, q_offset, causal, kv_len=kv_len)
+
+
+@register_impl("attention", "full", layout=_ATTENTION_LAYOUT,
+               oracle="repro.kernels.ref.flash_attention")
+def _run_full(q, k, v, *, q_offset=0, causal: bool = True, kv_len=None,
+              softmax_mode: str = "naive", chunk_size: int = 512,
+              chunk_threshold: int = 2048, blocks=None, interpret=None):
+    """scores-materialized naive/fused attention (paper-faithful baseline)."""
+    from repro.models import attention as attn_mod
+    mode = "naive" if softmax_mode == "kernel" else softmax_mode
+    # the q-chunked scan derives its own offsets from 0, so it only
+    # substitutes for the flat path when q really starts at 0
+    if (q.shape[1] > chunk_threshold
+            and isinstance(q_offset, int) and q_offset == 0):
+        return attn_mod._chunked_attention(q, k, v, chunk_size, causal,
+                                           mode, kv_len=kv_len)
+    return attn_mod._full_attention_offset(q, k, v, q_offset, causal,
+                                           mode, kv_len=kv_len)
+
+
+# ===========================================================================
+# family: paged_decode (decode attention over the serve/kv_pool pages)
+# ===========================================================================
+
+DEFAULT_PAGES_PER_BLOCK = 1
+
+#: (page_size, pages_per_block) grid — page_size trades pool
+#: fragmentation against per-page DMA efficiency, pages_per_block is the
+#: kernel's fetch granularity over a row's table
+DEFAULT_PAGED_CANDIDATES: Tuple[Tuple[int, int], ...] = (
+    (16, 1), (16, 2), (16, 4), (32, 1), (32, 2), (32, 4),
+    (64, 1), (64, 2), (128, 1),
+)
+
+
+def paged_lookup_key(*, b: int, kvh: int, g: int, dh: int, page_size: int,
+                     dtype, backend: Optional[str] = None,
+                     **_ignored) -> str:
+    # deliberately NOT keyed on the page-table width: the scheduler's
+    # live-mix bucket changes segment to segment, and the winning fetch
+    # granularity is a per-page property — keying on width would make
+    # every serving lookup miss the sweep's record
+    return (f"paged-b{b}kvh{kvh}g{g}dh{dh}ps{page_size}"
+            f"-{_dtype_name(dtype)}-{_backend(backend)}")
+
+
+def paged_sweep_key(*, b: int, kvh: int, g: int, dh: int, ctx: int, dtype,
+                    backend: Optional[str] = None, **_ignored) -> str:
+    return (f"paged-sweep-b{b}kvh{kvh}g{g}dh{dh}ctx{ctx}"
+            f"-{_dtype_name(dtype)}-{_backend(backend)}")
+
+
+def paged_vmem(ps: int, ppb: int, g: int, dh: int, itemsize: int = 4) -> int:
+    """VMEM bytes for one grid step: q + ppb double-buffered k/v page
+    tiles + out, plus the f32 [g, ps] score tile and m/l/acc scratch."""
+    io = 2 * (g * dh + 2 * ppb * ps * dh + 2 * dh + g * dh) * itemsize
+    compute = (g * ps + g * dh + 2 * g) * 4
+    return io + compute
+
+
+def _paged_vmem(cand, itemsize, *, g, dh, **facts) -> int:
+    ps, ppb = cand
+    return paged_vmem(ps, ppb, g, dh, itemsize)
+
+
+def _paged_probe_fn(q4, kp, vp, pt, lens, kn, vn, *, ppb: int,
+                    interpret: bool):
+    """Module-level probe target (stable fingerprint per (page_size via
+    shapes, ppb via partial) candidate)."""
+    from repro.kernels.paged_decode import paged_decode_attention_grouped
+    return paged_decode_attention_grouped(q4, kp, vp, pt, lens, kn, vn,
+                                          pages_per_block=ppb,
+                                          interpret=interpret)
+
+
+def _paged_probe(cand, interpret, *, b, kvh, g, dh, ctx, dtype, **facts):
+    ps, ppb = cand
+    np_w = max(-(-ctx // ps), 1)
+    p_total = b * np_w + 1
+    fn = functools.partial(_paged_probe_fn, ppb=ppb, interpret=interpret)
+    kp_s = jax.ShapeDtypeStruct((p_total, ps, kvh, dh), dtype)
+    kn_s = jax.ShapeDtypeStruct((b, kvh, dh), dtype)
+    args = (jax.ShapeDtypeStruct((b, kvh, g, dh), dtype), kp_s, kp_s,
+            jax.ShapeDtypeStruct((b, np_w), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32), kn_s, kn_s)
+    return fn, args
+
+
+def _paged_record_keys(scores, *, b, kvh, g, dh, dtype, backend=None,
+                       **facts) -> Dict[str, Tuple[Tuple, float]]:
+    """One lookup record per swept page_size: whatever page_size the pool
+    was built with, dispatch finds its winning fetch granularity."""
+    per_ps: Dict[int, Tuple[Tuple, float]] = {}
+    for (ps, ppb), s in scores.items():
+        if s == float("inf"):
+            continue
+        cur = per_ps.get(ps)
+        if cur is None or (s, ppb) < (cur[1], cur[0][1]):
+            per_ps[ps] = ((ps, ppb), s)
+    return {paged_lookup_key(b=b, kvh=kvh, g=g, dh=dh, page_size=ps,
+                             dtype=dtype, backend=backend): rec
+            for ps, rec in per_ps.items()}
+
+
+_PAGED_TUNE = TuneSpace(
+    key=paged_sweep_key,
+    candidates=lambda **f: DEFAULT_PAGED_CANDIDATES,
+    vmem=_paged_vmem,
+    probe=_paged_probe,
+    default=lambda *, page_size, **f: (page_size, DEFAULT_PAGES_PER_BLOCK),
+    lookup_key=paged_lookup_key,
+    record_keys=_paged_record_keys,
+)
+
+_PAGED_LAYOUT = ("q [B,1,H,Dh]; k/v_pages [P,ps,KVH,Dh]; page_table "
+                 "[B,NP] i32; length [B] i32; k/v_new [B,1,KVH,Dh] "
+                 "-> [B,1,H,Dh]")
+
+
+def _paged_heuristic(*, backend: Optional[str] = None, **_facts) -> str:
+    return "pallas_paged" if _backend(backend) == "tpu" else "jnp_paged"
+
+
+register_family("paged_decode", heuristic=_paged_heuristic,
+                layout=_PAGED_LAYOUT)
+
+
+@register_impl("paged_decode", "pallas_paged", tune=_PAGED_TUNE,
+               layout=_PAGED_LAYOUT, oracle="repro.kernels.ref.paged_decode")
+def _run_pallas_paged(q, k_pages, v_pages, page_table, length, k_new, v_new,
+                      *, pages_per_block: Optional[int] = None,
+                      interpret: Optional[bool] = None):
+    """Pallas paged decode kernel — bytes/token O(length), table-walked."""
+    from repro.kernels.paged_decode import paged_decode_attention
+    ppb = pages_per_block or best(
+        "paged_decode", b=q.shape[0], kvh=k_pages.shape[2],
+        g=q.shape[2] // k_pages.shape[2], dh=q.shape[-1],
+        page_size=k_pages.shape[1], dtype=q.dtype)[1]
+    return paged_decode_attention(q, k_pages, v_pages, page_table, length,
+                                  k_new, v_new, pages_per_block=ppb,
+                                  interpret=interpret)
+
+
+@register_impl("paged_decode", "jnp_paged", layout=_PAGED_LAYOUT,
+               oracle="repro.kernels.ref.paged_decode")
+def _run_jnp_paged(q, k_pages, v_pages, page_table, length, k_new, v_new,
+                   *, pages_per_block=None, interpret=None):
+    """gather-based masked-dense reference (oracle/fallback)."""
+    from repro.models.attention import paged_decode_jnp
+    return paged_decode_jnp(q, k_pages, v_pages, page_table, length,
+                            k_new, v_new)
+
+
+# ===========================================================================
+# family: stream_triad (paper case study 1, §III)
+# ===========================================================================
+
+DEFAULT_BLOCK_ROWS = 256
+LANES = 128
+
+_TRIAD_BLOCK_ROWS: Tuple[int, ...] = (64, 128, 256, 512, 1024)
+
+
+def triad_tune_key(*, n: int, dtype, backend: Optional[str] = None,
+                   **_ignored) -> str:
+    return f"triad-n{n}-{_dtype_name(dtype)}-{_backend(backend)}"
+
+
+def _triad_candidates(*, n: int, **facts) -> Tuple[Tuple[int], ...]:
+    rows = max(n // LANES, 1)
+    cands = tuple((br,) for br in _TRIAD_BLOCK_ROWS if br <= rows)
+    return cands or ((rows,),)
+
+
+def _triad_vmem(cand, itemsize, **facts) -> int:
+    (br,) = cand
+    # b + c streams double-buffered in, a double-buffered out
+    return 2 * (2 * br * LANES + br * LANES) * itemsize
+
+
+def _triad_probe_fn(b, c, *, s: float, block_rows: int, interpret: bool):
+    """Module-level probe target for the triad block_rows sweep."""
+    from repro.kernels.stream_triad import stream_triad
+    return stream_triad(b, c, s=s, block_rows=block_rows,
+                        interpret=interpret, pipelined=True)
+
+
+def _triad_probe(cand, interpret, *, n, dtype, **facts):
+    (br,) = cand
+    fn = functools.partial(_triad_probe_fn, s=2.5, block_rows=br,
+                           interpret=interpret)
+    x = jax.ShapeDtypeStruct((n,), dtype)
+    return fn, (x, x)
+
+
+_TRIAD_TUNE = TuneSpace(
+    key=triad_tune_key,
+    candidates=_triad_candidates,
+    vmem=_triad_vmem,
+    probe=_triad_probe,
+    default=(DEFAULT_BLOCK_ROWS,),
+)
+
+_TRIAD_LAYOUT = "b, c: flat [N] (N % 128 == 0) -> a = b + s*c"
+
+
+def _triad_heuristic(*, backend: Optional[str] = None, **_facts) -> str:
+    return "pallas_triad" if _backend(backend) == "tpu" else "xla_triad"
+
+
+register_family("stream_triad", heuristic=_triad_heuristic,
+                layout=_TRIAD_LAYOUT)
+
+
+@register_impl("stream_triad", "pallas_triad", tune=_TRIAD_TUNE,
+               layout=_TRIAD_LAYOUT, oracle="repro.kernels.ref.stream_triad")
+def _run_pallas_triad(b, c, *, s: float = 2.5,
+                      block_rows: Optional[int] = None,
+                      interpret: Optional[bool] = None,
+                      pipelined: bool = True):
+    """Pallas tiled triad — the double-buffered HBM-stream case study."""
+    from repro.kernels.stream_triad import stream_triad
+    if interpret is None:
+        interpret = default_interpret()
+    br = block_rows or best("stream_triad", n=b.shape[0], dtype=b.dtype)[0]
+    return stream_triad(b, c, s=s, block_rows=br, interpret=interpret,
+                        pipelined=pipelined)
+
+
+@register_impl("stream_triad", "xla_triad", layout=_TRIAD_LAYOUT,
+               oracle="repro.kernels.ref.stream_triad")
+def _run_xla_triad(b, c, *, s: float = 2.5, block_rows=None, interpret=None,
+                   pipelined: bool = True):
+    """plain XLA fused elementwise (the non-Pallas baseline)."""
+    return b + s * c
+
+
+# ===========================================================================
+# family: jacobi7 (paper case studies 2+3, §IV-§V)
+# ===========================================================================
+
+DEFAULT_BLOCK_X = 8
+
+_JACOBI_BLOCK_X: Tuple[int, ...] = (4, 8, 16, 32)
+
+
+def jacobi_tune_key(*, shape: Tuple[int, int, int], sweeps: int, dtype,
+                    backend: Optional[str] = None, **_ignored) -> str:
+    x, y, z = shape
+    return (f"jacobi7-x{x}y{y}z{z}t{sweeps}"
+            f"-{_dtype_name(dtype)}-{_backend(backend)}")
+
+
+def _jacobi_candidates(*, shape, sweeps, **facts) -> Tuple[Tuple[int], ...]:
+    ox = shape[0] - 2 * sweeps
+    cands = tuple((bx,) for bx in _JACOBI_BLOCK_X if bx <= ox)
+    return cands or ((max(ox, 1),),)
+
+
+def _jacobi_vmem(cand, itemsize, *, shape, sweeps, **facts) -> int:
+    from repro.kernels.jacobi7 import vmem_footprint
+    (bx,) = cand
+    return vmem_footprint(tuple(shape), sweeps, bx, itemsize)
+
+
+def _jacobi_probe_fn(x, *, sweeps: int, block_x: int, interpret: bool):
+    """Module-level probe target for the jacobi7 block_x sweep."""
+    from repro.kernels.jacobi7 import jacobi7_wavefront
+    return jacobi7_wavefront(x, sweeps=sweeps, block_x=block_x,
+                             interpret=interpret)
+
+
+def _jacobi_probe(cand, interpret, *, shape, sweeps, dtype, **facts):
+    (bx,) = cand
+    fn = functools.partial(_jacobi_probe_fn, sweeps=sweeps, block_x=bx,
+                           interpret=interpret)
+    return fn, (jax.ShapeDtypeStruct(tuple(shape), dtype),)
+
+
+_JACOBI_TUNE = TuneSpace(
+    key=jacobi_tune_key,
+    candidates=_jacobi_candidates,
+    vmem=_jacobi_vmem,
+    probe=_jacobi_probe,
+    default=(DEFAULT_BLOCK_X,),
+)
+
+_JACOBI_LAYOUT = "x [X,Y,Z] -> [X-2T,Y-2T,Z-2T] (T valid-mode sweeps)"
+
+
+def _jacobi_heuristic(**_facts) -> str:
+    # the wavefront variant IS the paper's point (T sweeps per VMEM
+    # residency); naive is the per-sweep-round-trip baseline
+    return "wavefront"
+
+
+register_family("jacobi7", heuristic=_jacobi_heuristic,
+                layout=_JACOBI_LAYOUT)
+
+
+@register_impl("jacobi7", "wavefront", tune=_JACOBI_TUNE,
+               layout=_JACOBI_LAYOUT, oracle="repro.kernels.ref.jacobi7_valid")
+def _run_jacobi_wavefront(x, *, sweeps: int = 1, omega: float = 1.0 / 6.0,
+                          block_x: Optional[int] = None,
+                          interpret: Optional[bool] = None):
+    """T sweeps per VMEM residency (~1 HBM round-trip total)."""
+    from repro.kernels.jacobi7 import jacobi7_wavefront
+    if interpret is None:
+        interpret = default_interpret()
+    bx = block_x or best("jacobi7", shape=tuple(x.shape), sweeps=sweeps,
+                         dtype=x.dtype)[0]
+    return jacobi7_wavefront(x, sweeps=sweeps, omega=omega, block_x=bx,
+                             interpret=interpret)
+
+
+@register_impl("jacobi7", "naive", layout=_JACOBI_LAYOUT,
+               oracle="repro.kernels.ref.jacobi7_valid")
+def _run_jacobi_naive(x, *, sweeps: int = 1, omega: float = 1.0 / 6.0,
+                      block_x: Optional[int] = None,
+                      interpret: Optional[bool] = None):
+    """one sweep per call — T sweeps cost T full HBM round-trips."""
+    from repro.kernels.jacobi7 import jacobi7_naive
+    if interpret is None:
+        interpret = default_interpret()
+    bx = block_x or DEFAULT_BLOCK_X
+    for _ in range(sweeps):
+        x = jacobi7_naive(x, omega=omega, block_x=bx, interpret=interpret)
+    return x
+
+
+# ===========================================================================
+# family: ssd_scan (mLSTM / Mamba2 chunked gated linear attention)
+# ===========================================================================
+
+DEFAULT_SSD_CHUNK = 128
+
+_SSD_CHUNKS: Tuple[int, ...] = (32, 64, 128, 256)
+
+
+def ssd_tune_key(*, b: int, s: int, h: int, dk: int, dv: int,
+                 normalize: bool = False, dtype,
+                 backend: Optional[str] = None, **_ignored) -> str:
+    return (f"ssd-b{b}s{s}h{h}dk{dk}dv{dv}"
+            f"-{'norm' if normalize else 'raw'}"
+            f"-{_dtype_name(dtype)}-{_backend(backend)}")
+
+
+def _ssd_candidates(*, s: int, **facts) -> Tuple[Tuple[int], ...]:
+    cands = tuple((c,) for c in _SSD_CHUNKS if c <= s)
+    return cands or ((s,),)
+
+
+def _ssd_vmem(cand, itemsize, *, dk, dv, **facts) -> int:
+    (c,) = cand
+    # q/k [c,dk] + v/y [c,dv] double-buffered; [c,c] score tile + C/n
+    # state live once in f32 scratch
+    io = 2 * (2 * c * dk + 2 * c * dv + 2 * c) * itemsize
+    compute = (c * c + dk * dv + dk) * 4
+    return io + compute
+
+
+def _ssd_probe_fn(q, k, v, lf, li, *, chunk: int, normalize: bool,
+                  interpret: bool):
+    """Module-level probe target for the ssd chunk sweep."""
+    from repro.kernels.ssd_scan import ssd_scan_flat
+    return ssd_scan_flat(q, k, v, lf, li, chunk=chunk, normalize=normalize,
+                         interpret=interpret)
+
+
+def _ssd_probe(cand, interpret, *, b, s, h, dk, dv, dtype,
+               normalize=False, **facts):
+    (c,) = cand
+    fn = functools.partial(_ssd_probe_fn, chunk=c, normalize=normalize,
+                           interpret=interpret)
+    bh = b * h
+    gates = jax.ShapeDtypeStruct((bh, s), dtype)
+    args = (jax.ShapeDtypeStruct((bh, s, dk), dtype),
+            jax.ShapeDtypeStruct((bh, s, dk), dtype),
+            jax.ShapeDtypeStruct((bh, s, dv), dtype), gates, gates)
+    return fn, args
+
+
+_SSD_TUNE = TuneSpace(
+    key=ssd_tune_key,
+    candidates=_ssd_candidates,
+    vmem=_ssd_vmem,
+    probe=_ssd_probe,
+    default=(DEFAULT_SSD_CHUNK,),
+)
+
+_SSD_LAYOUT = ("q,k [B,S,H,dk]; v [B,S,H,dv]; log_f/log_i [B,S,H] (<=0) "
+               "-> (y [B,S,H,dv], (C [B,H,dk,dv], n [B,H,dk]))")
+
+
+def _ssd_heuristic(*, backend: Optional[str] = None, **_facts) -> str:
+    return "pallas_ssd" if _backend(backend) == "tpu" else "jnp_scan"
+
+
+def _ssd_facts(q, k, v, log_f, log_i, **_kw) -> Dict[str, Any]:
+    del k, v, log_f, log_i
+    return {}
+
+
+register_family("ssd_scan", heuristic=_ssd_heuristic, facts=_ssd_facts,
+                layout=_SSD_LAYOUT)
+
+
+def _ssd_chunk(q, v, chunk: Optional[int], normalize: bool) -> int:
+    if chunk is not None:
+        return chunk
+    b, s, h, dk = q.shape
+    return best("ssd_scan", b=b, s=s, h=h, dk=dk, dv=v.shape[-1],
+                normalize=normalize, dtype=q.dtype)[0]
+
+
+@register_impl("ssd_scan", "pallas_ssd", tune=_SSD_TUNE,
+               layout=_SSD_LAYOUT, oracle="repro.kernels.ref.ssd_scan")
+def _run_pallas_ssd(q, k, v, log_f, log_i, *, chunk: Optional[int] = None,
+                    normalize: bool = False,
+                    interpret: Optional[bool] = None):
+    """Pallas SSD blocked scan — state persists in VMEM across chunks."""
+    from repro.kernels import ops
+    return ops.ssd_scan(q, k, v, log_f, log_i,
+                        chunk=_ssd_chunk(q, v, chunk, normalize),
+                        normalize=normalize, interpret=interpret)
+
+
+@register_impl("ssd_scan", "jnp_scan", layout=_SSD_LAYOUT,
+               oracle="repro.kernels.ref.ssd_scan")
+def _run_jnp_ssd(q, k, v, log_f, log_i, *, chunk: Optional[int] = None,
+                 normalize: bool = False, interpret: Optional[bool] = None):
+    """chunk-parallel jnp twin (training-safe, the grad path)."""
+    from repro.models.linear_scan import chunked_linear_attention
+    return chunked_linear_attention(q, k, v, log_f, log_i,
+                                    chunk_size=_ssd_chunk(q, v, chunk,
+                                                          normalize),
+                                    normalize=normalize)

@@ -13,6 +13,10 @@ log-sigmoid gates / dt folding), so every exponent is <= 0 and no running-
 max stabilizer state is needed.
 
 Oracle: kernels/ref.py::ssd_scan (sequential scan).
+
+Registered as the ``ssd_scan`` family in kernels/registry.py
+(``pallas_ssd`` — this kernel via ops.ssd_scan — vs the chunk-parallel
+``jnp_scan`` twin); the chunk length is its tune space.
 """
 
 from __future__ import annotations

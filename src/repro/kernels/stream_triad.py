@@ -10,6 +10,10 @@ Traffic model (the bandwidth-map tool reads this): 3 streams x N x 4 B per
 call — read b, read c, write a; no write-allocate on TPU (stores do not
 read the destination line), so the kernel is the paper's "NT store" case
 by construction.
+
+Registered as the ``stream_triad`` family in kernels/registry.py
+(``pallas_triad`` — this kernel — vs the ``xla_triad`` baseline);
+``block_rows`` is its tune space.
 """
 
 from __future__ import annotations

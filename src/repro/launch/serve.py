@@ -32,10 +32,19 @@ def main(argv=None) -> int:
     ap.add_argument("--attn-impl", default=None,
                     choices=["pallas_flash", "jnp_flash", "full",
                              "paged_decode"],
-                    help="pin the attention impl (default: "
-                         "kernels/dispatch.py picks by backend/shape; "
-                         "paged_decode pins the Pallas paged kernel on "
-                         "the decode side only)")
+                    help="DEPRECATED single-name spelling of --impl (pin "
+                         "the attention impl; paged_decode pins the "
+                         "Pallas paged kernel on the decode side only)")
+    ap.add_argument("--impl", default=None, metavar="FAM=NAME[,...]",
+                    help="pin kernel impls per registry family, e.g. "
+                         "attention=pallas_flash,paged_decode=pallas_paged "
+                         "(default: kernels/registry.py picks by "
+                         "backend/shape)")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune the serving kernel shapes through "
+                         "ProfileSession before starting; winners persist "
+                         "in the artifact cache, so a warm cache makes "
+                         "this free (zero sweeps, zero lowerings)")
     ap.add_argument("--page-size", type=int, default=0,
                     help="paged KV cache: tokens per page (0 = dense "
                          "call-sized caches; decode traffic becomes "
@@ -70,14 +79,42 @@ def main(argv=None) -> int:
         params = state.params
         print("[serve] restored params from checkpoint")
 
+    from repro.kernels import registry
+    impls = registry.parse_impl_spec(args.impl) if args.impl else None
     eng = Engine(lm, params, ServeConfig(
         max_seq=args.max_seq, batch_slots=args.slots,
         temperature=args.temperature,
         admission_chunk=args.admission_chunk,
-        attn_impl=args.attn_impl,
+        attn_impl=args.attn_impl, impls=impls,
         page_size=args.page_size, pool_pages=args.pool_pages))
     if args.attn_impl:
-        print(f"[serve] attention pinned to {args.attn_impl}")
+        print(f"[serve] attention pinned to {args.attn_impl} (legacy "
+              f"spelling; prefer --impl)")
+    if impls:
+        print(f"[serve] kernel impls pinned: {impls}")
+    if args.tune:
+        from repro.core.session import ProfileSession
+        sess = ProfileSession()
+        head_dim = getattr(cfg, "head_dim", None) or \
+            cfg.d_model // cfg.num_heads
+        # tune under the ENGINE's dtype: best() keys on q.dtype at
+        # dispatch, so an fp32 sweep would never serve a bf16 model
+        rec = registry.autotune(
+            "attention", sess, b=1, h=cfg.num_heads, kvh=cfg.num_kv_heads,
+            sq=args.prompt_len, sk=args.prompt_len, dh=head_dim,
+            dtype=lm.dtype)
+        print(f"[serve] attention tuned: blocks={rec.choice} "
+              f"({'swept' if rec.swept else 'warm from tune table'}, "
+              f"{rec.lowerings} lowerings)")
+        if args.page_size:
+            rec = registry.autotune(
+                "paged_decode", sess, b=args.slots, kvh=cfg.num_kv_heads,
+                g=cfg.num_heads // cfg.num_kv_heads, dh=head_dim,
+                ctx=args.max_seq, dtype=lm.dtype)
+            print(f"[serve] paged decode tuned: (ps, ppb)={rec.choice} "
+                  f"({'swept' if rec.swept else 'warm from tune table'}, "
+                  f"{rec.lowerings} lowerings)")
+        print(f"[serve] {sess.stats()}")
     if eng.paged:
         print(f"[serve] paged KV cache: page_size={args.page_size} "
               f"pool_pages={eng.pool_pages} table_width={eng.table_width}")

@@ -177,15 +177,15 @@ def _full_attention_offset(qc, k, v, q_offset, causal: bool = True,
     if softmax_mode == "fused":
         return _fused_attention_offset(qc, k, v, q_offset, causal, kv_len)
     if softmax_mode == "kernel":
-        # dispatch layer decides which kernel family runs; the grad-safe
+        # the registry decides which kernel family runs; the grad-safe
         # flash twin is the default (the Pallas kernel is forward-only),
         # env/context overrides force a specific impl
-        from repro.kernels import dispatch
-        impl = dispatch.select_attention_impl(
-            sq=qc.shape[1], sk=k.shape[1], dh=qc.shape[-1], causal=causal,
-            differentiable=True)
-        return dispatch.run_attention(impl, qc, k, v, q_offset=q_offset,
-                                      causal=causal, kv_len=kv_len)
+        from repro.kernels import registry
+        impl = registry.select(
+            "attention", sq=qc.shape[1], sk=k.shape[1], dh=qc.shape[-1],
+            causal=causal, differentiable=True)
+        return registry.run("attention", qc, k, v, impl=impl,
+                            q_offset=q_offset, causal=causal, kv_len=kv_len)
     sq, sk = qc.shape[1], k.shape[1]
     scores = _gqa_scores(qc, k).astype(jnp.float32)
     if causal:
@@ -447,14 +447,14 @@ def _prefill_qkv_attend(p: Params, x: jnp.ndarray, cfg: AttnConfig,
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
     q, k, v = _project_qkv(p, x, cfg, positions, positions3)
-    from repro.kernels import dispatch
-    impl = dispatch.select_attention_impl(
-        sq=s, sk=s, dh=q.shape[-1], causal=cfg.causal,
+    from repro.kernels import registry
+    impl = registry.select(
+        "attention", sq=s, sk=s, dh=q.shape[-1], causal=cfg.causal,
         flash_min_seq=cfg.chunk_threshold)
     if impl == "pallas_flash":
         # the kernel blocks internally — no outer q-chunking needed
-        out = dispatch.run_attention(impl, q, k, v, q_offset=0,
-                                     causal=cfg.causal, kv_len=lengths)
+        out = registry.run("attention", q, k, v, impl=impl, q_offset=0,
+                           causal=cfg.causal, kv_len=lengths)
     else:
         # jnp family: keep the q-chunked memory guard above the threshold
         # (the flash twin runs per chunk via softmax_mode="kernel"); "full"
@@ -481,11 +481,12 @@ def prefill_into_cache(p: Params, x: jnp.ndarray, cfg: AttnConfig,
     rows record their true lengths — decode continues each row at its own
     position.
 
-    The attention itself goes through the kernel dispatch layer
-    (:mod:`repro.kernels.dispatch`): on TPU the Pallas flash kernel IS the
+    The attention itself goes through the kernel registry
+    (:mod:`repro.kernels.registry`): on TPU the Pallas flash kernel IS the
     prefill path (ragged lengths masked in-kernel via ``kv_valid``); on
-    interpret-mode hosts the jnp family runs, and ``REPRO_ATTN_IMPL`` /
-    ``use_attention_impl`` force a specific impl either way.
+    interpret-mode hosts the jnp family runs, and the override ladder
+    (``use_impl`` / ``REPRO_IMPL`` / legacy ``REPRO_ATTN_IMPL``) forces a
+    specific impl either way.
     """
     b, s, _ = x.shape
     out, k, v = _prefill_qkv_attend(p, x, cfg, positions3, lengths)
@@ -698,17 +699,17 @@ def paged_decode_attention_token(p: Params, x: jnp.ndarray, cfg: AttnConfig,
 
     Attention touches only the pages each row's table lists — bytes/token
     is O(length), not O(max_seq).  Which implementation runs (the Pallas
-    paged kernel or the gather reference) is a dispatch decision
-    (:func:`repro.kernels.dispatch.select_paged_decode_impl`); the new
-    token's K/V are returned for the caller to scatter into its page.
+    paged kernel or the gather reference) is a registry decision
+    (``registry.select("paged_decode")``); the new token's K/V are
+    returned for the caller to scatter into its page.
     """
     b = x.shape[0]
     length = _row_lengths(length, b)
     positions = length[:, None]
     q, k, v = _project_qkv(p, x, cfg, positions, positions3)
-    from repro.kernels import dispatch
-    impl = dispatch.select_paged_decode_impl()
-    out = dispatch.run_paged_decode(impl, q, k_pages, v_pages, page_table,
-                                    length, k, v)
+    from repro.kernels import registry
+    impl = registry.select("paged_decode")
+    out = registry.run("paged_decode", q, k_pages, v_pages, page_table,
+                       length, k, v, impl=impl)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return y, k, v

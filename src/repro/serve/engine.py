@@ -47,7 +47,8 @@ import collections
 import contextlib
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
+                    Tuple)
 
 import jax
 import jax.numpy as jnp
@@ -78,11 +79,16 @@ class ServeConfig:
     seed: int = 0
     admission_chunk: int = 8        # decode steps between admission points
     # attention impl forced for every program this engine traces (None ->
-    # repro.kernels.dispatch picks by backend/shape/$REPRO_ATTN_IMPL);
-    # fixed per-engine because jitted programs are traced once and cached.
-    # "paged_decode" pins the Pallas paged kernel on the decode side and
-    # leaves prefill to the heuristics.
+    # repro.kernels.registry picks by backend/shape/env); fixed per-engine
+    # because jitted programs are traced once and cached.  "paged_decode"
+    # pins the Pallas paged kernel on the decode side and leaves prefill
+    # to the heuristics.  (Legacy single-name spelling; `impls` below is
+    # the general form and wins per family when both are given.)
     attn_impl: Optional[str] = None
+    # per-family kernel pins through the registry's one override ladder,
+    # e.g. {"attention": "pallas_flash", "paged_decode": "pallas_paged"} —
+    # any registered family may appear (stream_triad, ssd_scan, ...)
+    impls: Optional[Mapping[str, str]] = None
     # paged KV cache: tokens per page (0 -> dense call-sized caches).
     # Attention-cache families only; decode traffic becomes O(length).
     page_size: int = 0
@@ -127,11 +133,16 @@ class Engine:
             raise ValueError(
                 f"page_size={cfg.page_size} needs an attention-cache "
                 f"family ({MASKED_FAMILIES}), not {lm.cfg.family!r}")
-        if cfg.attn_impl == "paged_decode" and not self.paged:
+        if cfg.impls:
+            from repro.kernels import registry
+            for fam, name in cfg.impls.items():
+                registry.get_spec(fam, name)        # validate eagerly
+        if (cfg.attn_impl == "paged_decode"
+                or "paged_decode" in (cfg.impls or {})) and not self.paged:
             raise ValueError(
-                "attn_impl='paged_decode' pins the paged decode kernel, "
-                "but this engine is dense (page_size=0) — the pin would "
-                "silently measure the dense path; set page_size too")
+                "a paged_decode kernel pin was requested, but this engine "
+                "is dense (page_size=0) — the pin would silently measure "
+                "the dense path; set page_size too")
         if self.paged:
             from repro.serve import kv_pool
             # table/pool headroom: power-of-two segments may overshoot a
@@ -200,15 +211,21 @@ class Engine:
                 else contextlib.nullcontext())
 
     def _impl_ctx(self):
-        """Kernel-dispatch override while tracing/running engine programs.
+        """Kernel-registry override while tracing/running engine programs.
 
-        Prefill attention routes through repro.kernels.dispatch; pinning
-        ``cfg.attn_impl`` here means every program this engine traces
-        (fused generate, slot prefill, reference loop, instrument probes)
-        resolves to the same implementation.
+        Attention routes through repro.kernels.registry; pinning the
+        config here means every program this engine traces (fused
+        generate, slot prefill, reference loop, instrument probes)
+        resolves to the same implementations.  The legacy single-name
+        ``cfg.attn_impl`` enters first, then the per-family ``cfg.impls``
+        mapping on top (inner wins per family).
         """
-        from repro.kernels import dispatch
-        return dispatch.use_attention_impl(self.cfg.attn_impl)
+        from repro.kernels import dispatch, registry
+        stack = contextlib.ExitStack()
+        stack.enter_context(dispatch.use_attention_impl(self.cfg.attn_impl))
+        if self.cfg.impls:
+            stack.enter_context(registry.use_impl(**dict(self.cfg.impls)))
+        return stack
 
     def _sample(self, logits: jnp.ndarray, rng) -> jnp.ndarray:
         if self.cfg.temperature <= 0.0:

@@ -5,12 +5,32 @@ benches must see the 1 real CPU device; only launch/dryrun.py (a separate
 process) forces 512 placeholder devices.
 """
 
+import os
+
 import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.core.features import default_features
 from repro.models.lm import LM, LMConfig
+
+
+@pytest.fixture(autouse=True, scope="session")
+def _isolated_cache_root(tmp_path_factory):
+    """Point the default artifact-cache root at a per-run tmp dir.
+
+    ``registry.best()`` consults the default root (``$REPRO_CACHE_DIR``)
+    on every in-process tune-table miss, so without isolation a
+    developer's real cache could leak tuned winners into tests that
+    assert defaults."""
+    root = str(tmp_path_factory.mktemp("repro-cache"))
+    old = os.environ.get("REPRO_CACHE_DIR")
+    os.environ["REPRO_CACHE_DIR"] = root
+    yield
+    if old is None:
+        os.environ.pop("REPRO_CACHE_DIR", None)
+    else:
+        os.environ["REPRO_CACHE_DIR"] = old
 
 
 @pytest.fixture(scope="session")
