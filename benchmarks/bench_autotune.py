@@ -23,28 +23,14 @@ import time
 def _suite(smoke: bool):
     """Canonical (family -> shape facts, candidates) cells.
 
-    The smoke candidate sets are subsets of the defaults; candidates are
-    part of the persisted record identity, so cold and warm runs must
-    agree on them (CI passes --smoke to both).
+    The cells now live in ``repro.core.perf_report`` (FAMILY_SUITE /
+    suite_candidates) so the launch CLIs and the perf report measure the
+    same shapes this bench tunes; candidates are part of the persisted
+    record identity, so cold and warm runs must agree on them (CI passes
+    --smoke to both).
     """
-    cells = {
-        "attention": dict(b=2, h=4, kvh=2, sq=128, sk=192, dh=32),
-        "paged_decode": dict(b=4, kvh=2, g=2, dh=32, ctx=128),
-        "stream_triad": dict(n=128 * 512),
-        "jacobi7": dict(shape=(24, 16, 16), sweeps=2),
-        "ssd_scan": dict(b=2, s=128, h=2, dk=16, dv=16, normalize=False),
-    }
-    if smoke:
-        cands = {
-            "attention": ((64, 64), (64, 128), (128, 128)),
-            "paged_decode": ((16, 1), (16, 2), (32, 1)),
-            "stream_triad": ((128,), (256,)),
-            "jacobi7": ((4,), (8,)),
-            "ssd_scan": ((32,), (64,)),
-        }
-    else:
-        cands = {k: None for k in cells}        # each family's full space
-    return cells, cands
+    from repro.core.perf_report import FAMILY_SUITE, suite_candidates
+    return dict(FAMILY_SUITE), suite_candidates(smoke)
 
 
 def run(csv, session=None, smoke=False):

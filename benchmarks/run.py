@@ -15,7 +15,6 @@ compile-artifact cache instead of re-lowering.
 """
 
 import argparse
-import contextlib
 import json
 import sys
 import time
@@ -47,23 +46,13 @@ def main(argv=None) -> int:
                     help=f"benches to run (default: all of {list(BENCHES)})")
     ap.add_argument("--smoke", action="store_true",
                     help="CI scale: tiny sizes, few reps, relaxed asserts")
-    ap.add_argument("--json", default=None, metavar="PATH",
-                    help="write a machine-readable summary here")
-    ap.add_argument("--cache-dir", default=None,
-                    help="compile-artifact cache root (default "
-                         "$REPRO_CACHE_DIR or ~/.cache/repro-perfctr)")
-    ap.add_argument("--no-cache", action="store_true")
-    ap.add_argument("--impl", default=None, metavar="FAM=NAME[,...]",
-                    help="pin kernel impls per registry family for every "
-                         "bench (e.g. attention=pallas_flash)")
-    ap.add_argument("--tune", action="store_true",
-                    help="run the registry autotune suite first so every "
-                         "later bench dispatches tuned kernels")
+    from repro.launch import cli
+    cli.add_impl_args(ap)
+    cli.add_cache_args(ap)
+    cli.add_json_args(ap, what="bench summary")
     args = ap.parse_args(argv)
 
-    from repro.core.session import ProfileSession
-    session = ProfileSession(cache_dir=args.cache_dir,
-                             enabled=not args.no_cache)
+    session = cli.session_from_args(args)
 
     names = args.names or list(BENCHES)
     if args.tune:
@@ -73,9 +62,7 @@ def main(argv=None) -> int:
     unknown = [n for n in names if n not in BENCHES]
     if unknown:
         ap.error(f"unknown bench(es) {unknown}; choose from {list(BENCHES)}")
-    from repro.kernels import registry
-    impl_ctx = (registry.use_impl(args.impl) if args.impl
-                else contextlib.nullcontext())
+    impl_ctx = cli.impl_context(args)
     csv = []
     report = []
     failures = 0

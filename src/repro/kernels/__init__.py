@@ -24,7 +24,9 @@ override ladder (``use_impl`` context > ``REPRO_IMPL`` env > legacy
 ``REPRO_ATTN_IMPL`` > heuristics) and ``registry.autotune/best`` sweep
 tune spaces through ProfileSession with winners persisted in the
 artifact cache (fresh processes warm-start with zero sweeps).
-dispatch.py and autotune.py remain as the legacy attention-only shims.
+legacy.py is the ONE deprecation shim (migration table in its
+docstring); dispatch.py and autotune.py are two-line re-export stubs
+over it.
 """
 
-from repro.kernels import dispatch, ops, ref, registry  # noqa: F401
+from repro.kernels import dispatch, legacy, ops, ref, registry  # noqa: F401

@@ -1,181 +1,2 @@
-"""Legacy autotune surface — thin shims over the registry's one tuner.
-
-PR 3 and PR 4 each carried their own sweep function and process-local
-winner dict (``_TABLE`` / ``_PAGED_TABLE``); those dicts raced under
-``ProfileSession.sweep`` workers and died on restart even though every
-probe was already disk-cached.  :mod:`repro.kernels.registry` now owns
-the one generic autotuner (lock-guarded table, ArtifactCache-persisted
-winners, per-spec tune spaces) for every family; this module keeps the
-historical entry points alive:
-
-* :func:`autotune_flash_blocks` / :func:`best_blocks` — the attention
-  family's (bq, bk) sweep.  The tune key buckets batch to powers of two
-  (:func:`repro.kernels.registry.attention_tune_key`), so the
-  continuous-batching scheduler's varying live mixes hit sweep records
-  instead of silently falling back to ``DEFAULT_BLOCKS``.
-* :func:`autotune_paged_decode` / :func:`best_paged_block` — the
-  paged_decode family's (page_size, pages_per_block) sweep, recorded
-  per page_size and width-agnostic as before.
-
-Both return the historical record types; a warm call (same key, same
-candidates, same toolchain) is served from the persisted tune table with
-**zero sweeps and zero lowerings** — across processes, not just within
-one.
-"""
-
-from __future__ import annotations
-
-import dataclasses
-from typing import Dict, Optional, Sequence, Tuple
-
-import jax.numpy as jnp
-
-from repro.core import hwinfo
-from repro.kernels import registry
-from repro.kernels.registry import (DEFAULT_BLOCKS, DEFAULT_CANDIDATES,
-                                    DEFAULT_PAGED_CANDIDATES,
-                                    DEFAULT_PAGES_PER_BLOCK)
-
-__all__ = ["DEFAULT_BLOCKS", "DEFAULT_CANDIDATES", "TuneRecord",
-           "vmem_footprint", "tune_key", "autotune_flash_blocks",
-           "best_blocks", "record_blocks", "clear_table",
-           "DEFAULT_PAGES_PER_BLOCK", "DEFAULT_PAGED_CANDIDATES",
-           "PagedTuneRecord", "paged_tune_key", "paged_vmem_footprint",
-           "autotune_paged_decode", "best_paged_block"]
-
-
-@dataclasses.dataclass(frozen=True)
-class TuneRecord:
-    """Outcome of one flash-blocks sweep (all candidates + the winner)."""
-
-    key: str
-    bq: int
-    bk: int
-    score_s: float                       # roofline seconds of the winner
-    scores: Dict[Tuple[int, int], float]  # candidate -> score (inf = skipped)
-    lowerings: int                       # real compiles this sweep (0 = warm)
-
-
-@dataclasses.dataclass(frozen=True)
-class PagedTuneRecord:
-    """Outcome of one paged-decode sweep (all candidates + the winner)."""
-
-    key: str
-    page_size: int
-    pages_per_block: int
-    score_s: float
-    scores: Dict[Tuple[int, int], float]  # (ps, ppb) -> score (inf = skipped)
-    lowerings: int
-
-
-def vmem_footprint(bq: int, bk: int, dh: int, itemsize: int = 4) -> int:
-    """Bytes of VMEM the flash kernel needs for one (bq, bk) tile pair."""
-    return registry.attention_vmem(bq, bk, dh, itemsize)
-
-
-def paged_vmem_footprint(ps: int, ppb: int, g: int, dh: int,
-                         itemsize: int = 4) -> int:
-    """VMEM bytes for one paged-decode grid step."""
-    return registry.paged_vmem(ps, ppb, g, dh, itemsize)
-
-
-def tune_key(*, b: int, h: int, kvh: int, sq: int, sk: int, dh: int,
-             dtype, causal: bool, backend: Optional[str] = None) -> str:
-    """The attention tune key (batch bucketed to powers of two)."""
-    return registry.attention_tune_key(b=b, h=h, kvh=kvh, sq=sq, sk=sk,
-                                       dh=dh, dtype=dtype, causal=causal,
-                                       backend=backend)
-
-
-def paged_tune_key(*, b: int, kvh: int, g: int, dh: int, page_size: int,
-                   dtype, backend: Optional[str] = None) -> str:
-    """The paged lookup key (page-table-width-agnostic, as ever)."""
-    return registry.paged_lookup_key(b=b, kvh=kvh, g=g, dh=dh,
-                                     page_size=page_size, dtype=dtype,
-                                     backend=backend)
-
-
-def autotune_flash_blocks(*, b: int, h: int, kvh: int, sq: int, sk: int,
-                          dh: int, session, dtype=jnp.float32,
-                          causal: bool = True,
-                          candidates: Optional[Sequence[Tuple[int, int]]] = None,
-                          chip: Optional[hwinfo.ChipSpec] = None,
-                          backend: Optional[str] = None,
-                          interpret: Optional[bool] = None,
-                          vmem_fraction: float = 0.9) -> TuneRecord:
-    """Sweep (bq, bk) candidates for one attention shape; record the winner.
-
-    Delegates to ``registry.autotune("attention", ...)``: probes go
-    through ``session.measure`` (lower+compile cold, disk lookup warm,
-    never executed) and the whole sweep outcome persists in the artifact
-    cache — a repeat in a FRESH process returns the stored record with
-    zero sweeps and zero lowerings.
-    """
-    rec = registry.autotune("attention", session, candidates=candidates,
-                            chip=chip, backend=backend, interpret=interpret,
-                            vmem_fraction=vmem_fraction, b=b, h=h, kvh=kvh,
-                            sq=sq, sk=sk, dh=dh, dtype=dtype, causal=causal)
-    return TuneRecord(key=rec.key, bq=rec.choice[0], bk=rec.choice[1],
-                      score_s=rec.score_s, scores=dict(rec.scores),
-                      lowerings=rec.lowerings)
-
-
-def best_blocks(*, b: int, h: int, kvh: int, sq: int, sk: int, dh: int,
-                dtype, causal: bool,
-                backend: Optional[str] = None) -> Tuple[int, int]:
-    """The tuned tiling for this shape if a sweep recorded one (in this
-    process or on disk), else the MXU-shaped default.  The key buckets
-    ``b`` to powers of two, so the scheduler's varying live mixes find
-    the sweep's record."""
-    return tuple(registry.best("attention", b=b, h=h, kvh=kvh, sq=sq, sk=sk,
-                               dh=dh, dtype=dtype, causal=causal,
-                               backend=backend))
-
-
-def record_blocks(key: str, bq: int, bk: int) -> None:
-    """Pin a tiling manually (e.g. replayed from a saved bench record)."""
-    registry.record("attention", key, (bq, bk))
-
-
-def clear_table() -> None:
-    """Forget every in-process winner (disk-persisted records survive)."""
-    registry.clear_tune_table()
-
-
-def autotune_paged_decode(*, b: int, kvh: int, g: int, dh: int, ctx: int,
-                          session, dtype=jnp.float32,
-                          candidates: Optional[Sequence[Tuple[int, int]]] = None,
-                          chip: Optional[hwinfo.ChipSpec] = None,
-                          backend: Optional[str] = None,
-                          interpret: Optional[bool] = None,
-                          vmem_fraction: float = 0.9) -> PagedTuneRecord:
-    """Sweep (page_size, pages_per_block) for a decode shape serving up to
-    ``ctx`` tokens of context per row; record winners per page_size.
-
-    Delegates to ``registry.autotune("paged_decode", ...)``; the winner
-    per page_size lands in the table ``dispatch.run_paged_decode``
-    consults (and on disk for the next process), and the overall
-    winner's ``page_size`` is the pool-sizing recommendation for the
-    launcher.
-    """
-    rec = registry.autotune("paged_decode", session, candidates=candidates,
-                            chip=chip, backend=backend, interpret=interpret,
-                            vmem_fraction=vmem_fraction, b=b, kvh=kvh, g=g,
-                            dh=dh, ctx=ctx, dtype=dtype)
-    ps_win, ppb_win = rec.choice
-    win_key = paged_tune_key(b=b, kvh=kvh, g=g, dh=dh, page_size=ps_win,
-                             dtype=dtype, backend=backend)
-    return PagedTuneRecord(key=win_key, page_size=ps_win,
-                           pages_per_block=ppb_win, score_s=rec.score_s,
-                           scores=dict(rec.scores), lowerings=rec.lowerings)
-
-
-def best_paged_block(*, b: int, kvh: int, g: int, dh: int, page_size: int,
-                     dtype, backend: Optional[str] = None) -> int:
-    """The tuned pages_per_block for this shape/page_size if a sweep
-    recorded one (in this process or on disk), else the default —
-    width-agnostic, so every live-mix bucket the scheduler traces finds
-    the same record."""
-    return registry.best("paged_decode", b=b, kvh=kvh, g=g, dh=dh,
-                         page_size=page_size, dtype=dtype,
-                         backend=backend)[1]
+"""Deprecated: see :mod:`repro.kernels.legacy` (migration table there)."""
+from repro.kernels.legacy import *  # noqa: F401,F403

@@ -1,168 +1,2 @@
-"""Legacy attention-dispatch surface — thin shims over kernels/registry.py.
-
-PR 3 introduced this module as the attention ladder and PR 4 grew it a
-second ladder for paged decode; the registry (:mod:`repro.kernels.
-registry`) now owns implementation naming, the override ladder and
-selection for EVERY kernel family.  Everything exported here keeps its
-exact historical semantics so existing call sites and tests migrate
-without behavior change:
-
-* :func:`select_attention_impl` / :func:`run_attention` — the attention
-  family (``pallas_flash`` / ``jnp_flash`` / ``full``), BSHD layout.
-* :func:`select_paged_decode_impl` / :func:`run_paged_decode` — the
-  paged_decode family (``pallas_paged`` / ``jnp_paged``).
-* :func:`use_attention_impl` / ``REPRO_ATTN_IMPL`` — the legacy override
-  names, mapped onto BOTH families (``"paged_decode"`` pins the decode
-  side only and stays transparent to prefill selection; the other names
-  pin prefill and pull decode to the matching paged impl).  New code
-  should prefer ``registry.use_impl(attention=..., paged_decode=...)``
-  or ``REPRO_IMPL="attention=...,paged_decode=..."``.
-
-Selection stays static (backend, shapes, env — never traced values), so
-it happens once at trace time; all impls share one calling convention in
-model layout (BSHD)::
-
-    run_attention(name, q[B,Sq,H,Dh], k[B,Sk,KVH,Dh], v, *, q_offset=0,
-                  causal=True, kv_len=None, ...) -> [B,Sq,H,Dh]
-"""
-
-from __future__ import annotations
-
-import contextlib
-from typing import Optional, Tuple
-
-from repro.kernels import registry
-from repro.kernels.registry import default_interpret  # noqa: F401 (re-export)
-
-__all__ = ["ATTENTION_IMPLS", "OVERRIDE_IMPLS", "PAGED_DECODE_IMPLS",
-           "default_interpret", "select_attention_impl",
-           "use_attention_impl", "attention_impl_override", "run_attention",
-           "select_paged_decode_impl", "run_paged_decode"]
-
-ATTENTION_IMPLS = ("pallas_flash", "jnp_flash", "full")
-
-#: the two concrete paged decode-attention implementations (selected by
-#: :func:`select_paged_decode_impl`; ``paged_decode`` in the override
-#: ladder forces the Pallas kernel)
-PAGED_DECODE_IMPLS = ("pallas_paged", "jnp_paged")
-
-#: names accepted by the LEGACY override ladder (use_attention_impl /
-#: $REPRO_ATTN_IMPL / ServeConfig.attn_impl).  ``paged_decode`` pins the
-#: DECODE side to the Pallas paged kernel and is transparent to prefill
-#: selection (prefill falls through to heuristics).
-OVERRIDE_IMPLS = ATTENTION_IMPLS + ("paged_decode",)
-
-
-@contextlib.contextmanager
-def use_attention_impl(name: Optional[str]):
-    """Force every attention dispatch traced inside the block to ``name``.
-
-    Legacy spelling: the single name expands through
-    ``registry.LEGACY_ATTN_MAP`` onto the attention AND paged_decode
-    families (``"paged_decode"`` touches only the decode side).
-    Thread-local; ``None`` is a no-op so callers can thread an optional
-    config field straight through.
-    """
-    if name is None:
-        with registry.use_impl():
-            yield
-        return
-    mapping = registry.LEGACY_ATTN_MAP.get(name)
-    if mapping is None:
-        raise ValueError(f"unknown attention impl {name!r}; "
-                         f"choose from {OVERRIDE_IMPLS}")
-    with registry.use_impl(**mapping):
-        yield
-
-
-def attention_impl_override() -> Optional[str]:
-    """The active forced impl in LEGACY vocabulary: the attention-family
-    override if one is set, ``"paged_decode"`` when only the decode side
-    is pinned to the Pallas paged kernel, else None."""
-    attn = registry.override_for("attention")
-    if attn is not None:
-        return attn
-    if registry.override_for("paged_decode") == "pallas_paged":
-        return "paged_decode"
-    return None
-
-
-def select_attention_impl(*, sq: int, sk: int, dh: int, causal: bool = True,
-                          backend: Optional[str] = None,
-                          flash_min_seq: Optional[int] = None,
-                          differentiable: bool = False) -> str:
-    """Pick an implementation name from STATIC facts only (trace-time).
-
-    ``flash_min_seq``: on jnp backends, q lengths above it use the online-
-    softmax twin instead of materializing [.,Sq,Sk] (callers pass their
-    ``chunk_threshold``).  ``differentiable=True`` pins the flash custom-VJP
-    twin — the Pallas kernel is forward-only.  An override (env/context)
-    beats every heuristic, including ``differentiable``.
-    """
-    return registry.select("attention", sq=sq, sk=sk, dh=dh, causal=causal,
-                           backend=backend, flash_min_seq=flash_min_seq,
-                           differentiable=differentiable)
-
-
-def run_attention(name: str, q, k, v, *, q_offset=0, causal: bool = True,
-                  kv_len=None, softmax_mode: str = "naive",
-                  chunk_size: int = 512, chunk_threshold: int = 2048,
-                  blocks: Optional[Tuple[int, int]] = None,
-                  interpret: Optional[bool] = None):
-    """Run impl ``name`` in model layout (q [B,Sq,H,Dh], k/v [B,Sk,KVH,Dh]).
-
-    ``kv_len`` (scalar or [B], may be traced) masks right-padded/ragged
-    keys; ``q_offset`` (scalar, may be traced) positions query 0 on the key
-    axis.  ``softmax_mode``/``chunk_*`` parameterize the ``full`` impl;
-    ``blocks``/``interpret`` the ``pallas_flash`` impl.
-    """
-    if name == "paged_decode":
-        raise ValueError("paged_decode is a decode-attention impl; use "
-                         "select_paged_decode_impl/run_paged_decode (it is "
-                         "only a valid *override* name, pinning the decode "
-                         "side while prefill keeps its heuristics)")
-    if name not in ATTENTION_IMPLS:
-        raise ValueError(f"unknown attention impl {name!r}; "
-                         f"choose from {ATTENTION_IMPLS}")
-    return registry.run("attention", q, k, v, impl=name, q_offset=q_offset,
-                        causal=causal, kv_len=kv_len,
-                        softmax_mode=softmax_mode, chunk_size=chunk_size,
-                        chunk_threshold=chunk_threshold, blocks=blocks,
-                        interpret=interpret)
-
-
-# ---------------------------------------------------------------------------
-# paged decode attention (serve/kv_pool.py storage)
-# ---------------------------------------------------------------------------
-
-def select_paged_decode_impl(*, backend: Optional[str] = None) -> str:
-    """Pick the paged decode-attention implementation (trace-time, static).
-
-    The SAME override ladder as prefill — the legacy names map onto the
-    paged family (``paged_decode``/``pallas_flash`` force the Pallas
-    kernel, ``jnp_flash``/``full`` force the gather-based reference) and
-    ``registry.use_impl(paged_decode=...)`` / ``REPRO_IMPL`` pin it
-    directly.  Unforced: TPU compiles the kernel, interpret-mode hosts
-    take the reference — same policy as prefill.
-    """
-    return registry.select("paged_decode", backend=backend)
-
-
-def run_paged_decode(name: str, q, k_pages, v_pages, page_table, length,
-                     k_new, v_new, *, pages_per_block: Optional[int] = None,
-                     interpret: Optional[bool] = None):
-    """Run paged decode impl ``name`` in model layout.
-
-    q [B,1,H,Dh]; k/v_pages [P,ps,KVH,Dh] (one layer's pool slice);
-    page_table [B,NP] int32; length [B] int32 (past tokens — the new
-    token's K/V ride separately in ``k_new``/``v_new`` [B,1,KVH,Dh] and
-    are folded into the softmax, NOT written; the caller scatters them
-    into their page afterwards).  Returns [B,1,H,Dh].
-    """
-    if name not in PAGED_DECODE_IMPLS:
-        raise ValueError(f"unknown paged decode impl {name!r}; "
-                         f"choose from {PAGED_DECODE_IMPLS}")
-    return registry.run("paged_decode", q, k_pages, v_pages, page_table,
-                        length, k_new, v_new, impl=name,
-                        pages_per_block=pages_per_block,
-                        interpret=interpret)
+"""Deprecated: see :mod:`repro.kernels.legacy` (migration table there)."""
+from repro.kernels.legacy import *  # noqa: F401,F403

@@ -41,8 +41,9 @@ Registered families (see :func:`describe` for the live table)::
     jacobi7       wavefront | naive                    tune: (block_x,)
     ssd_scan      pallas_ssd | jnp_scan                tune: (chunk,)
 
-``repro.kernels.dispatch`` and ``repro.kernels.autotune`` remain as thin
-deprecation shims over this module.
+``repro.kernels.legacy`` is the one deprecation shim over this module
+(``dispatch``/``autotune`` re-export it); the migration table lives in
+its docstring.
 """
 
 from __future__ import annotations
@@ -126,6 +127,11 @@ class TuneSpace:
     default: Any
     lookup_key: Optional[Callable[..., str]] = None
     record_keys: Optional[Callable[..., Dict[str, Tuple[Tuple, float]]]] = None
+    #: ``neighbors(**facts)`` yields fact-overrides for nearby tune
+    #: buckets, nearest first; :func:`best` adopts the first neighbor
+    #: with a recorded winner that still fits the VMEM gate for the
+    #: ACTUAL facts (cross-shape warm starts without new sweeps)
+    neighbors: Optional[Callable[..., Sequence[Dict[str, Any]]]] = None
 
     def resolve_default(self, **facts) -> Tuple:
         d = self.default
@@ -356,6 +362,10 @@ class TuneRecord:
     scores: Dict[Tuple, float]          # candidate -> score (inf = gated)
     lowerings: int                      # real compiles (0 = fully warm)
     swept: bool = True                  # False: loaded, not measured
+    #: winner's measured artifact events (FLOPS_TOTAL / BYTES_ACCESSED) —
+    #: what perf_report needs to place the choice on the roofline
+    winner_events: Dict[str, float] = dataclasses.field(default_factory=dict)
+    interpolated: bool = False          # adopted from a neighbor bucket
 
 
 class _TuneTable:
@@ -388,6 +398,12 @@ class _TuneTable:
     def note_miss(self, family: str, key: str) -> None:
         with self._lock:
             self._miss.add((family, key))
+
+    def drop_misses(self) -> None:
+        """Invalidate every negative-cached miss (records stay): the set
+        of disk roots just changed, so a prior miss proves nothing."""
+        with self._lock:
+            self._miss.clear()
 
     def clear(self, family: Optional[str] = None) -> None:
         with self._lock:
@@ -430,7 +446,9 @@ def dump_tune_table() -> Dict[str, Any]:
     return {"records": [
         {"family": r.family, "key": r.key, "choice": list(r.choice),
          "score_s": r.score_s, "lowerings": r.lowerings, "swept": r.swept,
-         "scores": {str(list(c)): s for c, s in sorted(r.scores.items())}}
+         "scores": {str(list(c)): s for c, s in sorted(r.scores.items())},
+         "winner_events": dict(r.winner_events),
+         "interpolated": r.interpolated}
         for r in sorted(_TABLE.snapshot(), key=lambda r: (r.family, r.key))
     ]}
 
@@ -462,7 +480,13 @@ _ROOTS_LOCK = threading.Lock()
 def _note_tune_root(cache: ArtifactCache) -> None:
     if cache.enabled and cache.root != ArtifactCache(None).root:
         with _ROOTS_LOCK:
+            fresh = cache.root not in _EXTRA_TUNE_ROOTS
             _EXTRA_TUNE_ROOTS.add(cache.root)
+        if fresh:
+            # misses negative-cached BEFORE this root became visible are
+            # stale: keys absent from the old roots may be persisted
+            # here (e.g. after clear_tune_table() forgot the root)
+            _TABLE.drop_misses()
 
 
 def _forget_tune_roots() -> None:
@@ -484,14 +508,17 @@ def _tune_caches() -> List[ArtifactCache]:
 
 def _rec_to_entry(rec: TuneRecord, candidates: Sequence[Tuple],
                   vmem_fraction: float,
-                  records: Dict[str, Tuple[Tuple, float]]) -> Dict[str, Any]:
+                  records: Dict[str, Tuple[Tuple, float]],
+                  rec_events: Dict[str, Dict[str, float]]) -> Dict[str, Any]:
     return {
         "kind": "tune-sweep", "family": rec.family, "key": rec.key,
         "choice": list(rec.choice), "score_s": rec.score_s,
         "scores": [[list(c), s] for c, s in rec.scores.items()],
         "candidates": [list(c) for c in candidates],
         "vmem_fraction": vmem_fraction,
-        "records": {k: {"choice": list(c), "score_s": s}
+        "winner_events": dict(rec.winner_events),
+        "records": {k: {"choice": list(c), "score_s": s,
+                        "winner_events": rec_events.get(k, {})}
                     for k, (c, s) in records.items()},
     }
 
@@ -501,7 +528,8 @@ def _entry_to_rec(family: str, key: str, entry: Dict[str, Any]) -> TuneRecord:
         family=family, key=key, choice=tuple(entry["choice"]),
         score_s=float(entry["score_s"]),
         scores={tuple(c): float(s) for c, s in entry["scores"]},
-        lowerings=0, swept=False)
+        lowerings=0, swept=False,
+        winner_events=dict(entry.get("winner_events") or {}))
 
 
 def _roofline_seconds(ev, chip: hwinfo.ChipSpec) -> float:
@@ -568,13 +596,15 @@ def autotune(family: str, session, *, impl: Optional[str] = None,
                 _TABLE.put(TuneRecord(
                     family=family, key=rkey, choice=tuple(sub["choice"]),
                     score_s=float(sub["score_s"]), scores=rec.scores,
-                    lowerings=0, swept=False))
+                    lowerings=0, swept=False,
+                    winner_events=dict(sub.get("winner_events") or {})))
             return rec
 
     itemsize = jnp.dtype(facts["dtype"]).itemsize
     budget = chip.vmem_bytes * vmem_fraction
     lowerings0 = session.lowerings
     scores: Dict[Tuple, float] = {}
+    cand_events: Dict[Tuple, Dict[str, float]] = {}
     for cand in cands:
         if ts.vmem(cand, itemsize, **facts) > budget:
             scores[cand] = float("inf")          # gated before any XLA work
@@ -583,6 +613,10 @@ def autotune(family: str, session, *, impl: Optional[str] = None,
         m = session.measure(fn, *abstract_args,
                             region=f"{family}[{key}]{list(cand)}", chip=chip)
         scores[cand] = _roofline_seconds(m.events, chip)
+        cand_events[cand] = {
+            "FLOPS_TOTAL": float(m.events["FLOPS_TOTAL"]),
+            "BYTES_ACCESSED": float(m.events["BYTES_ACCESSED"]),
+        }
 
     finite = {c: s for c, s in scores.items() if s != float("inf")}
     if not finite:
@@ -591,52 +625,110 @@ def autotune(family: str, session, *, impl: Optional[str] = None,
     choice, score = min(finite.items(), key=lambda kv: (kv[1], kv[0]))
     lowerings = session.lowerings - lowerings0
     rec = TuneRecord(family=family, key=key, choice=choice, score_s=score,
-                     scores=scores, lowerings=lowerings, swept=True)
+                     scores=scores, lowerings=lowerings, swept=True,
+                     winner_events=cand_events.get(choice, {}))
 
     if ts.record_keys is not None:
         records = ts.record_keys(scores, **facts)
     else:
         records = {key: (choice, score)}
+    rec_events = {rkey: cand_events.get(tuple(rchoice), {})
+                  for rkey, (rchoice, _s) in records.items()}
     for rkey, (rchoice, rscore) in records.items():
         _TABLE.put(TuneRecord(family=family, key=rkey,
                               choice=tuple(rchoice), score_s=rscore,
                               scores=scores, lowerings=lowerings,
-                              swept=True))
+                              swept=True,
+                              winner_events=rec_events.get(rkey, {})))
     session.cache.put(digest, _rec_to_entry(rec, cands, vmem_fraction,
-                                            records))
+                                            records, rec_events))
     for rkey, (rchoice, rscore) in records.items():
         session.cache.put(
             _tune_digest("tune-choice", family, rkey),
             {"kind": "tune-choice", "family": family, "key": rkey,
-             "choice": list(rchoice), "score_s": rscore})
+             "choice": list(rchoice), "score_s": rscore,
+             "winner_events": rec_events.get(rkey, {})})
     return rec
+
+
+def _best_from_disk(family: str, key: str) -> Optional[Tuple]:
+    """Resolve one tune key from the persisted caches; loads the record
+    into the table on a hit, returns None (without negative-caching —
+    the caller decides) on a miss."""
+    digest = _tune_digest("tune-choice", family, key)
+    for cache in _tune_caches():
+        entry = cache.get(digest)
+        if entry is not None and "choice" in entry:
+            choice = tuple(entry["choice"])
+            _TABLE.put(TuneRecord(
+                family=family, key=key, choice=choice,
+                score_s=float(entry.get("score_s", "nan")),
+                scores={}, lowerings=0, swept=False,
+                winner_events=dict(entry.get("winner_events") or {})))
+            return choice
+    return None
+
+
+def _best_from_neighbors(family: str, ts: TuneSpace,
+                         keyf: Callable[..., str], exact_key: str,
+                         facts: Dict[str, Any]) -> Optional[Tuple]:
+    """Cross-shape generalization: adopt the nearest tuned bucket's
+    winner instead of falling to the declared default.  A neighbor's
+    choice is only adopted when it passes the spec's VMEM gate for the
+    ACTUAL facts (the same 0.9 budget the tuner uses); the adoption is
+    recorded under the exact key (``interpolated=True``), so dispatch
+    pays the neighbor scan once per process per shape."""
+    itemsize = jnp.dtype(facts["dtype"]).itemsize
+    budget = hwinfo.DEFAULT_CHIP.vmem_bytes * 0.9
+    for delta in ts.neighbors(**facts):
+        nfacts = {**facts, **delta}
+        nkey = keyf(**nfacts)
+        if nkey == exact_key:
+            continue
+        rec = _TABLE.get(family, nkey)
+        if rec is None and not _TABLE.missed(family, nkey):
+            if _best_from_disk(family, nkey) is None:
+                _TABLE.note_miss(family, nkey)
+            else:
+                rec = _TABLE.get(family, nkey)
+        if rec is None:
+            continue
+        choice = rec.choice
+        if ts.vmem(tuple(choice), itemsize, **facts) > budget:
+            continue                     # oversized for the actual shape
+        _TABLE.put(TuneRecord(
+            family=family, key=exact_key, choice=tuple(choice),
+            score_s=rec.score_s, scores={}, lowerings=0, swept=False,
+            winner_events=dict(rec.winner_events), interpolated=True))
+        return tuple(choice)
+    return None
 
 
 def best(family: str, *, impl: Optional[str] = None, **facts) -> Tuple:
     """The tuned choice for this shape: in-process table, else the
     disk-persisted record (a fresh process warm-starts with zero
-    sweeps), else the spec's declared default.  Called by runners at
-    trace time on every dispatch; a disk miss is negative-cached so
-    untuned shapes probe the filesystem once per process."""
+    sweeps), else — for families declaring a ``neighbors`` hook — the
+    nearest tuned bucket's winner (VMEM-gated for the actual shape),
+    else the spec's declared default.  Called by runners at trace time
+    on every dispatch; a disk miss is negative-cached so untuned shapes
+    probe the filesystem once per process."""
     ts = _tuned_spec(family, impl).tune
     facts = dict(facts, backend=_backend(facts.get("backend")))
     facts.setdefault("dtype", jnp.float32)
-    key = (ts.lookup_key or ts.key)(**facts)
+    keyf = ts.lookup_key or ts.key
+    key = keyf(**facts)
     rec = _TABLE.get(family, key)
     if rec is not None:
         return rec.choice
     if not _TABLE.missed(family, key):
-        digest = _tune_digest("tune-choice", family, key)
-        for cache in _tune_caches():
-            entry = cache.get(digest)
-            if entry is not None and "choice" in entry:
-                choice = tuple(entry["choice"])
-                _TABLE.put(TuneRecord(
-                    family=family, key=key, choice=choice,
-                    score_s=float(entry.get("score_s", "nan")),
-                    scores={}, lowerings=0, swept=False))
-                return choice
+        choice = _best_from_disk(family, key)
+        if choice is not None:
+            return choice
         _TABLE.note_miss(family, key)
+    if ts.neighbors is not None:
+        choice = _best_from_neighbors(family, ts, keyf, key, facts)
+        if choice is not None:
+            return choice
     return ts.resolve_default(**facts)
 
 
@@ -711,12 +803,33 @@ def _attention_probe(cand, interpret, *, b, h, kvh, sq, sk, dh, dtype,
     return fn, args
 
 
+def _attention_neighbors(*, b: int, sq: int, sk: int, **_facts
+                         ) -> List[Dict[str, Any]]:
+    """Nearby tuned buckets, nearest first: the batch bucket one/two
+    pow2 steps away (same sequence — a winning (bq, bk) tiling is a
+    per-row property), then the whole sequence scaled by pow2 (sq and
+    sk together, so a smoke-swept 128/192 cell warm-starts the 256/384
+    serving shape and vice versa)."""
+    out: List[Dict[str, Any]] = []
+    bb = _pow2_up(b)
+    for f in (2, 4):
+        if bb // f >= 1:
+            out.append({"b": bb // f})
+        out.append({"b": bb * f})
+    for f in (2, 4):
+        if sq // f >= 1 and sk // f >= 1:
+            out.append({"sq": sq // f, "sk": sk // f})
+        out.append({"sq": sq * f, "sk": sk * f})
+    return out
+
+
 _ATTENTION_TUNE = TuneSpace(
     key=attention_tune_key,
     candidates=lambda **f: DEFAULT_CANDIDATES,
     vmem=_attention_vmem,
     probe=_attention_probe,
     default=DEFAULT_BLOCKS,
+    neighbors=_attention_neighbors,
 )
 
 _ATTENTION_LAYOUT = ("q [B,Sq,H,Dh]; k/v [B,Sk,KVH,Dh] -> [B,Sq,H,Dh]; "
@@ -1161,12 +1274,30 @@ def _ssd_probe(cand, interpret, *, b, s, h, dk, dv, dtype,
     return fn, args
 
 
+def _ssd_neighbors(*, b: int, s: int, **_facts) -> List[Dict[str, Any]]:
+    """Nearby tuned buckets for the chunk sweep: batch first (chunk is a
+    per-row property), then sequence length by pow2 steps (the chunked
+    scan clamps chunk to min(chunk, s), so an adopted larger chunk
+    stays valid for shorter sequences)."""
+    out: List[Dict[str, Any]] = []
+    for f in (2, 4):
+        if b // f >= 1:
+            out.append({"b": b // f})
+        out.append({"b": b * f})
+    for f in (2, 4):
+        if s // f >= 1:
+            out.append({"s": s // f})
+        out.append({"s": s * f})
+    return out
+
+
 _SSD_TUNE = TuneSpace(
     key=ssd_tune_key,
     candidates=_ssd_candidates,
     vmem=_ssd_vmem,
     probe=_ssd_probe,
     default=(DEFAULT_SSD_CHUNK,),
+    neighbors=_ssd_neighbors,
 )
 
 _SSD_LAYOUT = ("q,k [B,S,H,dk]; v [B,S,H,dv]; log_f/log_i [B,S,H] (<=0) "
@@ -1211,8 +1342,8 @@ def _run_pallas_ssd(q, k, v, log_f, log_i, *, chunk: Optional[int] = None,
 def _run_jnp_ssd(q, k, v, log_f, log_i, *, chunk: Optional[int] = None,
                  normalize: bool = False, interpret: Optional[bool] = None):
     """chunk-parallel jnp twin (training-safe, the grad path)."""
-    from repro.models.linear_scan import chunked_linear_attention
-    return chunked_linear_attention(q, k, v, log_f, log_i,
-                                    chunk_size=_ssd_chunk(q, v, chunk,
-                                                          normalize),
-                                    normalize=normalize)
+    from repro.models.linear_scan import _chunked_linear_attention
+    return _chunked_linear_attention(q, k, v, log_f, log_i,
+                                     chunk_size=_ssd_chunk(q, v, chunk,
+                                                           normalize),
+                                     normalize=normalize)

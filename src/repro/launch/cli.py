@@ -1,0 +1,136 @@
+"""Shared CLI surface for every launcher and benchmark harness.
+
+Before PR 6 the five entry points (``launch/serve.py``,
+``launch/roofline_report.py``, ``launch/perfctr.py``, ``launch/dryrun.py``
+and ``benchmarks/run.py``) each hand-rolled a subset of the same flags
+with divergent spellings; these helpers make the surface uniform:
+
+* :func:`add_impl_args` — ``--impl FAM=NAME[,...]`` (the registry
+  grammar), ``--tune`` (run the canonical family autotune suite first;
+  warm caches make it free), and the deprecated ``--attn-impl`` single
+  name, which every tool now warns about through ONE shared path.
+* :func:`add_cache_args` — ``--cache-dir`` / ``--no-cache`` over the
+  compile-artifact cache.
+* :func:`add_json_args` — ``--json PATH`` machine-readable summary.
+
+Consume with :func:`impl_context` (a ``use_impl`` context covering both
+``--impl`` and the legacy ``--attn-impl``), :func:`session_from_args`
+(a :class:`~repro.core.session.ProfileSession` honouring the cache
+flags) and :func:`run_tune_suite` (the ``--tune`` body).
+"""
+
+from __future__ import annotations
+
+import argparse
+import contextlib
+import warnings
+from typing import Dict, Optional
+
+
+def add_impl_args(ap: argparse.ArgumentParser, *, tune: bool = True,
+                  legacy_attn: bool = False) -> None:
+    """``--impl`` (+ ``--tune``, + deprecated ``--attn-impl``)."""
+    ap.add_argument("--impl", default=None, metavar="FAM=NAME[,...]",
+                    help="pin kernel impls per registry family, e.g. "
+                         "attention=pallas_flash,paged_decode=pallas_paged "
+                         "(default: kernels/registry.py picks by "
+                         "backend/shape)")
+    if tune:
+        ap.add_argument("--tune", action="store_true",
+                        help="autotune the canonical kernel-family suite "
+                             "through ProfileSession first; winners "
+                             "persist in the artifact cache, so a warm "
+                             "cache makes this free (zero sweeps, zero "
+                             "lowerings)")
+    if legacy_attn:
+        ap.add_argument("--attn-impl", default=None,
+                        choices=["pallas_flash", "jnp_flash", "full",
+                                 "paged_decode"],
+                        help="DEPRECATED single-name spelling of --impl "
+                             "(pins the attention impl; paged_decode pins "
+                             "the Pallas paged kernel on the decode side "
+                             "only)")
+
+
+def add_cache_args(ap: argparse.ArgumentParser) -> None:
+    """``--cache-dir`` / ``--no-cache`` (compile-artifact cache)."""
+    ap.add_argument("--cache-dir", default=None,
+                    help="compile-artifact cache root (default "
+                         "$REPRO_CACHE_DIR or ~/.cache/repro-perfctr)")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="always lower+compile, never read/write the cache")
+
+
+def add_json_args(ap: argparse.ArgumentParser,
+                  what: str = "summary") -> None:
+    """``--json PATH`` (machine-readable artifact)."""
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help=f"write a machine-readable {what} here")
+
+
+def warn_legacy_attn_impl(name: Optional[str]) -> None:
+    """The ONE shared deprecation warning for ``--attn-impl``."""
+    if name is None:
+        return
+    warnings.warn(
+        f"--attn-impl {name} is deprecated; spell it through --impl "
+        f"(e.g. --impl attention={name}) — the single name expands via "
+        f"registry.LEGACY_ATTN_MAP onto the attention AND paged_decode "
+        f"families", DeprecationWarning, stacklevel=2)
+    print(f"[cli] --attn-impl {name} is deprecated; prefer --impl "
+          f"(registry grammar)")
+
+
+def resolve_impls(args: argparse.Namespace) -> Dict[str, str]:
+    """The per-family pin mapping from ``--impl`` merged over the legacy
+    ``--attn-impl`` expansion (``--impl`` wins per family)."""
+    from repro.kernels import registry
+    out: Dict[str, str] = {}
+    legacy = getattr(args, "attn_impl", None)
+    if legacy is not None:
+        warn_legacy_attn_impl(legacy)
+        out.update(registry.LEGACY_ATTN_MAP[legacy])
+    if getattr(args, "impl", None):
+        out.update(registry.parse_impl_spec(args.impl))
+    return out
+
+
+def impl_context(args: argparse.Namespace):
+    """A context manager pinning the requested impls for everything
+    traced inside (no-op when neither flag was passed)."""
+    from repro.kernels import registry
+    impls = resolve_impls(args)
+    return registry.use_impl(**impls) if impls else contextlib.nullcontext()
+
+
+def session_from_args(args: argparse.Namespace):
+    """A ProfileSession honouring ``--cache-dir`` / ``--no-cache``."""
+    from repro.core.session import ProfileSession
+    return ProfileSession(cache_dir=getattr(args, "cache_dir", None),
+                          enabled=not getattr(args, "no_cache", False))
+
+
+def run_tune_suite(session=None, *, smoke: bool = True,
+                   verbose: bool = True) -> Dict[str, Dict]:
+    """The ``--tune`` body: autotune the canonical suite cell of every
+    tunable family (see ``repro.core.perf_report.FAMILY_SUITE``) through
+    one session.  Warm caches resolve everything from the persisted tune
+    table — zero sweeps, zero lowerings."""
+    from repro.core.perf_report import FAMILY_SUITE, suite_candidates
+    from repro.kernels import registry
+    if session is None:
+        from repro.core.session import ProfileSession
+        session = ProfileSession()
+    out: Dict[str, Dict] = {}
+    cands = suite_candidates(smoke)
+    for family, facts in FAMILY_SUITE.items():
+        rec = registry.autotune(family, session, candidates=cands[family],
+                                **facts)
+        out[family] = {"key": rec.key, "choice": list(rec.choice),
+                       "score_us": rec.score_s * 1e6, "swept": rec.swept,
+                       "lowerings": rec.lowerings}
+        if verbose:
+            src = "swept" if rec.swept else "tune table (warm)"
+            print(f"[tune] {family:>13}: choice={tuple(rec.choice)} "
+                  f"[{src}, {rec.lowerings} lowerings]")
+    return out

@@ -37,6 +37,7 @@ from repro.core import hwinfo
 from repro.core.events import extract_events, normalize_cost
 from repro.core.features import FeatureSet, default_features
 from repro.core.roofline import analyze, model_flops
+from repro.launch import cli
 from repro.launch.mesh import make_production_mesh, mesh_axes
 from repro.models.layers import DEFAULT_RULES, spec_tree_to_pspecs
 from repro.models.lm import LM
@@ -369,11 +370,9 @@ def main(argv=None) -> int:
     ap.add_argument("--all", action="store_true",
                     help="every (arch x shape) cell")
     ap.add_argument("--out", default="experiments/dryrun")
-    ap.add_argument("--cache-dir", default=None,
-                    help="compile-artifact cache root (default "
-                         "$REPRO_CACHE_DIR or ~/.cache/repro-perfctr)")
-    ap.add_argument("--no-cache", action="store_true",
-                    help="always lower+compile, never read/write the cache")
+    cli.add_impl_args(ap)
+    cli.add_cache_args(ap)
+    cli.add_json_args(ap, what="sweep summary")
     ap.add_argument("--parallel", type=int, default=1,
                     help="fan cells out across N sweep workers")
     # ---- §Perf hillclimb knobs (tagged records, baselines untouched) ----
@@ -424,33 +423,45 @@ def main(argv=None) -> int:
     if not (args.all or args.arch or args.shape):
         ap.error("pass --all or --arch/--shape")
 
-    from repro.core.session import ProfileSession
-    session = ProfileSession(cache_dir=args.cache_dir,
-                             enabled=not args.no_cache)
+    session = cli.session_from_args(args)
+    if args.tune:
+        cli.run_tune_suite(session)
 
     failures = 0
-    for multi in meshes:
-        if args.parallel > 1:
-            def cell_fn(arch, shape, _multi=multi):
-                return run_cell(arch, shape, _multi, pin_strategy=args.pin,
-                                out_dir=args.out,
-                                policy_override=policy_for(arch),
-                                config_overrides=cfg_over or None,
-                                tag=args.tag, session=session)
-            recs = session.sweep(archs, shapes, parallel=args.parallel,
-                                 multi_pod=multi, cell_fn=cell_fn)
-            failures += sum(r["status"] == "FAILED" for r in recs)
-            continue
-        for arch in archs:
-            for shape in shapes:
-                rec = run_cell(arch, shape, multi, pin_strategy=args.pin,
-                               out_dir=args.out,
-                               policy_override=policy_for(arch),
-                               config_overrides=cfg_over or None,
-                               tag=args.tag, session=session)
-                if rec["status"] == "FAILED":
-                    failures += 1
+    cells = 0
+    with cli.impl_context(args):
+        for multi in meshes:
+            if args.parallel > 1:
+                def cell_fn(arch, shape, _multi=multi):
+                    return run_cell(arch, shape, _multi,
+                                    pin_strategy=args.pin,
+                                    out_dir=args.out,
+                                    policy_override=policy_for(arch),
+                                    config_overrides=cfg_over or None,
+                                    tag=args.tag, session=session)
+                recs = session.sweep(archs, shapes, parallel=args.parallel,
+                                     multi_pod=multi, cell_fn=cell_fn)
+                failures += sum(r["status"] == "FAILED" for r in recs)
+                cells += len(recs)
+                continue
+            for arch in archs:
+                for shape in shapes:
+                    rec = run_cell(arch, shape, multi,
+                                   pin_strategy=args.pin,
+                                   out_dir=args.out,
+                                   policy_override=policy_for(arch),
+                                   config_overrides=cfg_over or None,
+                                   tag=args.tag, session=session)
+                    cells += 1
+                    if rec["status"] == "FAILED":
+                        failures += 1
     print(f"[dryrun] done, {failures} failures   ({session.stats()})")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"cells": cells, "failures": failures,
+                       "out": args.out, "tag": args.tag,
+                       "session": session.stats()}, f, indent=2)
+        print(f"[dryrun] wrote {args.json}")
     return 1 if failures else 0
 
 

@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import argparse
 
+from repro.launch import cli
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -25,11 +27,9 @@ def main(argv=None) -> int:
     ap.add_argument("--execute", action="store_true",
                     help="multiplex mode: run the SMOKE config locally and "
                          "attach wall-clock to the derived metrics")
-    ap.add_argument("--cache-dir", default=None,
-                    help="compile-artifact cache root (default "
-                         "$REPRO_CACHE_DIR or ~/.cache/repro-perfctr)")
-    ap.add_argument("--no-cache", action="store_true",
-                    help="always lower+compile, never read/write the cache")
+    cli.add_impl_args(ap)
+    cli.add_cache_args(ap)
+    cli.add_json_args(ap, what="per-group event summary")
     args = ap.parse_args(argv)
 
     from repro.core.groups import list_groups
@@ -46,11 +46,12 @@ def main(argv=None) -> int:
     from repro.core.groups import get_group
     from repro.core.perfctr import Measurement
 
-    from repro.core.session import ProfileSession
-    session = ProfileSession(cache_dir=args.cache_dir,
-                             enabled=not args.no_cache)
-    rec = dryrun.run_cell(args.arch, args.shape, args.multi_pod,
-                          out_dir=None, verbose=False, session=session)
+    session = cli.session_from_args(args)
+    if args.tune:
+        cli.run_tune_suite(session)
+    with cli.impl_context(args):
+        rec = dryrun.run_cell(args.arch, args.shape, args.multi_pod,
+                              out_dir=None, verbose=False, session=session)
     if rec["status"] != "ok":
         print(f"cell unavailable: {rec.get('reason') or rec.get('error')}")
         return 1
@@ -93,6 +94,13 @@ def main(argv=None) -> int:
 
     print(m.report(args.groups.split(",")))
     print(f"[{session.stats()}]")
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump({"cell": rec["cell"], "groups": args.groups.split(","),
+                       "events": rec["events"], "wall_s": wall},
+                      f, indent=2, default=float)
+        print(f"[perfctr] wrote {args.json}")
     return 0
 
 

@@ -19,6 +19,8 @@ import json
 import os
 from typing import Dict, List
 
+from repro.launch import cli
+
 
 def _advice(rec: Dict) -> str:
     """One sentence: what would move the dominant term down."""
@@ -121,23 +123,25 @@ def main(argv=None) -> int:
     ap.add_argument("--shapes", default=None,
                     help="comma list for --sweep (default: every shape)")
     ap.add_argument("--parallel", type=int, default=4)
-    ap.add_argument("--cache-dir", default=None)
-    ap.add_argument("--no-cache", action="store_true")
+    cli.add_impl_args(ap)
+    cli.add_cache_args(ap)
+    cli.add_json_args(ap, what="roofline-table summary")
     args = ap.parse_args(argv)
 
     if args.sweep:
         # dryrun must be imported before jax init (it sets XLA_FLAGS)
         from repro.launch import dryrun  # noqa: F401
         from repro.configs import SHAPES, list_archs
-        from repro.core.session import ProfileSession
-        session = ProfileSession(cache_dir=args.cache_dir,
-                                 enabled=not args.no_cache)
+        session = cli.session_from_args(args)
+        if args.tune:
+            cli.run_tune_suite(session)
         archs = (args.archs.split(",") if args.archs
                  else [s.arch_id for s in list_archs()])
         shapes = args.shapes.split(",") if args.shapes else list(SHAPES)
-        session.sweep(archs, shapes, parallel=args.parallel,
-                      multi_pod=args.mesh == "2x16x16",
-                      out_dir=args.records)
+        with cli.impl_context(args):
+            session.sweep(archs, shapes, parallel=args.parallel,
+                          multi_pod=args.mesh == "2x16x16",
+                          out_dir=args.records)
         print(f"[sweep] {session.stats()}")
 
     records = load_records(args.records, args.mesh)
@@ -146,8 +150,17 @@ def main(argv=None) -> int:
         return 1
     print(render(records, markdown=args.markdown))
     print()
-    for k, v in pick_hillclimb(records).items():
+    hill = pick_hillclimb(records)
+    for k, v in hill.items():
         print(f"{k}: {v}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"mesh": args.mesh,
+                       "cells": [{"cell": r["cell"], "kind": r["kind"],
+                                  "bound": r["roofline"]["bound"]}
+                                 for r in records],
+                       "hillclimb": hill}, f, indent=2, default=float)
+        print(f"[roofline] wrote {args.json}")
     return 0
 
 

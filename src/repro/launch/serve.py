@@ -16,6 +16,8 @@ from __future__ import annotations
 import argparse
 import time
 
+from repro.launch import cli
+
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -29,22 +31,9 @@ def main(argv=None) -> int:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--admission-chunk", type=int, default=8,
                     help="decode steps between admission points")
-    ap.add_argument("--attn-impl", default=None,
-                    choices=["pallas_flash", "jnp_flash", "full",
-                             "paged_decode"],
-                    help="DEPRECATED single-name spelling of --impl (pin "
-                         "the attention impl; paged_decode pins the "
-                         "Pallas paged kernel on the decode side only)")
-    ap.add_argument("--impl", default=None, metavar="FAM=NAME[,...]",
-                    help="pin kernel impls per registry family, e.g. "
-                         "attention=pallas_flash,paged_decode=pallas_paged "
-                         "(default: kernels/registry.py picks by "
-                         "backend/shape)")
-    ap.add_argument("--tune", action="store_true",
-                    help="autotune the serving kernel shapes through "
-                         "ProfileSession before starting; winners persist "
-                         "in the artifact cache, so a warm cache makes "
-                         "this free (zero sweeps, zero lowerings)")
+    cli.add_impl_args(ap, legacy_attn=True)
+    cli.add_cache_args(ap)
+    cli.add_json_args(ap, what="serve summary")
     ap.add_argument("--page-size", type=int, default=0,
                     help="paged KV cache: tokens per page (0 = dense "
                          "call-sized caches; decode traffic becomes "
@@ -81,20 +70,20 @@ def main(argv=None) -> int:
 
     from repro.kernels import registry
     impls = registry.parse_impl_spec(args.impl) if args.impl else None
+    # --attn-impl stays the ServeConfig spelling (the engine validates
+    # and expands it itself); cli.resolve_impls is for the non-serve
+    # tools.  The warning path is the shared one.
+    cli.warn_legacy_attn_impl(args.attn_impl)
     eng = Engine(lm, params, ServeConfig(
         max_seq=args.max_seq, batch_slots=args.slots,
         temperature=args.temperature,
         admission_chunk=args.admission_chunk,
         attn_impl=args.attn_impl, impls=impls,
         page_size=args.page_size, pool_pages=args.pool_pages))
-    if args.attn_impl:
-        print(f"[serve] attention pinned to {args.attn_impl} (legacy "
-              f"spelling; prefer --impl)")
     if impls:
         print(f"[serve] kernel impls pinned: {impls}")
     if args.tune:
-        from repro.core.session import ProfileSession
-        sess = ProfileSession()
+        sess = cli.session_from_args(args)
         head_dim = getattr(cfg, "head_dim", None) or \
             cfg.d_model // cfg.num_heads
         # tune under the ENGINE's dtype: best() keys on q.dtype at
@@ -121,8 +110,7 @@ def main(argv=None) -> int:
     ctr = None
     if args.instrument:
         from repro.core.perfctr import PerfCtr
-        from repro.core.session import ProfileSession
-        ctr = PerfCtr(session=ProfileSession())
+        ctr = PerfCtr(session=cli.session_from_args(args))
         eng.instrument(ctr, prompt_len=args.prompt_len)
         print("[serve] instrumented serve.prefill/serve.decode regions")
 
@@ -148,6 +136,18 @@ def main(argv=None) -> int:
     if ctr is not None:
         print()
         print(ctr.report())
+    if args.json:
+        import json
+        with open(args.json, "w") as fh:
+            json.dump({
+                "requests": len(done), "new_tokens": total_new,
+                "tok_s": total_new / dt, "host_syncs": eng.host_syncs,
+                "mean_ttft_ms": (float(np.mean(ttfts)) * 1e3
+                                 if ttfts else None),
+                "segments": sched.metrics["segments"],
+                "admissions": sched.metrics["admissions"],
+            }, fh, indent=2, sort_keys=True)
+        print(f"[serve] wrote {args.json}")
     return 0
 
 

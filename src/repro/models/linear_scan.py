@@ -73,7 +73,31 @@ def chunked_linear_attention(q, k, v, log_f, log_i, *, chunk_size: int = 128,
 
     q,k: [B,S,H,dk]; v: [B,S,H,dv]; log_f, log_i: [B,S,H] (both <= 0).
     Returns (y [B,S,H,dv], final_state (C, n)).
+
+    This is the ``ssd_scan`` registry entry point for the model stack:
+    unless the caller pins a kernel (``use_kernel_fn``), carries state
+    across segments (``initial_state``) or asks for a non-default
+    ``eps``, the call routes through ``registry.run("ssd_scan", ...)``
+    so the mLSTM/Mamba2 blocks ride the same override ladder, tuned
+    chunk sizes and perf report as every other kernel family.  The
+    registry's ``jnp_scan`` impl calls :func:`_chunked_linear_attention`
+    directly (no recursion), and on non-TPU backends the heuristic picks
+    it, so routing is numerically a no-op there.
     """
+    if use_kernel_fn is None and initial_state is None and eps == 1e-6:
+        from repro.kernels import registry
+        return registry.run("ssd_scan", q, k, v, log_f, log_i,
+                            chunk=chunk_size, normalize=normalize)
+    return _chunked_linear_attention(
+        q, k, v, log_f, log_i, chunk_size=chunk_size, normalize=normalize,
+        eps=eps, initial_state=initial_state, use_kernel_fn=use_kernel_fn)
+
+
+def _chunked_linear_attention(q, k, v, log_f, log_i, *,
+                              chunk_size: int = 128,
+                              normalize: bool = False, eps: float = 1e-6,
+                              initial_state=None, use_kernel_fn=None):
+    """The chunk-parallel implementation body (registry ``jnp_scan``)."""
     if use_kernel_fn is not None:
         return use_kernel_fn(q, k, v, log_f, log_i)
     b, s, h, dk = q.shape

@@ -7,7 +7,10 @@ The SSD recurrence per head (state N=64, head dim P):
 
 is gated linear attention with q=C, k=B, v=dt*x, log_f=-dt*exp(A_log),
 log_i=0 — evaluated with the shared chunkwise primitive
-(:mod:`repro.models.linear_scan`, also the ssd_scan Pallas kernel contract).
+(:mod:`repro.models.linear_scan`, also the ssd_scan Pallas kernel
+contract).  The prefill call site dispatches through the ``ssd_scan``
+registry family (``registry.run``), so ``use_impl``/``REPRO_IMPL`` pins
+and the perf report cover Mamba2 exactly like the attention stack.
 
 Block layout follows Mamba2: in_proj -> (z, x, B, C, dt); short causal
 conv1d over (x,B,C); SSD; gated RMSNorm(y * silu(z)); out_proj.

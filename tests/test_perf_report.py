@@ -1,0 +1,283 @@
+"""The perf-report layer (core/perf_report.py + launch/perf_report.py):
+artifact ingest, roofline rows, the baseline gate, and the measured
+``registry.run`` join.
+
+PR 6 acceptance surface: fixture BENCH/TUNE artifacts render to rows; a
+degraded record trips the CI gate (non-zero exit); a tune-winner flip
+trips it too UNLESS the toolchain fingerprint changed; empty/partial
+artifacts are tolerated; and the canonical suite cells stay in lockstep
+with benchmarks/bench_autotune (they are persisted-record identity).
+"""
+
+import json
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import perf_report as pr
+from repro.kernels import registry
+from repro.launch import perf_report as cli_pr
+
+# ---------------------------------------------------------------------------
+# fixtures
+# ---------------------------------------------------------------------------
+
+RECORDS = [
+    {"family": "stream_triad", "key": "triad-n65536-float32-cpu",
+     "choice": [256], "score_s": 9e-6, "swept": True, "interpolated": False,
+     "winner_events": {"FLOPS_TOTAL": 131072.0, "BYTES_ACCESSED": 786432.0}},
+    {"family": "attention", "key": "b2h4kvh2sq128sk192dh32-float32-causal-cpu",
+     "choice": [128, 128], "score_s": 5e-5, "swept": False,
+     "interpolated": True,
+     "winner_events": {"FLOPS_TOTAL": 2.5e7, "BYTES_ACCESSED": 2.9e7}},
+    {"family": "jacobi7", "key": "jacobi7-x24y16z16t2-float32-cpu",
+     "choice": [4], "score_s": 2e-7, "swept": False, "interpolated": False,
+     "winner_events": {}},                       # no events: AI row blank
+]
+
+TOOLCHAIN = {"jax": "0.4.x", "backend": "cpu", "xla_flags": "",
+             "repro_src": "aaaa1111"}
+
+
+def _report(records=RECORDS, walls=None, toolchain=TOOLCHAIN):
+    return pr.build_report(records, walls=walls, toolchain=dict(toolchain))
+
+
+# ---------------------------------------------------------------------------
+# suite parity (persisted-record identity)
+# ---------------------------------------------------------------------------
+
+def test_family_suite_matches_bench_autotune():
+    from benchmarks.bench_autotune import _suite
+    cells, smoke_cands = _suite(smoke=True)
+    assert cells == pr.FAMILY_SUITE
+    assert smoke_cands == pr.suite_candidates(True)
+    _, full = _suite(smoke=False)
+    assert full == {k: None for k in pr.FAMILY_SUITE}
+
+
+def test_suite_covers_every_registered_family():
+    assert set(pr.FAMILY_SUITE) == {"attention", "paged_decode",
+                                    "stream_triad", "jacobi7", "ssd_scan"}
+
+
+# ---------------------------------------------------------------------------
+# artifact ingest: tolerant of empty / partial / corrupt
+# ---------------------------------------------------------------------------
+
+def test_load_artifacts_tolerates_empty_and_corrupt(tmp_path):
+    assert pr.load_artifacts(str(tmp_path)) == {}
+    (tmp_path / "BENCH_x.json").write_text("{not json")
+    (tmp_path / "TUNE_TABLE.json").write_text(
+        json.dumps({"records": RECORDS}))
+    arts = pr.load_artifacts(str(tmp_path))
+    assert "BENCH_x" not in arts                 # corrupt: skipped
+    assert pr.tune_records(arts) == RECORDS
+
+
+def test_tune_records_falls_back_to_bench_autotune_table(tmp_path):
+    (tmp_path / "BENCH_autotune.json").write_text(
+        json.dumps({"table": {"records": RECORDS}, "sweeps": 5}))
+    arts = pr.load_artifacts(str(tmp_path))
+    assert pr.tune_records(arts) == RECORDS
+    assert pr.summarize_benches(arts)["autotune"] == {"sweeps": 5}
+    # no artifacts at all -> no records, report still renders
+    rep = pr.build_report([], toolchain=TOOLCHAIN)
+    assert rep["rows"] == []
+    assert "perf report: 0 rows" in pr.render_table(rep)
+
+
+# ---------------------------------------------------------------------------
+# report rows
+# ---------------------------------------------------------------------------
+
+def test_build_report_rows_and_roofline_placement():
+    walls = {"stream_triad": {"key": "triad-n65536-float32-cpu",
+                              "impl": "xla_triad", "wall_s": 4.5e-4}}
+    rep = _report(walls=walls)
+    rows = {r["family"]: r for r in rep["rows"]}
+    tri = rows["stream_triad"]
+    assert tri["ai"] == pytest.approx(131072.0 / 786432.0)
+    assert tri["bound"] == "memory"              # AI far below the ridge
+    assert tri["provenance"] == "swept"
+    assert tri["impl"] == "xla_triad"
+    assert tri["achieved_frac"] == pytest.approx(9e-6 / 4.5e-4)
+    att = rows["attention"]
+    assert att["provenance"] == "interpolated"
+    assert "achieved_frac" not in att            # no wall joined
+    jac = rows["jacobi7"]
+    assert jac["ai"] is None and jac["bound"] is None
+    assert jac["provenance"] == "warm"
+    # renderers swallow every row shape
+    assert "interpolated" in pr.render_table(rep)
+    md = pr.render_markdown(rep, failures=["f"], notes=["n"])
+    assert "**FAIL** f" in md and "note: n" in md
+
+
+# ---------------------------------------------------------------------------
+# the gate
+# ---------------------------------------------------------------------------
+
+def _walled():
+    return _report(walls={"stream_triad":
+                          {"key": RECORDS[0]["key"], "impl": "xla_triad",
+                           "wall_s": 4.5e-4}})
+
+
+def test_compare_clean_self():
+    rep = _walled()
+    failures, notes = pr.compare(rep, rep)
+    assert failures == [] and notes == []
+
+
+def test_compare_detects_fraction_regression():
+    base, cur = _walled(), _walled()
+    for r in cur["rows"]:
+        if "achieved_frac" in r:
+            r["achieved_frac"] *= 0.5            # worse than 25% drop
+    failures, _ = pr.compare(cur, base)
+    assert len(failures) == 1 and "regressed" in failures[0]
+    # within threshold: clean
+    loose, _ = pr.compare(cur, base, threshold=0.6)
+    assert loose == []
+
+
+def test_compare_subfloor_regression_is_note_not_failure():
+    # microsecond walls are dispatch noise: a "regression" there must
+    # not trip the gate (but --wall-floor 0 restores strict gating)
+    base, cur = _walled(), _walled()
+    for rep in (base, cur):
+        for r in rep["rows"]:
+            if "wall_s" in r:
+                r["wall_s"] = 2e-5               # below WALL_FLOOR_S
+    for r in cur["rows"]:
+        if "achieved_frac" in r:
+            r["achieved_frac"] *= 0.5
+    failures, notes = pr.compare(cur, base)
+    assert failures == []
+    assert any("gate floor" in n for n in notes)
+    strict, _ = pr.compare(cur, base, wall_floor_s=0)
+    assert len(strict) == 1 and "regressed" in strict[0]
+
+
+def test_compare_detects_winner_flip_and_toolchain_exempts_it():
+    base, cur = _walled(), _walled()
+    cur["rows"][0]["choice"] = [999, 999]
+    failures, notes = pr.compare(cur, base)
+    assert any("winner flipped" in f for f in failures)
+    # same flip under a changed toolchain fingerprint: exempt note
+    cur["toolchain"]["repro_src"] = "bbbb2222"
+    failures, notes = pr.compare(cur, base)
+    assert failures == []
+    assert any("exempt" in n for n in notes)
+
+
+def test_compare_new_and_missing_rows_are_notes_not_failures():
+    base, cur = _walled(), _walled()
+    cur["rows"] = cur["rows"][:-1] + [dict(cur["rows"][0],
+                                           family="ssd_scan", key="k")]
+    failures, notes = pr.compare(cur, base)
+    assert failures == []
+    assert any("new row" in n for n in notes)
+    assert any("missing" in n for n in notes)
+
+
+# ---------------------------------------------------------------------------
+# CLI gate exit codes (pure --check path: no jax, fixture JSON only)
+# ---------------------------------------------------------------------------
+
+def _write(path, doc):
+    path.write_text(json.dumps(doc))
+    return str(path)
+
+
+def test_cli_gate_exits_nonzero_on_degraded_fixture(tmp_path, capsys):
+    base = _walled()
+    deg = json.loads(json.dumps(base))
+    for r in deg["rows"]:
+        if "achieved_frac" in r:
+            r["achieved_frac"] *= 0.3
+    bp = _write(tmp_path / "base.json", base)
+    dp = _write(tmp_path / "deg.json", deg)
+    assert cli_pr.main(["--check", dp, "--baseline", bp, "--gate"]) == 2
+    assert "FAIL" in capsys.readouterr().out
+    # the same degraded report WITHOUT --gate reports but exits 0
+    assert cli_pr.main(["--check", dp, "--baseline", bp]) == 0
+
+
+def test_cli_winner_flip_gates_unless_toolchain_changed(tmp_path):
+    base = _walled()
+    flip = json.loads(json.dumps(base))
+    flip["rows"][0]["choice"] = [64]
+    bp = _write(tmp_path / "base.json", base)
+    fp = _write(tmp_path / "flip.json", flip)
+    assert cli_pr.main(["--check", fp, "--baseline", bp, "--gate"]) == 2
+    flip["toolchain"]["repro_src"] = "changed"
+    fp = _write(tmp_path / "flip2.json", flip)
+    assert cli_pr.main(["--check", fp, "--baseline", bp, "--gate"]) == 0
+
+
+def test_cli_missing_baseline_warns_and_exits_zero(tmp_path, capsys):
+    rp = _write(tmp_path / "rep.json", _walled())
+    out_md = tmp_path / "rep.md"
+    assert cli_pr.main(["--check", rp, "--baseline",
+                        str(tmp_path / "absent.json"), "--gate",
+                        "--md", str(out_md)]) == 0
+    assert "no baseline" in capsys.readouterr().out
+    assert "Perf report" in out_md.read_text()
+
+
+# ---------------------------------------------------------------------------
+# measured join: the production dispatch path is a real registry.run
+# ---------------------------------------------------------------------------
+
+def test_measured_walls_join_fraction(tmp_path):
+    registry.clear_tune_table()
+    try:
+        # pin suite-cell winners (as if replayed from CI artifacts),
+        # then wall-clock the dispatched path for a fast subset
+        (_, _, tri_key) = pr.suite_inputs("stream_triad")
+        (_, _, ssd_key) = pr.suite_inputs("ssd_scan")
+        records = [
+            {"family": "stream_triad", "key": tri_key, "choice": [256],
+             "score_s": 9e-6, "swept": True,
+             "winner_events": {"FLOPS_TOTAL": 131072.0,
+                               "BYTES_ACCESSED": 786432.0}},
+            {"family": "ssd_scan", "key": ssd_key, "choice": [64],
+             "score_s": 6e-6, "swept": True,
+             "winner_events": {"FLOPS_TOTAL": 5.4e6,
+                               "BYTES_ACCESSED": 9.8e6}},
+        ]
+        assert pr.seed_tune_table(records) == 2
+        assert registry.best("stream_triad",
+                             n=pr.FAMILY_SUITE["stream_triad"]["n"]) \
+            == (256,)
+        walls = pr.measure_walls(records, repeats=1,
+                                 families=("stream_triad", "ssd_scan"))
+        rep = pr.build_report(records, walls=walls, toolchain=TOOLCHAIN)
+        fracs = {r["family"]: r.get("achieved_frac") for r in rep["rows"]}
+        assert fracs["stream_triad"] and fracs["stream_triad"] > 0
+        assert fracs["ssd_scan"] and fracs["ssd_scan"] > 0
+        impls = {r["family"]: r.get("impl") for r in rep["rows"]}
+        assert impls == {"stream_triad": "xla_triad",
+                         "ssd_scan": "jnp_scan"}     # CPU heuristics
+    finally:
+        registry.clear_tune_table()
+
+
+def test_suite_inputs_match_tuned_keys(tmp_path):
+    """Every family's measured cell joins the key its autotune sweep
+    persists (else walls would never attach to rows)."""
+    registry.clear_tune_table()
+    try:
+        for family in pr.FAMILY_SUITE:
+            _, _, key = pr.suite_inputs(family)
+            ts = registry._tuned_spec(family, None).tune
+            facts = dict(pr.FAMILY_SUITE[family], dtype=jnp.float32)
+            if family == "paged_decode":
+                facts.pop("ctx")
+                facts["page_size"] = 16
+            keyf = ts.lookup_key or ts.key
+            assert key == keyf(**facts), family
+    finally:
+        registry.clear_tune_table()

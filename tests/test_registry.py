@@ -477,8 +477,93 @@ def test_flash_tune_key_buckets_batch(tmp_path):
         for b in (3, 4):
             assert autotune.best_blocks(b=b, **shape, **dt) \
                 == (rec.bq, rec.bk), b
-        # a different bucket falls back to the default
-        assert autotune.best_blocks(b=5, **shape, **dt) \
-            == autotune.DEFAULT_BLOCKS
+        # a different bucket INTERPOLATES from the tuned neighbor bucket
+        # (PR 6: cross-shape generalization instead of default fallback)
+        assert autotune.best_blocks(b=5, **shape, **dt) == (rec.bq, rec.bk)
+        # ... but a shape with no tuned neighbor (different head dim:
+        # never a neighbor axis) still gets the declared default
+        assert autotune.best_blocks(b=5, h=4, kvh=2, sq=64, sk=64, dh=64,
+                                    **dt) == autotune.DEFAULT_BLOCKS
+    finally:
+        registry.clear_tune_table()
+
+
+def test_interpolation_prefers_exact_bucket_over_neighbor(tmp_path):
+    """Cross-shape generalization parity: where BOTH the exact bucket
+    and a neighbor bucket are tuned, ``best`` returns the exact bucket's
+    winner; only untuned buckets adopt the nearest neighbor's."""
+    registry.clear_tune_table()
+    try:
+        shape = dict(h=4, kvh=2, sq=64, sk=64, dh=32)
+        dt = dict(dtype=jnp.float32, causal=True)
+        sess = ProfileSession(cache_dir=str(tmp_path / "cache"))
+        # force DIFFERENT winners per bucket via disjoint candidate sets
+        registry.autotune("attention", sess, b=2, **shape,
+                          candidates=((64, 64),))
+        registry.autotune("attention", sess, b=4, **shape,
+                          candidates=((32, 32),))
+        assert registry.best("attention", b=2, **shape, **dt) == (64, 64)
+        assert registry.best("attention", b=4, **shape, **dt) == (32, 32)
+        # untuned b=8 bucket: nearest-first neighbor order adopts b=4
+        assert registry.best("attention", b=8, **shape, **dt) == (32, 32)
+        # the adoption is recorded under the exact key as interpolated
+        rec = [r for r in registry.dump_tune_table()["records"]
+               if r["key"].startswith("b8")]
+        assert rec and rec[0]["interpolated"] and not rec[0]["swept"]
+    finally:
+        registry.clear_tune_table()
+
+
+def test_interpolation_vmem_gates_adopted_choice():
+    """A neighbor's winner is only adopted when it fits the VMEM budget
+    at the ACTUAL shape — oversized tilings fall through to default."""
+    registry.clear_tune_table()
+    try:
+        from repro.core import hwinfo
+        # large sq/sk: the vmem model clamps blocks to the sequence, so
+        # only a long-sequence shape can actually bust the budget
+        shape = dict(h=4, kvh=2, sq=1 << 15, sk=1 << 15, dh=32)
+        dt = dict(dtype=jnp.float32, causal=True)
+        key4 = registry.attention_tune_key(b=4, **shape, **dt)
+        huge = (1 << 15, 1 << 15)
+        assert registry.attention_vmem(*huge, shape["dh"]) \
+            > hwinfo.DEFAULT_CHIP.vmem_bytes * 0.9
+        registry.record("attention", key4, huge)
+        # b=8 interpolates from the b=4 bucket first, but the choice
+        # busts the budget -> skipped -> declared default
+        assert registry.best("attention", b=8, **shape, **dt) \
+            == registry.DEFAULT_BLOCKS
+        # a fitting neighbor IS adopted (sanity: gate, not a blanket no)
+        registry.clear_tune_table()  # drop the gated record + markers
+        fit = (64, 64)
+        registry.record("attention", key4, fit)
+        assert registry.best("attention", b=8, **shape, **dt) == fit
+    finally:
+        registry.clear_tune_table()
+
+
+def test_stale_negative_cache_dropped_when_custom_root_registers():
+    """Regression (PR 6): ``clear_tune_table()`` forgets custom cache
+    roots; a ``best`` miss noted *before* a later autotune re-registers
+    the root must not mask that root's on-disk record."""
+    import tempfile
+    registry.clear_tune_table()
+    try:
+        with tempfile.TemporaryDirectory() as root:
+            sess = ProfileSession(cache_dir=root)
+            rec = registry.autotune("stream_triad", sess, n=TRIAD_N,
+                                    candidates=TRIAD_CANDS)
+            # full clear: records AND learned roots are gone; dispatch
+            # falls to the default and negative-caches the disk miss
+            registry.clear_tune_table()
+            assert registry.best("stream_triad", n=TRIAD_N) \
+                == (registry.DEFAULT_BLOCK_ROWS,)
+            # tuning a DIFFERENT shape through the same custom root
+            # re-registers it — the stale miss for the first shape must
+            # be dropped, so its persisted winner is visible again
+            sess2 = ProfileSession(cache=ArtifactCache(root))
+            registry.autotune("stream_triad", sess2, n=TRIAD_N * 2,
+                              candidates=TRIAD_CANDS)
+            assert registry.best("stream_triad", n=TRIAD_N) == rec.choice
     finally:
         registry.clear_tune_table()
