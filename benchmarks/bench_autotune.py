@@ -42,23 +42,25 @@ def run(csv, session=None, smoke=False):
     cells, cands = _suite(smoke)
     summary = {"families": {}, "sweeps": 0, "lowerings": 0}
     print("== registry autotune: every tunable family through one session ==")
-    for family, facts in cells.items():
+    from repro.core.perf_report import suite_family
+    for cell in cells:
+        family, impl, facts = suite_family(cell)
         t0 = time.perf_counter()
-        rec = registry.autotune(family, session,
-                                candidates=cands[family], **facts)
+        rec = registry.autotune(family, session, impl=impl,
+                                candidates=cands[cell], **facts)
         dt = time.perf_counter() - t0
         summary["sweeps"] += int(rec.swept)
         summary["lowerings"] += rec.lowerings
-        summary["families"][family] = {
+        summary["families"][cell] = {
             "key": rec.key, "choice": list(rec.choice),
             "score_us": rec.score_s * 1e6, "swept": rec.swept,
             "lowerings": rec.lowerings, "seconds": round(dt, 3),
         }
         src = "swept" if rec.swept else "tune table (disk)"
-        print(f"{family:>13}: choice={tuple(rec.choice)}  "
+        print(f"{cell:>15}: choice={tuple(rec.choice)}  "
               f"roofline {rec.score_s*1e6:9.3f} us  [{src}, "
               f"{rec.lowerings} lowerings, {dt:.2f}s]")
-        csv.append((f"autotune_{family}", rec.score_s * 1e6,
+        csv.append((f"autotune_{cell}", rec.score_s * 1e6,
                     f"choice={'x'.join(str(c) for c in rec.choice)},"
                     f"swept={int(rec.swept)},lowerings={rec.lowerings}"))
     print(f"total: {summary['sweeps']} sweeps, "

@@ -14,6 +14,14 @@ INSTRUMENTS: for each slot mix (short-ctx, long-ctx, mixed-ragged) it
   from the compiled artifact (ProfileSession.measure — never executed),
   asserting the paged mix ratio tracks context: <= 0.5x masked-dense on
   the mixed-ragged mix (rows <= max_seq/4);
+* runs a shared-system-prompt mix through the prefix cache and asserts
+  the radix trie turned N prefills into 1 full prefill + N-1 suffix
+  prefills: token-identical to the uncached run (fp32 greedy), COW at
+  the in-page fork point, and prefill FLOPs (artifact counts of the
+  slot-prefill programs actually dispatched) dropping with the hit rate;
+* prices int8 KV pages from the artifact — decode bytes/token <= 0.6x
+  the fp32 paged engine at the same geometry — and bounds the
+  quantization error of the prefill logits against the fp32 engine;
 * checks the Pallas paged kernel end-to-end (attn_impl="paged_decode");
 * sweeps (page_size x pages_per_block) through the session-backed
   autotuner twice — the warm rerun must do ZERO lowerings.
@@ -54,12 +62,12 @@ def _mixes(max_seq: int):
     }
 
 
-def _decode_bytes_per_token(lm, params, session, state_builder, region):
+def _decode_bytes_per_token(lm, params, session, state_builder, region,
+                            nrows):
     """BYTES_ACCESSED of ONE decode step from the artifact, per row."""
     params_s = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
     state_s = jax.eval_shape(state_builder)
-    nrows = jax.tree.leaves(state_s)[-1].shape[-1]  # length leaf [L, B]
     tok_s = jax.ShapeDtypeStruct((nrows, 1), jnp.int32)
     m = session.measure(lm.decode_step, params_s, tok_s, state_s,
                         region=region)
@@ -110,7 +118,11 @@ def run(csv, session=None, smoke=False):
         done = sched.run()
         t_paged = time.perf_counter() - t0
         sched.pool.check()
-        assert sched.pool.all_free(), sched.pool
+        # drained: every page is free, or index-only in the prefix trie
+        # (retained for future hits, evictable on demand — not a leak)
+        assert sched.pool.reclaimable() == sched.pool.num_pages - 1, \
+            sched.pool
+        assert sched.pool.allocs == sched.pool.releases, sched.pool
         assert all(done[r].generated == ddone[r].generated for r in done), \
             f"{mix_name}: paged tokens diverged from dense"
 
@@ -118,7 +130,7 @@ def run(csv, session=None, smoke=False):
         bt_dense = _decode_bytes_per_token(
             lm, params, session,
             lambda: lm.init_decode_state(slots, max_seq),
-            region=f"paged_bench.dense[{mix_name}]")
+            region=f"paged_bench.dense[{mix_name}]", nrows=slots)
         # the segment table width the scheduler's mix actually peaked at
         width = max(pages_for(n + max_new + 8, ps) for n in ctxs)
         bucket = min(-(-width // 4) * 4, eng.table_width)
@@ -127,7 +139,7 @@ def run(csv, session=None, smoke=False):
             lambda: lm.init_decode_state(slots, max_seq, page_size=ps,
                                          num_pages=eng.pool_pages,
                                          table_width=bucket),
-            region=f"paged_bench.paged[{mix_name}]")
+            region=f"paged_bench.paged[{mix_name}]", nrows=slots)
         ratio = bt_paged / bt_dense
         ntok = sum(len(r.generated) for r in done.values())
         print(f"{mix_name:>13}: ctx={ctxs}  bytes/token "
@@ -153,6 +165,176 @@ def run(csv, session=None, smoke=False):
     mixed = summary["mixes"]["mixed_ragged"]
     assert mixed["ratio"] <= 0.5, \
         f"paged bytes/token {mixed['ratio']:.2f}x dense on mixed_ragged"
+
+    # ---- shared-prefix radix cache: 1 full prefill + N-1 suffixes -----
+    # The shared system prompt deliberately ends MID-page so every later
+    # admission exercises the copy-on-write path (fork inside an indexed
+    # page); distinct first suffix tokens make the match length exact.
+    n_req = 6
+    p_shared = ps * 2 + ps // 2
+    s_len = 24
+    full_len = p_shared + s_len
+    sp_rng = np.random.default_rng(7)
+    shared_sys = sp_rng.integers(1, 256, size=p_shared).tolist()
+    sp_prompts = [[10 + i] + sp_rng.integers(1, 256, size=s_len - 1).tolist()
+                  for i in range(n_req)]
+    sp_prompts = [shared_sys + s for s in sp_prompts]
+
+    # table width sized to the mix, not max_seq: the suffix program's
+    # cross-prefix attention gathers the whole table-width context, so an
+    # oversized table would bill every suffix for ctx it never holds
+    sp_seq = 128
+
+    def sp_run(prefix_cache):
+        eng = Engine(lm, params, ServeConfig(
+            max_seq=sp_seq, batch_slots=slots, page_size=ps,
+            pool_pages=slots * pages_for(full_len + max_new + 8, ps)
+            + 4 * pages_for(full_len, ps) + 1,
+            prefix_cache=prefix_cache))
+        sched = BatchScheduler(eng)
+        for i, p in enumerate(sp_prompts):
+            sched.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+        done = sched.run()
+        sched.pool.check()
+        return eng, sched, done
+
+    _, sched_nc, done_nc = sp_run(False)
+    eng_pc, sched_pc, done_pc = sp_run(True)
+    assert all(done_pc[r].generated == done_nc[r].generated
+               for r in done_pc), \
+        "prefix-cached tokens diverged from the uncached run (fp32 greedy)"
+    m = sched_pc.metrics
+    assert m["prefix_hits"] == n_req - 1, m
+    assert m["cow_copies"] == n_req - 1, \
+        f"in-page forks should COW once per hit: {m}"
+    hit_rate = (m["prompt_tokens"] - m["prefilled_tokens"]) \
+        / m["prompt_tokens"]
+    # every later request matches exactly the shared span
+    assert m["prefilled_tokens"] == full_len + (n_req - 1) * s_len, m
+
+    # prefill FLOPs from the artifact: the cost of the slot-prefill
+    # programs the two runs actually dispatched (never executed here)
+    params_s = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    state_s = jax.eval_shape(lambda: lm.init_decode_state(
+        slots, sp_seq, **eng_pc._state_kwargs()))
+    logits_s = jax.ShapeDtypeStruct((slots, lm.cfg.vocab), lm.dtype)
+
+    def i32(*shape):
+        return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+    def prefill_flops(n_toks, suffix):
+        args = [params_s, state_s, logits_s, i32(1, n_toks), i32(),
+                i32(eng_pc.table_width)]
+        if suffix:
+            args.append(i32())
+        tag = "suffix" if suffix else "full"
+        meas = session.measure(eng_pc._paged_slot_prefill_impl, *args,
+                               region=f"paged_bench.prefill[{tag}{n_toks}]")
+        return meas.events["FLOPS_TOTAL"]
+
+    f_full = prefill_flops(full_len, False)
+    f_suffix = prefill_flops(s_len, True)
+    flops_cached = f_full + (n_req - 1) * f_suffix
+    flops_uncached = n_req * f_full
+    flop_drop = 1.0 - flops_cached / flops_uncached
+    print(f"shared prefix: hit_rate={hit_rate:.2f} "
+          f"pages_shared={m['pages_shared']:.0f} "
+          f"cow_copies={m['cow_copies']:.0f}  prefill FLOPs "
+          f"{flops_uncached/1e6:.2f}M -> {flops_cached/1e6:.2f}M "
+          f"(drop {flop_drop:.2f})")
+    # MLP/projection FLOPs scale exactly with prefilled tokens; the
+    # suffix program still pays cross-prefix attention over the (static)
+    # table-width context, so on this attention-heavy smoke model the
+    # drop trails the token hit rate by a bounded margin
+    assert flop_drop >= 0.5 * hit_rate, \
+        f"prefill FLOP drop {flop_drop:.2f} vs hit rate {hit_rate:.2f}"
+    summary["prefix_cache"] = {
+        "requests": n_req, "shared_tokens": p_shared, "suffix_tokens": s_len,
+        "prefix_hit_rate": hit_rate,
+        "pages_shared": m["pages_shared"],
+        "cow_copies": m["cow_copies"],
+        "pool_occupancy": sched_pc.pool.occupancy(),
+        "index_pages": sched_pc.pool.index_pages(),
+        "prefill_flops_cached": flops_cached,
+        "prefill_flops_uncached": flops_uncached,
+        "prefill_flop_drop": flop_drop,
+    }
+    csv.append(("paged_prefix_cache", flops_cached / 1e6,
+                f"hit_rate={hit_rate:.3f},flop_drop={flop_drop:.3f},"
+                f"cow={m['cow_copies']:.0f}"))
+
+    # ---- int8 KV pages: 4x smaller on the wire, bounded logit error ---
+    q8_atol = 0.05   # pinned: prefill-logit |err| bound vs the fp32 engine
+    bt_fp, bt_q8 = (
+        _decode_bytes_per_token(
+            lm, params, session,
+            lambda: lm.init_decode_state(
+                slots, max_seq, page_size=ps,
+                num_pages=slots * (max_seq // ps) + 1,
+                table_width=max_seq // ps, kv_dtype=kvd),
+            region=f"paged_bench.q8[{name}]", nrows=slots)
+        for name, kvd in (("fp32", None), ("int8", jnp.int8)))
+    q8_ratio = bt_q8 / bt_fp
+    assert q8_ratio <= 0.6, \
+        f"int8 decode bytes/token {q8_ratio:.2f}x fp32 (want <= 0.6)"
+
+    from repro.serve.kv_pool import KVPool
+
+    def one_slot_logits(kv_dtype):
+        """Prefill a slot, then DECODE one token: prefill attends over
+        the in-flight fp values (stores codes), so only a decode step —
+        which reads the quantized pages back — sees the error."""
+        e = Engine(lm, params, ServeConfig(max_seq=128, batch_slots=1,
+                                           page_size=ps,
+                                           kv_dtype=kv_dtype))
+        pool = KVPool(e.pool_pages, ps, 1, e.table_width)
+        pool.alloc(0, full_len + 1)
+        st = lm.init_decode_state(1, 128, **e._state_kwargs())
+        st = e.set_page_table(st, pool.table())
+        lg = jnp.zeros((1, lm.cfg.vocab), lm.dtype)
+        st, _ = e.prefill_slot(st, lg, sp_prompts[0], 0,
+                               table_row=pool.tables[0])
+        step_lg, _ = lm.decode_step(e.params, jnp.full((1, 1), 5, jnp.int32),
+                                    st)
+        return np.asarray(step_lg[0])
+
+    q8_err = float(np.max(np.abs(one_slot_logits("int8")
+                                 - one_slot_logits(None))))
+    assert 0.0 < q8_err <= q8_atol, \
+        f"int8 decode logits off by {q8_err:.4f} (pinned atol {q8_atol})"
+
+    # the int8 engine composes with the prefix cache: same trie behavior
+    # (token-keyed, dtype-blind), full generation lengths
+    q8_eng = Engine(lm, params, ServeConfig(
+        max_seq=max_seq, batch_slots=slots, page_size=ps,
+        kv_dtype="int8"))
+    q8_sched = BatchScheduler(q8_eng)
+    for i, p in enumerate(sp_prompts):
+        q8_sched.submit(Request(rid=i, prompt=p, max_new_tokens=max_new))
+    q8_done = q8_sched.run()
+    q8_sched.pool.check()
+    mq = q8_sched.metrics
+    assert mq["prefilled_tokens"] == m["prefilled_tokens"], \
+        "int8 engine saw a different prefix-hit pattern than fp32"
+    assert all(len(r.generated) == max_new for r in q8_done.values())
+    agree = np.mean([t == u for r in q8_done
+                     for t, u in zip(q8_done[r].generated,
+                                     done_pc[r].generated)])
+    print(f"int8 KV: bytes/token {bt_q8/1e6:.2f} MB vs fp32 "
+          f"{bt_fp/1e6:.2f} MB (ratio {q8_ratio:.2f})  "
+          f"decode |logit err| {q8_err:.4f} <= {q8_atol}  "
+          f"greedy agreement {agree:.2f}")
+    summary["int8"] = {
+        "bytes_per_token_fp32": bt_fp, "bytes_per_token_int8": bt_q8,
+        "ratio": q8_ratio, "logit_max_err": q8_err, "logit_atol": q8_atol,
+        "greedy_agreement": float(agree),
+        "prefix_hit_rate": (mq["prompt_tokens"] - mq["prefilled_tokens"])
+        / mq["prompt_tokens"],
+    }
+    csv.append(("paged_int8_bytes_ratio", q8_ratio * 100,
+                f"bt_q8_mb={bt_q8/1e6:.2f},bt_fp_mb={bt_fp/1e6:.2f},"
+                f"logit_err={q8_err:.4f}"))
 
     # ---- the Pallas paged kernel end to end (interpret on CPU) --------
     short = [[3, 1, 4, 1, 5], [9, 2, 6]]

@@ -120,6 +120,37 @@ def run(csv, session=None, smoke=False):
     print()
     print(ctr.report())
 
+    # ---- paged engine + prefix cache: serving telemetry -----------------
+    # same model through the paged pool with a shared system prompt: the
+    # radix cache prefills the prefix once; the JSON artifact records the
+    # hit rate / page sharing / occupancy CI tracks run over run
+    from repro.serve import Engine, ServeConfig
+    peng = Engine(eng.lm, eng.params, ServeConfig(
+        max_seq=256, batch_slots=4, temperature=0.0, admission_chunk=8,
+        page_size=16))
+    psched = BatchScheduler(peng)
+    shared_sys = _prompts(eng, 1, 24, seed=42)[0]
+    for rid in range(n_req):
+        psched.submit(Request(
+            rid=rid,
+            prompt=shared_sys + _prompts(eng, 1, plen, seed=100 + rid)[0],
+            max_new_tokens=max_new // 2))
+    t0 = time.perf_counter()
+    pdone = psched.run()
+    t_prefix = time.perf_counter() - t0
+    pm = psched.metrics
+    prefix_hit_rate = (pm["prompt_tokens"] - pm["prefilled_tokens"]) \
+        / max(pm["prompt_tokens"], 1)
+    pool_occupancy = psched.pool.occupancy()
+    ptok = sum(len(r.generated) for r in pdone.values())
+    print("== paged engine + shared-prefix radix cache ==")
+    print(f"{len(pdone)} requests, {ptok} tokens: {ptok/t_prefix:10.1f} "
+          f"tok/s  prefix_hit_rate={prefix_hit_rate:.2f} "
+          f"pages_shared={pm['pages_shared']:.0f} "
+          f"cow_copies={pm['cow_copies']:.0f} "
+          f"occupancy={pool_occupancy:.2f}")
+    assert pm["prefix_hits"] == n_req - 1, pm
+
     # traffic, not just throughput: bytes/token of the decode-step program
     # from the compiled artifact (the instrument's serve.decode region) —
     # the number bench_paged_decode drives down, tracked here so the perf
@@ -145,6 +176,9 @@ def run(csv, session=None, smoke=False):
                 f"tok_s={tps_sched:.1f},ttft_ms={ttft_ms:.2f}"))
     csv.append(("serve_decode_bytes_per_token", bytes_per_token,
                 f"mb_per_token={bytes_per_token/1e6:.3f}"))
+    csv.append(("serve_prefix_tok_s", 1e6 * t_prefix / max(ptok, 1),
+                f"hit_rate={prefix_hit_rate:.3f},"
+                f"pages_shared={pm['pages_shared']:.0f}"))
     return {
         "fused_tok_s": tps_fused,
         "reference_tok_s": tps_ref,
@@ -155,6 +189,11 @@ def run(csv, session=None, smoke=False):
         "ttft_ms": ttft_ms,
         "tokens": int(ntok),
         "decode_bytes_per_token": bytes_per_token,
+        "paged_prefix_tok_s": ptok / t_prefix,
+        "prefix_hit_rate": prefix_hit_rate,
+        "pages_shared": pm["pages_shared"],
+        "cow_copies": pm["cow_copies"],
+        "pool_occupancy": pool_occupancy,
     }
 
 

@@ -43,12 +43,19 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 # launch CLIs can import them without depending on the benchmarks tree)
 # ---------------------------------------------------------------------------
 
-#: family -> shape facts of the canonical autotune/measure cell.  These are
-#: persisted-record identity (tune keys derive from them), so the values
-#: must stay byte-identical across PRs; bench_autotune delegates here.
+#: suite cell -> shape facts of the canonical autotune/measure cell.
+#: These are persisted-record identity (tune keys derive from them), so
+#: the values must stay byte-identical across PRs; bench_autotune
+#: delegates here.  A cell is usually a registry family; the reserved
+#: ``family``/``impl`` keys let a cell tune a NAMED impl's own space
+#: inside another family (the q8 cell sweeps ``pallas_paged_q8`` over
+#: int8 pages) — split them off with :func:`suite_family`.
 FAMILY_SUITE: Dict[str, Dict[str, Any]] = {
     "attention": dict(b=2, h=4, kvh=2, sq=128, sk=192, dh=32),
     "paged_decode": dict(b=4, kvh=2, g=2, dh=32, ctx=128),
+    "paged_decode_q8": dict(family="paged_decode", impl="pallas_paged_q8",
+                            b=4, kvh=2, g=2, dh=32, ctx=128,
+                            quantized=True),
     "stream_triad": dict(n=128 * 512),
     "jacobi7": dict(shape=(24, 16, 16), sweeps=2),
     "ssd_scan": dict(b=2, s=128, h=2, dk=16, dv=16, normalize=False),
@@ -59,10 +66,19 @@ FAMILY_SUITE: Dict[str, Dict[str, Any]] = {
 _SMOKE_CANDIDATES: Dict[str, Tuple[Tuple[int, ...], ...]] = {
     "attention": ((64, 64), (64, 128), (128, 128)),
     "paged_decode": ((16, 1), (16, 2), (32, 1)),
+    "paged_decode_q8": ((16, 1), (16, 2), (32, 1)),
     "stream_triad": ((128,), (256,)),
     "jacobi7": ((4,), (8,)),
     "ssd_scan": ((32,), (64,)),
 }
+
+
+def suite_family(cell: str) -> Tuple[str, Optional[str], Dict[str, Any]]:
+    """``(registry_family, pinned_impl_or_None, shape_facts)`` for a
+    suite cell — the reserved ``family``/``impl`` keys split off the
+    facts that feed ``registry.autotune``."""
+    facts = dict(FAMILY_SUITE[cell])
+    return facts.pop("family", cell), facts.pop("impl", None), facts
 
 
 def suite_candidates(smoke: bool) -> Dict[str, Any]:
@@ -192,8 +208,14 @@ def build_report(records: Sequence[Dict[str, Any]], *,
                            else "swept" if r.get("swept")
                            else "warm"),
         }
+        # walls are keyed by suite CELL, records by registry family;
+        # the tune key is the real join (a pinned-impl cell like the q8
+        # one measures under the parent family's name)
         w = walls.get(family)
-        if w and w.get("key") == key:
+        if not (w and w.get("key") == key):
+            w = next((x for x in (walls or {}).values()
+                      if x.get("key") == key), None)
+        if w:
             row["impl"] = w.get("impl")
             row["wall_s"] = _finite(w.get("wall_s"))
             if row["score_s"] and row["wall_s"]:
@@ -399,23 +421,45 @@ def suite_inputs(family: str, records: Sequence[Dict[str, Any]] = ()
         v = jax.random.normal(kv, (b, sk, kvh, dh), jnp.float32)
         key = registry.attention_tune_key(dtype=jnp.float32, **facts)
         return (q, k, v), {"causal": True}, key
-    if family == "paged_decode":
+    if family in ("paged_decode", "paged_decode_q8"):
+        quantized = family == "paged_decode_q8"
         b, kvh, g, dh, ctx = (facts["b"], facts["kvh"], facts["g"],
                               facts["dh"], facts["ctx"])
-        ps = _suite_page_size(records)
+        ps = _suite_page_size(records, quantized=quantized)
         np_w = -(-ctx // ps)
         p_total = b * np_w + 1
         kq, kp, vp, kn, vn = jax.random.split(rng, 5)
         q = jax.random.normal(kq, (b, 1, g * kvh, dh), jnp.float32)
-        k_pages = jax.random.normal(kp, (p_total, ps, kvh, dh), jnp.float32)
-        v_pages = jax.random.normal(vp, (p_total, ps, kvh, dh), jnp.float32)
+        if quantized:
+            ksp, vsp = jax.random.split(kp), jax.random.split(vp)
+            k_pages = jax.random.randint(ksp[0], (p_total, ps, kvh, dh),
+                                         -127, 128, jnp.int8)
+            v_pages = jax.random.randint(vsp[0], (p_total, ps, kvh, dh),
+                                         -127, 128, jnp.int8)
+            kwargs: Dict[str, Any] = {
+                "k_scale": jax.random.uniform(ksp[1], (p_total, ps),
+                                              jnp.float32, 0.005, 0.05),
+                "v_scale": jax.random.uniform(vsp[1], (p_total, ps),
+                                              jnp.float32, 0.005, 0.05),
+            }
+        else:
+            k_pages = jax.random.normal(kp, (p_total, ps, kvh, dh),
+                                        jnp.float32)
+            v_pages = jax.random.normal(vp, (p_total, ps, kvh, dh),
+                                        jnp.float32)
+            kwargs = {}
         table = jnp.arange(b * np_w, dtype=jnp.int32).reshape(b, np_w)
         length = jnp.full((b,), ctx - 1, jnp.int32)
         k_new = jax.random.normal(kn, (b, 1, kvh, dh), jnp.float32)
         v_new = jax.random.normal(vn, (b, 1, kvh, dh), jnp.float32)
+        # the key the dispatch site computes: ctx = table width x page
+        # size (the trace-time capacity bound)
         key = registry.paged_lookup_key(b=b, kvh=kvh, g=g, dh=dh,
-                                        page_size=ps, dtype=jnp.float32)
-        return (q, k_pages, v_pages, table, length, k_new, v_new), {}, key
+                                        page_size=ps, ctx=np_w * ps,
+                                        dtype=jnp.float32,
+                                        quantized=quantized)
+        return ((q, k_pages, v_pages, table, length, k_new, v_new),
+                kwargs, key)
     if family == "stream_triad":
         n = facts["n"]
         kb, kc = jax.random.split(rng)
@@ -443,17 +487,24 @@ def suite_inputs(family: str, records: Sequence[Dict[str, Any]] = ()
     raise KeyError(f"unknown suite family {family!r}")
 
 
-def _suite_page_size(records: Sequence[Dict[str, Any]]) -> int:
+def _suite_page_size(records: Sequence[Dict[str, Any]], *,
+                     quantized: bool = False) -> int:
     """The winning page size among the family's tuned records (best
-    roofline score), else the smallest smoke candidate."""
+    roofline score), else the smallest smoke candidate.  fp and q8
+    records share family ``paged_decode``; the key prefix tells them
+    apart (``paged-`` vs ``pagedq8-``)."""
+    prefix = "pagedq8-" if quantized else "paged-"
     best_ps, best_score = None, math.inf
     for r in records:
         if r.get("family") != "paged_decode" or not r.get("choice"):
             continue
+        if not str(r.get("key", "")).startswith(prefix):
+            continue
         score = _finite(r.get("score_s")) or math.inf
         if best_ps is None or score < best_score:
             best_ps, best_score = int(r["choice"][0]), score
-    return best_ps or _SMOKE_CANDIDATES["paged_decode"][0][0]
+    cell = "paged_decode_q8" if quantized else "paged_decode"
+    return best_ps or _SMOKE_CANDIDATES[cell][0][0]
 
 
 def measure_walls(records: Sequence[Dict[str, Any]] = (), *,
@@ -478,20 +529,29 @@ def measure_walls(records: Sequence[Dict[str, Any]] = (), *,
     from repro.models.linear_scan import chunked_linear_attention
 
     walls: Dict[str, Dict[str, Any]] = {}
-    for family in families or FAMILY_SUITE:
-        args, kwargs, key = suite_inputs(family, records)
+    for cell in families or FAMILY_SUITE:
+        args, kwargs, key = suite_inputs(cell, records)
+        family, pinned, cell_facts = suite_family(cell)
         if family == "ssd_scan":
             fn = functools.partial(chunked_linear_attention,
                                    normalize=kwargs["normalize"])
             impl = registry.select(family)
         else:
-            fn = functools.partial(registry.run, family, **kwargs)
             if family == "attention":
-                cell = FAMILY_SUITE[family]
-                impl = registry.select(family, sq=cell["sq"],
-                                       sk=cell["sk"], dh=cell["dh"])
+                impl = registry.select(family, sq=cell_facts["sq"],
+                                       sk=cell_facts["sk"],
+                                       dh=cell_facts["dh"])
+            elif pinned is not None:
+                # pinned-impl cells dispatch like their production call
+                # site: select under the cell's facts, so the q8 cell
+                # decodes through the backend's q8 flavor and run() is
+                # told the impl explicitly (the family heuristic alone
+                # would route int8 pages at the fp kernels)
+                impl = registry.select(family, **cell_facts)
+                kwargs = dict(kwargs, impl=impl)
             else:
                 impl = registry.select(family)
+            fn = functools.partial(registry.run, family, **kwargs)
         jf = jax.jit(fn)
         jax.block_until_ready(jf(*args))                # compile
         jax.block_until_ready(jf(*args))                # warmup
@@ -503,5 +563,5 @@ def measure_walls(records: Sequence[Dict[str, Any]] = (), *,
                 out = jf(*args)
             jax.block_until_ready(out)
             best = min(best, (time.perf_counter() - t0) / calls_per_round)
-        walls[family] = {"key": key, "impl": impl, "wall_s": best}
+        walls[cell] = {"key": key, "impl": impl, "wall_s": best}
     return walls

@@ -42,7 +42,8 @@ import jax.numpy as jnp
 import jax.experimental.pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["paged_decode_attention", "paged_decode_attention_grouped"]
+__all__ = ["paged_decode_attention", "paged_decode_attention_grouped",
+           "paged_decode_attention_q8", "paged_decode_attention_q8_grouped"]
 
 NEG_INF = -2.0e38
 
@@ -185,6 +186,182 @@ def paged_decode_attention_grouped(q4: jnp.ndarray, k_pages: jnp.ndarray,
         interpret=interpret,
     )(lengths, page_table,
       q4, *([k_pages] * ppb), *([v_pages] * ppb), kn, vn)
+
+
+def _paged_kernel_q8(lens_ref, pt_ref, q_ref, *refs,
+                     scale: float, ps: int, ppb: int):
+    """int8 variant: pages hold int8 codes, dequantized RIGHT AFTER the
+    DMA with the per-token-row scales that ride the same page index maps.
+    refs: k_0..k_{ppb-1}, v_0.., ksc_0.., vsc_0.., k_new, v_new, o,
+    m, l, acc.  The new token's K/V stay fp — it is not in a page yet.
+    """
+    k_refs = refs[:ppb]
+    v_refs = refs[ppb:2 * ppb]
+    ksc_refs = refs[2 * ppb:3 * ppb]
+    vsc_refs = refs[3 * ppb:4 * ppb]
+    kn_ref, vn_ref, o_ref, m_ref, l_ref, acc_ref = refs[4 * ppb:]
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+    njb = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    length = lens_ref[b]
+    q = q_ref[...].astype(jnp.float32) * scale            # [G, Dh]
+
+    for i in range(ppb):
+        p = j * ppb + i
+
+        @pl.when(p * ps < length)
+        def _accumulate(i=i, p=p):
+            # dequant in VMEM: int8 codes [ps, Dh] x f32 row scales [ps, 1]
+            k = k_refs[i][...].astype(jnp.float32) * ksc_refs[i][...]
+            v = v_refs[i][...].astype(jnp.float32) * vsc_refs[i][...]
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))
+            kpos = p * ps + jax.lax.broadcasted_iota(
+                jnp.int32, s.shape, 1)
+            ok = kpos < length
+            s = jnp.where(ok, s, NEG_INF)
+            m_prev = m_ref[...]
+            m_new = jnp.maximum(m_prev,
+                                jnp.max(s, axis=1, keepdims=True))
+            alpha = jnp.exp(m_prev - m_new)
+            pr = jnp.exp(s - m_new)
+            pr = jnp.where(ok, pr, 0.0)
+            l_ref[...] = l_ref[...] * alpha + jnp.sum(pr, axis=1,
+                                                      keepdims=True)
+            acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(pr, v)
+            m_ref[...] = m_new
+
+    @pl.when(j == njb - 1)
+    def _fold_token_and_finish():
+        kt = kn_ref[...].astype(jnp.float32)              # [1, Dh]
+        vt = vn_ref[...].astype(jnp.float32)
+        s_t = jax.lax.dot_general(q, kt, (((1,), (1,)), ((), ())))
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s_t)
+        alpha = jnp.exp(m_prev - m_new)
+        p_t = jnp.exp(s_t - m_new)
+        l = l_ref[...] * alpha + p_t
+        acc = acc_ref[...] * alpha + p_t * vt
+        o_ref[...] = (acc / jnp.maximum(l, 1e-20)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("pages_per_block", "interpret"))
+def paged_decode_attention_q8_grouped(q4: jnp.ndarray, k_pages: jnp.ndarray,
+                                      v_pages: jnp.ndarray,
+                                      k_scale: jnp.ndarray,
+                                      v_scale: jnp.ndarray,
+                                      page_table: jnp.ndarray,
+                                      lengths: jnp.ndarray,
+                                      k_new: jnp.ndarray,
+                                      v_new: jnp.ndarray, *,
+                                      pages_per_block: int = 1,
+                                      interpret: bool | None = None
+                                      ) -> jnp.ndarray:
+    """:func:`paged_decode_attention_grouped` over int8 pages.
+
+    k/v_pages hold int8 codes; k/v_scale ``[P, ps]`` f32 hold one dequant
+    factor per resident token row.  The scales ride the SAME page index
+    maps as their pages (one extra [ps] f32 vector per page DMA — ~1.5%
+    of the page's int8 bytes at Dh=128), and dequantization happens in
+    VMEM between the DMA and the QK^T matmul: HBM sees only int8.
+    """
+    if interpret is None:
+        from repro.kernels.dispatch import default_interpret
+        interpret = default_interpret()
+    b, kvh, g, dh = q4.shape
+    p_total, ps, kvh_p, _ = k_pages.shape
+    assert kvh_p == kvh, (kvh_p, kvh)
+    assert k_pages.dtype == jnp.int8, k_pages.dtype
+    np_w = page_table.shape[1]
+    ppb = max(1, min(pages_per_block, np_w))
+    njb = -(-np_w // ppb)
+    scale = 1.0 / (dh ** 0.5)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    page_table = jnp.asarray(page_table, jnp.int32)
+    kn = k_new.reshape(b, kvh, 1, dh)
+    vn = v_new.reshape(b, kvh, 1, dh)
+    # [P, ps] -> [P, ps, 1] so the in-kernel scale block is 2D ([ps, 1]
+    # broadcasts over the page's [ps, Dh] codes)
+    ksc = k_scale.astype(jnp.float32)[..., None]
+    vsc = v_scale.astype(jnp.float32)[..., None]
+
+    def page_map(i):
+        def imap(b_, h_, j_, lens, pt):
+            p_log = j_ * ppb + i
+            live = jnp.maximum((lens[b_] + ps - 1) // ps - 1, 0)
+            p_eff = jnp.minimum(jnp.minimum(p_log, np_w - 1), live)
+            return (pt[b_, p_eff], 0, h_, 0)
+        return imap
+
+    def scale_map(i):
+        def imap(b_, h_, j_, lens, pt):
+            p_log = j_ * ppb + i
+            live = jnp.maximum((lens[b_] + ps - 1) // ps - 1, 0)
+            p_eff = jnp.minimum(jnp.minimum(p_log, np_w - 1), live)
+            return (pt[b_, p_eff], 0, 0)
+        return imap
+
+    kv_specs = [pl.BlockSpec((None, ps, None, dh), page_map(i))
+                for i in range(ppb)]
+    sc_specs = [pl.BlockSpec((None, ps, 1), scale_map(i))
+                for i in range(ppb)]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,            # lengths, page_table
+        grid=(b, kvh, njb),
+        in_specs=[
+            pl.BlockSpec((None, None, g, dh),
+                         lambda b_, h_, j_, lens, pt: (b_, h_, 0, 0)),
+            *kv_specs,                    # k pages (int8)
+            *kv_specs,                    # v pages (int8)
+            *sc_specs,                    # k scales
+            *sc_specs,                    # v scales
+            pl.BlockSpec((None, None, 1, dh),
+                         lambda b_, h_, j_, lens, pt: (b_, h_, 0, 0)),
+            pl.BlockSpec((None, None, 1, dh),
+                         lambda b_, h_, j_, lens, pt: (b_, h_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, None, g, dh),
+                               lambda b_, h_, j_, lens, pt: (b_, h_, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, dh), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_paged_kernel_q8, scale=scale, ps=ps, ppb=ppb)
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, dh), q4.dtype),
+        interpret=interpret,
+    )(lengths, page_table,
+      q4, *([k_pages] * ppb), *([v_pages] * ppb),
+      *([ksc] * ppb), *([vsc] * ppb), kn, vn)
+
+
+def paged_decode_attention_q8(q: jnp.ndarray, k_pages: jnp.ndarray,
+                              v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                              lengths: jnp.ndarray, k_new: jnp.ndarray,
+                              v_new: jnp.ndarray, *,
+                              k_scale: jnp.ndarray, v_scale: jnp.ndarray,
+                              pages_per_block: int = 1,
+                              interpret: bool | None = None) -> jnp.ndarray:
+    """Model layout int8 entry: q [B,1,H,Dh], k/v_new [B,1,KVH,Dh],
+    int8 pages + [P, ps] scales -> [B,1,H,Dh]."""
+    b, _, h, dh = q.shape
+    kvh = k_pages.shape[2]
+    g = h // kvh
+    q4 = q.reshape(b, kvh, g, dh)
+    out = paged_decode_attention_q8_grouped(
+        q4, k_pages, v_pages, k_scale, v_scale, page_table, lengths,
+        k_new.reshape(b, kvh, dh), v_new.reshape(b, kvh, dh),
+        pages_per_block=pages_per_block, interpret=interpret)
+    return out.reshape(b, 1, h, dh)
 
 
 def paged_decode_attention(q: jnp.ndarray, k_pages: jnp.ndarray,

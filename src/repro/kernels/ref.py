@@ -22,7 +22,7 @@ import numpy as np
 from repro.models.linear_scan import sequential_linear_attention
 
 __all__ = ["stream_triad", "jacobi7_sweep", "jacobi7_valid",
-           "flash_attention", "paged_decode", "ssd_scan"]
+           "flash_attention", "paged_decode", "paged_decode_q8", "ssd_scan"]
 
 
 def stream_triad(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
@@ -116,6 +116,27 @@ def paged_decode(q: jnp.ndarray, k_pages: jnp.ndarray, v_pages: jnp.ndarray,
     probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
     out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v_full.astype(q.dtype))
     return out.reshape(b, 1, h, dh)
+
+
+def paged_decode_q8(q: jnp.ndarray, k_pages: jnp.ndarray,
+                    v_pages: jnp.ndarray, page_table: jnp.ndarray,
+                    lengths: jnp.ndarray, k_new: jnp.ndarray,
+                    v_new: jnp.ndarray, *, k_scale: jnp.ndarray,
+                    v_scale: jnp.ndarray) -> jnp.ndarray:
+    """Quantized paged decode oracle <- kernels/paged_decode.py (q8).
+
+    Same contract as :func:`paged_decode` over int8 pages: dequantize
+    every gathered page row with its [P, ps] per-token f32 scale, then
+    run the identical dense masked softmax.  The kernel must match this
+    EXACTLY (the quantization error lives in the codes, not the kernel —
+    dequant-then-attend is deterministic).
+    """
+    dq = q.dtype if q.dtype == jnp.float32 else jnp.float32
+    k_deq = (k_pages.astype(jnp.float32)
+             * k_scale.astype(jnp.float32)[..., None, None]).astype(dq)
+    v_deq = (v_pages.astype(jnp.float32)
+             * v_scale.astype(jnp.float32)[..., None, None]).astype(dq)
+    return paged_decode(q, k_deq, v_deq, page_table, lengths, k_new, v_new)
 
 
 def ssd_scan(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,

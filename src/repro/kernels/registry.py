@@ -37,6 +37,7 @@ Registered families (see :func:`describe` for the live table)::
 
     attention     pallas_flash | jnp_flash | full      tune: (bq, bk)
     paged_decode  pallas_paged | jnp_paged             tune: (page_size, ppb)
+                  | pallas_paged_q8 | jnp_paged_q8     (int8 pages + scales)
     stream_triad  pallas_triad | xla_triad             tune: (block_rows,)
     jacobi7       wavefront | naive                    tune: (block_x,)
     ssd_scan      pallas_ssd | jnp_scan                tune: (chunk,)
@@ -927,20 +928,32 @@ DEFAULT_PAGED_CANDIDATES: Tuple[Tuple[int, int], ...] = (
 )
 
 
+def _paged_ctx_bucket(ctx) -> int:
+    """Context is bucketed to powers of two: the scheduler's live table
+    width drifts segment to segment, and a fetch granularity tuned at
+    ctx=512 serves ctx=700 fine — pow2 buckets + the neighbors hook keep
+    lookups warm across the whole mixed-context sweep."""
+    return _pow2_up(max(int(ctx), 1))
+
+
 def paged_lookup_key(*, b: int, kvh: int, g: int, dh: int, page_size: int,
-                     dtype, backend: Optional[str] = None,
-                     **_ignored) -> str:
-    # deliberately NOT keyed on the page-table width: the scheduler's
-    # live-mix bucket changes segment to segment, and the winning fetch
-    # granularity is a per-page property — keying on width would make
-    # every serving lookup miss the sweep's record
-    return (f"paged-b{b}kvh{kvh}g{g}dh{dh}ps{page_size}"
+                     dtype, ctx: int = 0, backend: Optional[str] = None,
+                     quantized: bool = False, **_ignored) -> str:
+    # keyed on the pow2 ctx BUCKET, not the raw page-table width: the
+    # scheduler's live-mix bucket changes segment to segment, and the
+    # winning fetch granularity is a per-page property — exact-width keys
+    # would make every serving lookup miss the sweep's record
+    tag = "q8" if quantized else ""
+    return (f"paged{tag}-b{b}kvh{kvh}g{g}dh{dh}ps{page_size}"
+            f"ctx{_paged_ctx_bucket(ctx)}"
             f"-{_dtype_name(dtype)}-{_backend(backend)}")
 
 
 def paged_sweep_key(*, b: int, kvh: int, g: int, dh: int, ctx: int, dtype,
-                    backend: Optional[str] = None, **_ignored) -> str:
-    return (f"paged-sweep-b{b}kvh{kvh}g{g}dh{dh}ctx{ctx}"
+                    backend: Optional[str] = None,
+                    quantized: bool = False, **_ignored) -> str:
+    tag = "q8" if quantized else ""
+    return (f"paged{tag}-sweep-b{b}kvh{kvh}g{g}dh{dh}ctx{ctx}"
             f"-{_dtype_name(dtype)}-{_backend(backend)}")
 
 
@@ -980,7 +993,8 @@ def _paged_probe(cand, interpret, *, b, kvh, g, dh, ctx, dtype, **facts):
     return fn, args
 
 
-def _paged_record_keys(scores, *, b, kvh, g, dh, dtype, backend=None,
+def _paged_record_keys(scores, *, b, kvh, g, dh, dtype, ctx=0, backend=None,
+                       quantized: bool = False,
                        **facts) -> Dict[str, Tuple[Tuple, float]]:
     """One lookup record per swept page_size: whatever page_size the pool
     was built with, dispatch finds its winning fetch granularity."""
@@ -992,8 +1006,28 @@ def _paged_record_keys(scores, *, b, kvh, g, dh, dtype, backend=None,
         if cur is None or (s, ppb) < (cur[1], cur[0][1]):
             per_ps[ps] = ((ps, ppb), s)
     return {paged_lookup_key(b=b, kvh=kvh, g=g, dh=dh, page_size=ps,
-                             dtype=dtype, backend=backend): rec
+                             ctx=ctx, dtype=dtype, backend=backend,
+                             quantized=quantized): rec
             for ps, rec in per_ps.items()}
+
+
+def _paged_neighbors(*, b: int, ctx: int = 0, **_facts
+                     ) -> List[Dict[str, Any]]:
+    """Nearby paged tune buckets, nearest first: the ctx bucket one/two
+    pow2 steps away (the shared-prefix scheduler's live context widths
+    vary request to request while the per-page fetch granularity barely
+    moves), then the batch scaled the same way (slot-count drift)."""
+    out: List[Dict[str, Any]] = []
+    cb = _paged_ctx_bucket(ctx)
+    for f in (2, 4):
+        if cb // f >= 1:
+            out.append({"ctx": cb // f})
+        out.append({"ctx": cb * f})
+    for f in (2, 4):
+        if b // f >= 1:
+            out.append({"b": b // f})
+        out.append({"b": b * f})
+    return out
 
 
 _PAGED_TUNE = TuneSpace(
@@ -1004,14 +1038,86 @@ _PAGED_TUNE = TuneSpace(
     default=lambda *, page_size, **f: (page_size, DEFAULT_PAGES_PER_BLOCK),
     lookup_key=paged_lookup_key,
     record_keys=_paged_record_keys,
+    neighbors=_paged_neighbors,
 )
 
 _PAGED_LAYOUT = ("q [B,1,H,Dh]; k/v_pages [P,ps,KVH,Dh]; page_table "
                  "[B,NP] i32; length [B] i32; k/v_new [B,1,KVH,Dh] "
                  "-> [B,1,H,Dh]")
 
+_PAGED_Q8_LAYOUT = (_PAGED_LAYOUT +
+                    "; int8 pages + k/v_scale [P,ps] f32 per-token scales")
 
-def _paged_heuristic(*, backend: Optional[str] = None, **_facts) -> str:
+
+# --- int8 tune space: same candidate grid, its own keys (the winning
+# fetch granularity differs when pages are 4x smaller on the wire), a
+# probe over int8 pages + f32 scales, and a VMEM model that prices the
+# int8 tiles at 1 byte plus their f32 dequantized copies
+
+def _paged_q8_sweep_key(**facts) -> str:
+    facts.pop("quantized", None)
+    return paged_sweep_key(quantized=True, **facts)
+
+
+def _paged_q8_lookup_key(**facts) -> str:
+    facts.pop("quantized", None)
+    return paged_lookup_key(quantized=True, **facts)
+
+
+def _paged_q8_record_keys(scores, **facts) -> Dict[str, Tuple[Tuple, float]]:
+    facts.pop("quantized", None)
+    return _paged_record_keys(scores, quantized=True, **facts)
+
+
+def _paged_q8_vmem(cand, itemsize, *, g, dh, **facts) -> int:
+    ps, ppb = cand
+    io = 2 * ((2 * g * dh + 2 * dh) * itemsize     # q, out, k/v_new
+              + 2 * ppb * ps * dh                  # int8 k/v page tiles
+              + 2 * ppb * ps * 4)                  # f32 scale tiles
+    compute = (2 * ppb * ps * dh + g * ps + g * dh + 2 * g) * 4
+    return io + compute
+
+
+def _paged_q8_probe_fn(q4, kp, vp, ksc, vsc, pt, lens, kn, vn, *, ppb: int,
+                       interpret: bool):
+    from repro.kernels.paged_decode import paged_decode_attention_q8_grouped
+    return paged_decode_attention_q8_grouped(q4, kp, vp, ksc, vsc, pt, lens,
+                                             kn, vn, pages_per_block=ppb,
+                                             interpret=interpret)
+
+
+def _paged_q8_probe(cand, interpret, *, b, kvh, g, dh, ctx, dtype, **facts):
+    ps, ppb = cand
+    np_w = max(-(-ctx // ps), 1)
+    p_total = b * np_w + 1
+    fn = functools.partial(_paged_q8_probe_fn, ppb=ppb, interpret=interpret)
+    kp_s = jax.ShapeDtypeStruct((p_total, ps, kvh, dh), jnp.int8)
+    sc_s = jax.ShapeDtypeStruct((p_total, ps), jnp.float32)
+    kn_s = jax.ShapeDtypeStruct((b, kvh, dh), dtype)
+    args = (jax.ShapeDtypeStruct((b, kvh, g, dh), dtype), kp_s, kp_s,
+            sc_s, sc_s,
+            jax.ShapeDtypeStruct((b, np_w), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32), kn_s, kn_s)
+    return fn, args
+
+
+_PAGED_Q8_TUNE = TuneSpace(
+    key=_paged_q8_sweep_key,
+    candidates=lambda **f: DEFAULT_PAGED_CANDIDATES,
+    vmem=_paged_q8_vmem,
+    probe=_paged_q8_probe,
+    default=lambda *, page_size, **f: (page_size, DEFAULT_PAGES_PER_BLOCK),
+    lookup_key=_paged_q8_lookup_key,
+    record_keys=_paged_q8_record_keys,
+    neighbors=_paged_neighbors,
+)
+
+
+def _paged_heuristic(*, backend: Optional[str] = None,
+                     quantized: bool = False, **_facts) -> str:
+    if quantized:
+        return ("pallas_paged_q8" if _backend(backend) == "tpu"
+                else "jnp_paged_q8")
     return "pallas_paged" if _backend(backend) == "tpu" else "jnp_paged"
 
 
@@ -1019,8 +1125,15 @@ register_family("paged_decode", heuristic=_paged_heuristic,
                 layout=_PAGED_LAYOUT)
 
 
+def _paged_ctx_fact(page_table, k_pages) -> int:
+    """Static context capacity of a dispatch site: table width x page
+    size (the live length is traced; capacity is the trace-time bound)."""
+    return page_table.shape[1] * k_pages.shape[1]
+
+
 @register_impl("paged_decode", "pallas_paged", tune=_PAGED_TUNE,
-               layout=_PAGED_LAYOUT, oracle="repro.kernels.ref.paged_decode")
+               layout=_PAGED_LAYOUT, oracle="repro.kernels.ref.paged_decode",
+               supports=lambda quantized=False, **f: not quantized)
 def _run_pallas_paged(q, k_pages, v_pages, page_table, length, k_new, v_new,
                       *, pages_per_block: Optional[int] = None,
                       interpret: Optional[bool] = None):
@@ -1029,20 +1142,56 @@ def _run_pallas_paged(q, k_pages, v_pages, page_table, length, k_new, v_new,
     ppb = pages_per_block or best(
         "paged_decode", b=q.shape[0], kvh=k_pages.shape[2],
         g=q.shape[2] // k_pages.shape[2], dh=q.shape[-1],
-        page_size=k_pages.shape[1], dtype=q.dtype)[1]
+        page_size=k_pages.shape[1], ctx=_paged_ctx_fact(page_table, k_pages),
+        dtype=q.dtype)[1]
     return paged_decode_attention(q, k_pages, v_pages, page_table, length,
                                   k_new, v_new, pages_per_block=ppb,
                                   interpret=interpret)
 
 
 @register_impl("paged_decode", "jnp_paged", layout=_PAGED_LAYOUT,
-               oracle="repro.kernels.ref.paged_decode")
+               oracle="repro.kernels.ref.paged_decode",
+               supports=lambda quantized=False, **f: not quantized)
 def _run_jnp_paged(q, k_pages, v_pages, page_table, length, k_new, v_new,
                    *, pages_per_block=None, interpret=None):
     """gather-based masked-dense reference (oracle/fallback)."""
     from repro.models.attention import paged_decode_jnp
     return paged_decode_jnp(q, k_pages, v_pages, page_table, length,
                             k_new, v_new)
+
+
+@register_impl("paged_decode", "pallas_paged_q8", tune=_PAGED_Q8_TUNE,
+               layout=_PAGED_Q8_LAYOUT,
+               oracle="repro.kernels.ref.paged_decode_q8",
+               supports=lambda quantized=False, **f: quantized)
+def _run_pallas_paged_q8(q, k_pages, v_pages, page_table, length, k_new,
+                         v_new, *, k_scale, v_scale,
+                         pages_per_block: Optional[int] = None,
+                         interpret: Optional[bool] = None):
+    """Pallas paged decode over int8 pages — dequant in VMEM post-DMA."""
+    from repro.kernels.paged_decode import paged_decode_attention_q8
+    ppb = pages_per_block or best(
+        "paged_decode", impl="pallas_paged_q8",
+        b=q.shape[0], kvh=k_pages.shape[2],
+        g=q.shape[2] // k_pages.shape[2], dh=q.shape[-1],
+        page_size=k_pages.shape[1], ctx=_paged_ctx_fact(page_table, k_pages),
+        dtype=q.dtype)[1]
+    return paged_decode_attention_q8(q, k_pages, v_pages, page_table,
+                                     length, k_new, v_new, k_scale=k_scale,
+                                     v_scale=v_scale, pages_per_block=ppb,
+                                     interpret=interpret)
+
+
+@register_impl("paged_decode", "jnp_paged_q8", layout=_PAGED_Q8_LAYOUT,
+               oracle="repro.kernels.ref.paged_decode_q8",
+               supports=lambda quantized=False, **f: quantized)
+def _run_jnp_paged_q8(q, k_pages, v_pages, page_table, length, k_new, v_new,
+                      *, k_scale, v_scale, pages_per_block=None,
+                      interpret=None):
+    """gather + dequantize masked-dense reference for the int8 pages."""
+    from repro.models.attention import paged_decode_jnp
+    return paged_decode_jnp(q, k_pages, v_pages, page_table, length,
+                            k_new, v_new, k_scale=k_scale, v_scale=v_scale)
 
 
 # ===========================================================================

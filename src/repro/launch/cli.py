@@ -9,6 +9,9 @@ with divergent spellings; these helpers make the surface uniform:
   grammar), ``--tune`` (run the canonical family autotune suite first;
   warm caches make it free), and the deprecated ``--attn-impl`` single
   name, which every tool now warns about through ONE shared path.
+* :func:`add_kv_args` — ``--kv-dtype {fp32,bf16,int8}`` and
+  ``--no-prefix-cache`` over the paged KV cache (consume with
+  :func:`kv_config_kwargs`, which validates eagerly).
 * :func:`add_cache_args` — ``--cache-dir`` / ``--no-cache`` over the
   compile-artifact cache.
 * :func:`add_json_args` — ``--json PATH`` machine-readable summary.
@@ -50,6 +53,42 @@ def add_impl_args(ap: argparse.ArgumentParser, *, tune: bool = True,
                              "(pins the attention impl; paged_decode pins "
                              "the Pallas paged kernel on the decode side "
                              "only)")
+
+
+def add_kv_args(ap: argparse.ArgumentParser) -> None:
+    """``--kv-dtype`` / ``--no-prefix-cache`` (paged KV cache storage)."""
+    ap.add_argument("--kv-dtype", default=None,
+                    choices=["fp32", "bf16", "int8"],
+                    help="paged KV page storage dtype (default: the model "
+                         "dtype); int8 stores quantized codes with "
+                         "per-token f32 scales and decodes through the "
+                         "q8 paged kernels (needs --page-size)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the shared-prefix radix cache (paged "
+                         "engines dedupe shared prompt prefixes by "
+                         "default: prefill once, map the pages read-only, "
+                         "copy-on-write at the fork page)")
+
+
+def kv_config_kwargs(args: argparse.Namespace,
+                     ap: Optional[argparse.ArgumentParser] = None
+                     ) -> Dict[str, object]:
+    """ServeConfig kwargs from the KV flags, validated eagerly.
+
+    ``--kv-dtype`` without ``--page-size`` is a usage error (dense caches
+    keep the model dtype; silently ignoring the flag would misreport
+    bytes/token).  The Engine re-validates impl-pin compatibility — an fp
+    paged pin on an int8 engine raises there, never falls through.
+    """
+    kv_dtype = getattr(args, "kv_dtype", None)
+    if kv_dtype and not getattr(args, "page_size", 0):
+        msg = ("--kv-dtype needs a paged KV cache: pass --page-size too "
+               "(dense caches keep the model dtype)")
+        if ap is not None:
+            ap.error(msg)
+        raise ValueError(msg)
+    return {"kv_dtype": kv_dtype,
+            "prefix_cache": not getattr(args, "no_prefix_cache", False)}
 
 
 def add_cache_args(ap: argparse.ArgumentParser) -> None:
@@ -116,21 +155,23 @@ def run_tune_suite(session=None, *, smoke: bool = True,
     tunable family (see ``repro.core.perf_report.FAMILY_SUITE``) through
     one session.  Warm caches resolve everything from the persisted tune
     table — zero sweeps, zero lowerings."""
-    from repro.core.perf_report import FAMILY_SUITE, suite_candidates
+    from repro.core.perf_report import (FAMILY_SUITE, suite_candidates,
+                                        suite_family)
     from repro.kernels import registry
     if session is None:
         from repro.core.session import ProfileSession
         session = ProfileSession()
     out: Dict[str, Dict] = {}
     cands = suite_candidates(smoke)
-    for family, facts in FAMILY_SUITE.items():
-        rec = registry.autotune(family, session, candidates=cands[family],
-                                **facts)
-        out[family] = {"key": rec.key, "choice": list(rec.choice),
-                       "score_us": rec.score_s * 1e6, "swept": rec.swept,
-                       "lowerings": rec.lowerings}
+    for cell in FAMILY_SUITE:
+        family, impl, facts = suite_family(cell)
+        rec = registry.autotune(family, session, impl=impl,
+                                candidates=cands[cell], **facts)
+        out[cell] = {"key": rec.key, "choice": list(rec.choice),
+                     "score_us": rec.score_s * 1e6, "swept": rec.swept,
+                     "lowerings": rec.lowerings}
         if verbose:
             src = "swept" if rec.swept else "tune table (warm)"
-            print(f"[tune] {family:>13}: choice={tuple(rec.choice)} "
+            print(f"[tune] {cell:>15}: choice={tuple(rec.choice)} "
                   f"[{src}, {rec.lowerings} lowerings]")
     return out

@@ -42,6 +42,11 @@ def main(argv=None) -> int:
                     help="KV pool capacity in pages (default: dense "
                          "worst case + segment headroom; size from "
                          "expected traffic to actually save memory)")
+    cli.add_kv_args(ap)
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared system-prompt tokens "
+                         "to every synthetic request (exercises the "
+                         "prefix cache: the prefix prefills once)")
     ap.add_argument("--instrument", action="store_true",
                     help="probe serve regions through PerfCtr and report")
     ap.add_argument("--ckpt-dir", default=None)
@@ -79,7 +84,8 @@ def main(argv=None) -> int:
         temperature=args.temperature,
         admission_chunk=args.admission_chunk,
         attn_impl=args.attn_impl, impls=impls,
-        page_size=args.page_size, pool_pages=args.pool_pages))
+        page_size=args.page_size, pool_pages=args.pool_pages,
+        **cli.kv_config_kwargs(args, ap)))
     if impls:
         print(f"[serve] kernel impls pinned: {impls}")
     if args.tune:
@@ -96,17 +102,23 @@ def main(argv=None) -> int:
               f"({'swept' if rec.swept else 'warm from tune table'}, "
               f"{rec.lowerings} lowerings)")
         if args.page_size:
+            # int8 engines decode through the q8 impls, which have their
+            # own tune space — sweep the impl that will actually run
+            paged_impl = "pallas_paged_q8" if eng.quantized else None
             rec = registry.autotune(
-                "paged_decode", sess, b=args.slots, kvh=cfg.num_kv_heads,
-                g=cfg.num_heads // cfg.num_kv_heads, dh=head_dim,
-                ctx=args.max_seq, dtype=lm.dtype)
+                "paged_decode", sess, impl=paged_impl, b=args.slots,
+                kvh=cfg.num_kv_heads, g=cfg.num_heads // cfg.num_kv_heads,
+                dh=head_dim, ctx=args.max_seq, dtype=lm.dtype,
+                quantized=eng.quantized)
             print(f"[serve] paged decode tuned: (ps, ppb)={rec.choice} "
                   f"({'swept' if rec.swept else 'warm from tune table'}, "
                   f"{rec.lowerings} lowerings)")
         print(f"[serve] {sess.stats()}")
     if eng.paged:
         print(f"[serve] paged KV cache: page_size={args.page_size} "
-              f"pool_pages={eng.pool_pages} table_width={eng.table_width}")
+              f"pool_pages={eng.pool_pages} table_width={eng.table_width} "
+              f"kv_dtype={args.kv_dtype or 'model'} "
+              f"prefix_cache={'on' if not args.no_prefix_cache else 'off'}")
     ctr = None
     if args.instrument:
         from repro.core.perfctr import PerfCtr
@@ -116,8 +128,10 @@ def main(argv=None) -> int:
 
     sched = BatchScheduler(eng)
     rng = np.random.default_rng(0)
+    shared = rng.integers(1, cfg.vocab, size=args.shared_prefix).tolist()
     for rid in range(args.requests):
-        prompt = rng.integers(1, cfg.vocab, size=args.prompt_len).tolist()
+        prompt = shared + rng.integers(1, cfg.vocab,
+                                       size=args.prompt_len).tolist()
         sched.submit(Request(rid=rid, prompt=prompt,
                              max_new_tokens=args.max_new))
     t0 = time.perf_counter()
@@ -131,6 +145,14 @@ def main(argv=None) -> int:
     print(f"[serve] segments={sched.metrics['segments']:.0f} "
           f"admissions={sched.metrics['admissions']:.0f} "
           f"host_syncs={eng.host_syncs}{ttft_s}")
+    if sched.pool is not None:
+        m = sched.metrics
+        hit = (m["prompt_tokens"] - m["prefilled_tokens"]) \
+            / max(m["prompt_tokens"], 1)
+        print(f"[serve] prefix cache: hit_rate={hit:.2f} "
+              f"pages_shared={m['pages_shared']:.0f} "
+              f"cow_copies={m['cow_copies']:.0f} "
+              f"occupancy={sched.pool.occupancy():.2f}")
     for rid in sorted(done)[:4]:
         print(f"  req {rid}: {done[rid].generated[:12]}")
     if ctr is not None:
@@ -146,6 +168,17 @@ def main(argv=None) -> int:
                                  if ttfts else None),
                 "segments": sched.metrics["segments"],
                 "admissions": sched.metrics["admissions"],
+                "kv_dtype": args.kv_dtype,
+                "prefix_cache": not args.no_prefix_cache,
+                "prefix_hit_rate": (
+                    (sched.metrics["prompt_tokens"]
+                     - sched.metrics["prefilled_tokens"])
+                    / max(sched.metrics["prompt_tokens"], 1)
+                    if sched.pool is not None else None),
+                "pages_shared": sched.metrics["pages_shared"],
+                "cow_copies": sched.metrics["cow_copies"],
+                "pool_occupancy": (sched.pool.occupancy()
+                                   if sched.pool is not None else None),
             }, fh, indent=2, sort_keys=True)
         print(f"[serve] wrote {args.json}")
     return 0

@@ -29,7 +29,7 @@ __all__ = ["AttnConfig", "init_attn", "attn_specs", "attention",
            "KVCache", "init_kv_cache", "decode_attention",
            "prefill_into_cache", "PagedKVCache", "init_paged_kv_cache",
            "prefill_into_paged_cache", "paged_decode_attention_token",
-           "paged_decode_jnp"]
+           "paged_decode_jnp", "quantize_kv_rows", "dequantize_gathered"]
 
 NEG_INF = -2.0e38
 
@@ -599,26 +599,70 @@ class PagedKVCache(NamedTuple):
     ``page_table[b, j]``.  Physical page 0 is the null page: unallocated
     table entries point at it, and writes routed there are trash by
     convention (never read — attention masks by ``length``).
+
+    int8 storage: when ``k_scale``/``v_scale`` are present the pages hold
+    int8 codes and the scales hold one f32 dequant factor per TOKEN ROW
+    (``[P, page_size]``, amax over that token's [KVH, Dh] block / 127).
+    Per-row scales mean appends never requantize resident tokens, and the
+    paged-decode kernel dequantizes right after the page DMA — HBM
+    traffic and pool bytes drop ~4x vs fp32 (2x vs bf16) for the same
+    token capacity.
     """
 
-    k_pages: jnp.ndarray     # [P, page_size, KVH, Dh]
+    k_pages: jnp.ndarray     # [P, page_size, KVH, Dh] (fp, or int8 codes)
     v_pages: jnp.ndarray     # [P, page_size, KVH, Dh]
     page_table: jnp.ndarray  # [B, NP] int32 physical page ids
     length: jnp.ndarray      # [B] int32 — tokens filled so far, per row
+    k_scale: Optional[jnp.ndarray] = None   # [P, page_size] f32 (int8 only)
+    v_scale: Optional[jnp.ndarray] = None
 
     @property
     def page_size(self) -> int:
         return self.k_pages.shape[-3]
 
+    @property
+    def quantized(self) -> bool:
+        return self.k_scale is not None
+
+
+KV_QUANT_EPS = 1e-8
+
+
+def quantize_kv_rows(seq: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-token-row int8: seq [..., KVH, Dh] -> (codes int8,
+    scale f32 [...]) with scale = amax over the trailing [KVH, Dh] / 127."""
+    f = seq.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(f), axis=(-2, -1))
+    scale = jnp.maximum(amax, KV_QUANT_EPS) / 127.0
+    codes = jnp.clip(jnp.round(f / scale[..., None, None]), -127, 127)
+    return codes.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_gathered(gathered: jnp.ndarray, scale: jnp.ndarray,
+                        dtype=jnp.float32) -> jnp.ndarray:
+    """Dequantize gathered int8 pages: gathered [..., ps, KVH, Dh] codes,
+    scale [..., ps] -> fp values in ``dtype``."""
+    return (gathered.astype(jnp.float32)
+            * scale.astype(jnp.float32)[..., None, None]).astype(dtype)
+
 
 def init_paged_kv_cache(batch: int, num_pages: int, table_width: int,
                         page_size: int, cfg: AttnConfig,
-                        dtype=jnp.bfloat16) -> PagedKVCache:
+                        dtype=jnp.bfloat16,
+                        kv_dtype=None) -> PagedKVCache:
+    """``kv_dtype`` overrides the page storage dtype; ``jnp.int8`` turns
+    on quantized storage (per-token-row f32 scales ride along)."""
+    kv_dtype = dtype if kv_dtype is None else kv_dtype
     shape = (num_pages, page_size, cfg.num_kv_heads, cfg.head_dim)
+    quantized = jnp.dtype(kv_dtype) == jnp.dtype(jnp.int8)
+    scale = (jnp.zeros((num_pages, page_size), jnp.float32)
+             if quantized else None)
     return PagedKVCache(
-        k_pages=jnp.zeros(shape, dtype), v_pages=jnp.zeros(shape, dtype),
+        k_pages=jnp.zeros(shape, kv_dtype),
+        v_pages=jnp.zeros(shape, kv_dtype),
         page_table=jnp.zeros((batch, table_width), jnp.int32),
-        length=jnp.zeros((batch,), jnp.int32))
+        length=jnp.zeros((batch,), jnp.int32),
+        k_scale=scale, v_scale=scale)
 
 
 def _scatter_pages(pages: jnp.ndarray, page_table: jnp.ndarray,
@@ -643,26 +687,165 @@ def _scatter_pages(pages: jnp.ndarray, page_table: jnp.ndarray,
         tiles.reshape(b * npp_eff, ps, kvh, dh).astype(pages.dtype))
 
 
+def _scatter_scales(scales: jnp.ndarray, page_table: jnp.ndarray,
+                    rows: jnp.ndarray) -> jnp.ndarray:
+    """Page-tile twin of :func:`_scatter_pages` for [B,S] per-token scales
+    landing in the [P, ps] scale pool."""
+    b, s = rows.shape
+    ps = scales.shape[1]
+    pad = (-s) % ps
+    if pad:
+        rows = jnp.pad(rows, ((0, 0), (0, pad)))
+    npp_eff = min(rows.shape[1] // ps, page_table.shape[1])
+    tiles = rows[:, :npp_eff * ps].reshape(b, npp_eff, ps)
+    ids = page_table[:, :npp_eff].reshape(-1)
+    return scales.at[ids].set(
+        tiles.reshape(b * npp_eff, ps).astype(scales.dtype))
+
+
+def _scatter_pages_at(pages: jnp.ndarray, page_table: jnp.ndarray,
+                      seq: jnp.ndarray, start: jnp.ndarray,
+                      count: jnp.ndarray) -> jnp.ndarray:
+    """Token-granular page scatter: token t of row b lands at logical
+    position ``start[b] + t`` (suffix prefill after a prefix-cache hit —
+    the shared prefix's pages are already populated and MUST NOT be
+    rewritten).  Tokens with ``t >= count[b]`` (padding) are routed to the
+    null page."""
+    b, s, kvh, dh = seq.shape
+    ps = pages.shape[1]
+    np_w = page_table.shape[1]
+    pos = start[:, None] + jnp.arange(s)[None, :]              # [B,S]
+    logical = jnp.minimum(pos // ps, np_w - 1)
+    ids = jnp.take_along_axis(page_table, logical, axis=1)     # [B,S]
+    ids = jnp.where(jnp.arange(s)[None, :] < count[:, None], ids, 0)
+    offs = pos % ps
+    return pages.at[ids, offs].set(seq.astype(pages.dtype))
+
+
+def _scatter_scales_at(scales: jnp.ndarray, page_table: jnp.ndarray,
+                       rows: jnp.ndarray, start: jnp.ndarray,
+                       count: jnp.ndarray) -> jnp.ndarray:
+    """Token-granular twin of :func:`_scatter_scales`."""
+    b, s = rows.shape
+    ps = scales.shape[1]
+    np_w = page_table.shape[1]
+    pos = start[:, None] + jnp.arange(s)[None, :]
+    logical = jnp.minimum(pos // ps, np_w - 1)
+    ids = jnp.take_along_axis(page_table, logical, axis=1)
+    ids = jnp.where(jnp.arange(s)[None, :] < count[:, None], ids, 0)
+    return scales.at[ids, pos % ps].set(rows.astype(scales.dtype))
+
+
+def _gather_ctx(cache: PagedKVCache, dtype) -> Tuple[jnp.ndarray,
+                                                     jnp.ndarray]:
+    """Dense [B, NP*ps, KVH, Dh] view of every page each row's table
+    lists, dequantized when the cache stores int8 codes."""
+    b = cache.page_table.shape[0]
+    ps, kvh, dh = cache.k_pages.shape[1:]
+    np_w = cache.page_table.shape[1]
+    k_g = cache.k_pages[cache.page_table]       # [B, NP, ps, KVH, Dh]
+    v_g = cache.v_pages[cache.page_table]
+    if cache.quantized:
+        k_g = dequantize_gathered(k_g, cache.k_scale[cache.page_table],
+                                  dtype)
+        v_g = dequantize_gathered(v_g, cache.v_scale[cache.page_table],
+                                  dtype)
+    return (k_g.reshape(b, np_w * ps, kvh, dh).astype(dtype),
+            v_g.reshape(b, np_w * ps, kvh, dh).astype(dtype))
+
+
+def _suffix_prefill_attend(p: Params, x: jnp.ndarray, cfg: AttnConfig,
+                           cache: PagedKVCache, prefix_len: jnp.ndarray,
+                           lengths: jnp.ndarray,
+                           positions3: Optional[jnp.ndarray] = None):
+    """Prefill of a DIVERGENT SUFFIX against an already-resident prefix.
+
+    Query token i of row b sits at absolute position ``prefix_len[b]+i``:
+    it attends every resident prefix key (gathered from the slot's pages,
+    dequantized if int8) plus the causal span of the suffix itself.
+    Returns (attn out, k_suffix, v_suffix) — only suffix K/V need to be
+    written back, the prefix pages are shared/read-only.
+    """
+    b, s, _ = x.shape
+    positions = prefix_len[:, None] + jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, x, cfg, positions, positions3)
+    k_ctx, v_ctx = _gather_ctx(cache, q.dtype)
+    ctx_w = k_ctx.shape[1]
+    # joint mask over [ctx | suffix] keys: ctx key j real iff j < prefix;
+    # suffix key t visible iff t <= i (causal) and t < suffix length
+    ctx_ok = jnp.broadcast_to(
+        (jnp.arange(ctx_w)[None, :] < prefix_len[:, None])[:, None, :],
+        (b, s, ctx_w))
+    suf_ok = ((jnp.arange(s)[None, :] <= jnp.arange(s)[:, None])[None]
+              & (jnp.arange(s)[None, None, :] < lengths[:, None, None]))
+    mask = jnp.concatenate([ctx_ok, suf_ok], axis=-1)   # [B, S, ctx+S]
+    k_all = jnp.concatenate([k_ctx, k], axis=1)
+    v_all = jnp.concatenate([v_ctx, v], axis=1)
+    scores = _gqa_scores(q, k_all).astype(jnp.float32)
+    scores = jnp.where(mask[:, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return _gqa_out(probs, v_all), k, v
+
+
 def prefill_into_paged_cache(p: Params, x: jnp.ndarray, cfg: AttnConfig,
                              cache: PagedKVCache,
                              positions3: Optional[jnp.ndarray] = None,
-                             lengths: Optional[jnp.ndarray] = None
+                             lengths: Optional[jnp.ndarray] = None,
+                             prefix_len: Optional[jnp.ndarray] = None
                              ) -> Tuple[jnp.ndarray, PagedKVCache]:
     """:func:`prefill_into_cache` with the K/V landing in pages.
 
     Identical attention compute (same dispatch, same ragged ``lengths``
     masking); only the cache write differs — each row's K/V tokens are
     scattered into the pages its table already lists (the pool allocates
-    them before the prefill program runs).
+    them before the prefill program runs).  int8 caches quantize each
+    token row on the way in (one f32 scale per token).
+
+    ``prefix_len`` [B] switches to SUFFIX mode (prefix-cache hit): ``x``
+    holds only the divergent suffix, queries run at absolute positions
+    ``prefix_len + i`` against resident-prefix + suffix keys, and the
+    scatter is token-granular starting at ``prefix_len`` so the shared
+    prefix pages are never rewritten.
     """
     b, s, _ = x.shape
-    out, k, v = _prefill_qkv_attend(p, x, cfg, positions3, lengths)
-    newk = _scatter_pages(cache.k_pages, cache.page_table, k)
-    newv = _scatter_pages(cache.v_pages, cache.page_table, v)
-    new_len = (_row_lengths(lengths, b) if lengths is not None
-               else jnp.full((b,), s, jnp.int32))
+    if prefix_len is None:
+        out, k, v = _prefill_qkv_attend(p, x, cfg, positions3, lengths)
+        suffix_len = (_row_lengths(lengths, b) if lengths is not None
+                      else jnp.full((b,), s, jnp.int32))
+        new_len = suffix_len
+        start = jnp.zeros((b,), jnp.int32)
+    else:
+        prefix_len = _row_lengths(prefix_len, b)
+        suffix_len = (_row_lengths(lengths, b) if lengths is not None
+                      else jnp.full((b,), s, jnp.int32))
+        out, k, v = _suffix_prefill_attend(p, x, cfg, cache, prefix_len,
+                                           suffix_len, positions3)
+        new_len = prefix_len + suffix_len
+        start = prefix_len
+    if cache.quantized:
+        k_codes, k_sc = quantize_kv_rows(k)
+        v_codes, v_sc = quantize_kv_rows(v)
+        newk = _scatter_pages_at(cache.k_pages, cache.page_table, k_codes,
+                                 start, suffix_len)
+        newv = _scatter_pages_at(cache.v_pages, cache.page_table, v_codes,
+                                 start, suffix_len)
+        new_ks = _scatter_scales_at(cache.k_scale, cache.page_table, k_sc,
+                                    start, suffix_len)
+        new_vs = _scatter_scales_at(cache.v_scale, cache.page_table, v_sc,
+                                    start, suffix_len)
+    elif prefix_len is None:
+        newk = _scatter_pages(cache.k_pages, cache.page_table, k)
+        newv = _scatter_pages(cache.v_pages, cache.page_table, v)
+        new_ks, new_vs = cache.k_scale, cache.v_scale
+    else:
+        newk = _scatter_pages_at(cache.k_pages, cache.page_table, k,
+                                 start, suffix_len)
+        newv = _scatter_pages_at(cache.v_pages, cache.page_table, v,
+                                 start, suffix_len)
+        new_ks, new_vs = cache.k_scale, cache.v_scale
     new_cache = PagedKVCache(k_pages=newk, v_pages=newv,
-                             page_table=cache.page_table, length=new_len)
+                             page_table=cache.page_table, length=new_len,
+                             k_scale=new_ks, v_scale=new_vs)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return y, new_cache
 
@@ -670,19 +853,28 @@ def prefill_into_paged_cache(p: Params, x: jnp.ndarray, cfg: AttnConfig,
 def paged_decode_jnp(q: jnp.ndarray, k_pages: jnp.ndarray,
                      v_pages: jnp.ndarray, page_table: jnp.ndarray,
                      length: jnp.ndarray, k_new: jnp.ndarray,
-                     v_new: jnp.ndarray) -> jnp.ndarray:
-    """The gather-based paged decode reference (dispatch ``jnp_paged``).
+                     v_new: jnp.ndarray,
+                     k_scale: Optional[jnp.ndarray] = None,
+                     v_scale: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """The gather-based paged decode reference (dispatch ``jnp_paged``;
+    with scales, ``jnp_paged_q8``).
 
     Gathers each row's listed pages into a dense [B, NP*ps, KVH, Dh]
-    context view and runs the SAME two-part softmax as the dense decode
-    path (:func:`_decode_token_attend`) — the masked-dense oracle the
-    Pallas kernel is checked against, and the interpret-mode fallback.
+    context view (dequantizing int8 codes with the per-token scales) and
+    runs the SAME two-part softmax as the dense decode path
+    (:func:`_decode_token_attend`) — the masked-dense oracle the Pallas
+    kernels are checked against, and the interpret-mode fallback.
     """
     b = q.shape[0]
     ps, kvh, dh = k_pages.shape[1], k_pages.shape[2], k_pages.shape[3]
     np_w = page_table.shape[1]
-    k_ctx = k_pages[page_table].reshape(b, np_w * ps, kvh, dh)
-    v_ctx = v_pages[page_table].reshape(b, np_w * ps, kvh, dh)
+    k_ctx = k_pages[page_table]
+    v_ctx = v_pages[page_table]
+    if k_scale is not None:
+        k_ctx = dequantize_gathered(k_ctx, k_scale[page_table], q.dtype)
+        v_ctx = dequantize_gathered(v_ctx, v_scale[page_table], q.dtype)
+    k_ctx = k_ctx.reshape(b, np_w * ps, kvh, dh)
+    v_ctx = v_ctx.reshape(b, np_w * ps, kvh, dh)
     valid = jnp.arange(np_w * ps)[None, :] < length[:, None]
     return _decode_token_attend(q, k_ctx, v_ctx, valid, k_new, v_new)
 
@@ -691,7 +883,9 @@ def paged_decode_attention_token(p: Params, x: jnp.ndarray, cfg: AttnConfig,
                                  k_pages: jnp.ndarray, v_pages: jnp.ndarray,
                                  page_table: jnp.ndarray,
                                  length: jnp.ndarray,
-                                 positions3: Optional[jnp.ndarray] = None
+                                 positions3: Optional[jnp.ndarray] = None,
+                                 k_scale: Optional[jnp.ndarray] = None,
+                                 v_scale: Optional[jnp.ndarray] = None
                                  ) -> Tuple[jnp.ndarray, jnp.ndarray,
                                             jnp.ndarray]:
     """One-token decode against READ-ONLY pages: the paged twin of
@@ -699,17 +893,21 @@ def paged_decode_attention_token(p: Params, x: jnp.ndarray, cfg: AttnConfig,
 
     Attention touches only the pages each row's table lists — bytes/token
     is O(length), not O(max_seq).  Which implementation runs (the Pallas
-    paged kernel or the gather reference) is a registry decision
-    (``registry.select("paged_decode")``); the new token's K/V are
-    returned for the caller to scatter into its page.
+    paged kernel or the gather reference, in their fp or int8-dequant
+    variants) is a registry decision (``registry.select("paged_decode",
+    quantized=...)``); the new token's K/V are returned UNQUANTIZED for
+    the caller to scatter into its page (quantizing on the way if the
+    cache is int8).
     """
     b = x.shape[0]
     length = _row_lengths(length, b)
     positions = length[:, None]
     q, k, v = _project_qkv(p, x, cfg, positions, positions3)
     from repro.kernels import registry
-    impl = registry.select("paged_decode")
+    quantized = k_scale is not None
+    impl = registry.select("paged_decode", quantized=quantized)
+    kw = dict(k_scale=k_scale, v_scale=v_scale) if quantized else {}
     out = registry.run("paged_decode", q, k_pages, v_pages, page_table,
-                       length, k, v, impl=impl)
+                       length, k, v, impl=impl, **kw)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     return y, k, v

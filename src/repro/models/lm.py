@@ -371,13 +371,16 @@ class LM:
     def init_decode_state(self, batch_size: int, max_seq: int,
                           page_size: int = 0,
                           num_pages: Optional[int] = None,
-                          table_width: Optional[int] = None) -> Any:
+                          table_width: Optional[int] = None,
+                          kv_dtype=None) -> Any:
         """Fresh decode state.  ``page_size > 0`` builds PAGED KV caches
         (attention-cache families only): a pool of ``num_pages`` pages of
         ``page_size`` tokens shared by all rows, addressed through per-row
         page tables of ``table_width`` logical pages (defaults provision
         the dense worst case — callers that know their traffic pass a
-        smaller pool, which is the whole point)."""
+        smaller pool, which is the whole point).  ``kv_dtype`` overrides
+        the page storage dtype (``jnp.int8`` = quantized pages with
+        per-token scales; paged caches only)."""
         cfg = self.cfg
         fam = cfg.family
         ac = cfg.attn_config()
@@ -385,12 +388,16 @@ class LM:
             raise ValueError(
                 f"paged KV caches need an attention-cache family, not {fam!r}"
                 " (recurrent states have no pages to swap)")
+        if kv_dtype is not None and page_size <= 0:
+            raise ValueError("kv_dtype needs a paged KV cache "
+                             "(page_size > 0)")
         if fam in ("dense", "moe", "vlm"):
             if page_size > 0:
                 nppr = -(-max_seq // page_size)
                 cache = attn_mod.init_paged_kv_cache(
                     batch_size, num_pages or batch_size * nppr + 1,
-                    table_width or nppr, page_size, ac, self.dtype)
+                    table_width or nppr, page_size, ac, self.dtype,
+                    kv_dtype=kv_dtype)
             else:
                 cache = attn_mod.init_kv_cache(batch_size, max_seq, ac,
                                                self.dtype)
@@ -458,6 +465,7 @@ class LM:
         cfg, feats = self.cfg, self.features
         tokens = batch["tokens"]
         lengths = batch.get("lengths")
+        prefix_len = batch.get("prefix_len")   # [B]: resident shared prefix
         x = self._embed(p, tokens, batch.get("patch_embeds"))
         fam = cfg.family
         if fam in ("dense", "moe", "vlm"):
@@ -467,7 +475,8 @@ class LM:
                 p["blocks"], x, bc, state["caches"], feats,
                 rules=self.rules, mesh=self.mesh, positions3=pos3,
                 block_fn=functools.partial(tf_mod.apply_block_prefill,
-                                           lengths=lengths))
+                                           lengths=lengths,
+                                           prefix_len=prefix_len))
             new_state = {"caches": new_caches}
         elif fam == "xlstm":
             xc = cfg.xlstm_config()

@@ -140,16 +140,25 @@ def apply_block_decode(p: Params, x: jnp.ndarray, cfg: BlockConfig,
 
 def apply_block_prefill(p: Params, x: jnp.ndarray, cfg: BlockConfig,
                         cache, *, rules=DEFAULT_RULES, mesh=None,
-                        positions3=None, lengths=None):
+                        positions3=None, lengths=None, prefix_len=None):
     """Prefill one block; ``cache`` may be dense (:class:`KVCache`) or
     paged (:class:`~repro.models.attention.PagedKVCache`) — the attention
-    compute is identical, only the K/V landing zone differs."""
-    prefill_fn = (attn_mod.prefill_into_paged_cache
-                  if isinstance(cache, attn_mod.PagedKVCache)
-                  else attn_mod.prefill_into_cache)
-    a, new_cache = prefill_fn(
-        p["attn"], _norm(x, p["ln1"], cfg), cfg.attn, cache,
-        positions3=positions3, lengths=lengths)
+    compute is identical, only the K/V landing zone differs.
+
+    ``prefix_len`` [B] (paged only) marks a resident shared prefix: ``x``
+    is the divergent suffix, attention spans prefix pages + suffix."""
+    paged = isinstance(cache, attn_mod.PagedKVCache)
+    if prefix_len is not None and not paged:
+        raise ValueError("prefix_len requires a paged KV cache "
+                         "(dense prefill has no resident prefix)")
+    if paged:
+        a, new_cache = attn_mod.prefill_into_paged_cache(
+            p["attn"], _norm(x, p["ln1"], cfg), cfg.attn, cache,
+            positions3=positions3, lengths=lengths, prefix_len=prefix_len)
+    else:
+        a, new_cache = attn_mod.prefill_into_cache(
+            p["attn"], _norm(x, p["ln1"], cfg), cfg.attn, cache,
+            positions3=positions3, lengths=lengths)
     h = x + a
     return h + _block_mlp(p, h, cfg, rules, mesh), new_cache
 
@@ -313,30 +322,61 @@ def _apply_stack_decode_paged(stacked: Params, x: jnp.ndarray,
     page = pt[rows, jnp.minimum(length // ps, np_w - 1)]
     off = length % ps
     n = jax.tree.leaves(stacked)[0].shape[0]
+    quantized = caches.quantized
 
-    def body(carry, scanned):
-        h, kst, vst = carry
-        i, layer_p = scanned
-        k_l = jax.lax.dynamic_index_in_dim(kst, i, 0, keepdims=False)
-        v_l = jax.lax.dynamic_index_in_dim(vst, i, 0, keepdims=False)
+    def attend(h, layer_p, k_l, v_l, ksc_l=None, vsc_l=None):
         a, k_t, v_t = attn_mod.paged_decode_attention_token(
             layer_p["attn"], _norm(h, layer_p["ln1"], cfg), cfg.attn,
-            k_l, v_l, pt, length, positions3=positions3)
+            k_l, v_l, pt, length, positions3=positions3,
+            k_scale=ksc_l, v_scale=vsc_l)
         h2 = h + a
-        y = h2 + _block_mlp(layer_p, h2, cfg, rules, mesh)
-        kst = kst.at[i, page, off].set(k_t[:, 0].astype(kst.dtype))
-        vst = vst.at[i, page, off].set(v_t[:, 0].astype(vst.dtype))
-        return (y, kst, vst), None
+        return h2 + _block_mlp(layer_p, h2, cfg, rules, mesh), k_t, v_t
+
+    if quantized:
+        # int8 cache: attend with the layer's scales, then quantize the
+        # fresh token's K/V row on the append write (one scale per row)
+        def body(carry, scanned):
+            h, kst, vst, ksc, vsc = carry
+            i, layer_p = scanned
+            k_l = jax.lax.dynamic_index_in_dim(kst, i, 0, keepdims=False)
+            v_l = jax.lax.dynamic_index_in_dim(vst, i, 0, keepdims=False)
+            ksc_l = jax.lax.dynamic_index_in_dim(ksc, i, 0, keepdims=False)
+            vsc_l = jax.lax.dynamic_index_in_dim(vsc, i, 0, keepdims=False)
+            y, k_t, v_t = attend(h, layer_p, k_l, v_l, ksc_l, vsc_l)
+            k_c, k_s = attn_mod.quantize_kv_rows(k_t[:, 0])
+            v_c, v_s = attn_mod.quantize_kv_rows(v_t[:, 0])
+            kst = kst.at[i, page, off].set(k_c.astype(kst.dtype))
+            vst = vst.at[i, page, off].set(v_c.astype(vst.dtype))
+            ksc = ksc.at[i, page, off].set(k_s.astype(ksc.dtype))
+            vsc = vsc.at[i, page, off].set(v_s.astype(vsc.dtype))
+            return (y, kst, vst, ksc, vsc), None
+
+        carry0 = (x, caches.k_pages, caches.v_pages,
+                  caches.k_scale, caches.v_scale)
+    else:
+        def body(carry, scanned):
+            h, kst, vst = carry
+            i, layer_p = scanned
+            k_l = jax.lax.dynamic_index_in_dim(kst, i, 0, keepdims=False)
+            v_l = jax.lax.dynamic_index_in_dim(vst, i, 0, keepdims=False)
+            y, k_t, v_t = attend(h, layer_p, k_l, v_l)
+            kst = kst.at[i, page, off].set(k_t[:, 0].astype(kst.dtype))
+            vst = vst.at[i, page, off].set(v_t[:, 0].astype(vst.dtype))
+            return (y, kst, vst), None
+
+        carry0 = (x, caches.k_pages, caches.v_pages)
 
     if features.scan_layers:
-        (y, kst, vst), _ = jax.lax.scan(
-            body, (x, caches.k_pages, caches.v_pages),
-            (jnp.arange(n), stacked))
+        (y, *pools), _ = jax.lax.scan(body, carry0, (jnp.arange(n), stacked))
     else:
-        y, kst, vst = x, caches.k_pages, caches.v_pages
+        carry = carry0
         for i in range(n):
             layer_p = jax.tree.map(lambda a: a[i], stacked)
-            (y, kst, vst), _ = body((y, kst, vst), (jnp.asarray(i), layer_p))
+            carry, _ = body(carry, (jnp.asarray(i), layer_p))
+        y, *pools = carry
+    kst, vst = pools[0], pools[1]
+    ksc, vsc = (pools[2], pools[3]) if quantized else (None, None)
     return y, attn_mod.PagedKVCache(k_pages=kst, v_pages=vst,
                                     page_table=caches.page_table,
-                                    length=caches.length + 1)
+                                    length=caches.length + 1,
+                                    k_scale=ksc, v_scale=vsc)

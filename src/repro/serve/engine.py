@@ -95,6 +95,20 @@ class ServeConfig:
     # pool capacity in pages (None -> dense worst case + segment headroom,
     # which is safe but savings-free; size from expected traffic instead)
     pool_pages: Optional[int] = None
+    # paged KV storage dtype: None keeps the model dtype; "fp32"/"bf16"
+    # store pages in that dtype; "int8" stores quantized codes with
+    # per-token f32 scales and decodes through the q8 kernel variants.
+    # Paged engines only — dense caches always keep the model dtype.
+    kv_dtype: Optional[str] = None
+    # shared-prefix radix cache (paged engines): admission maps already-
+    # resident prefix pages into the new slot read-only (refcounted,
+    # copy-on-write at the fork page) and prefills only the divergent
+    # suffix — N requests sharing a prompt prefix prefill it once
+    prefix_cache: bool = True
+
+
+#: ServeConfig.kv_dtype vocabulary -> page storage dtype
+KV_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
 
 
 @dataclasses.dataclass
@@ -143,6 +157,41 @@ class Engine:
                 "a paged_decode kernel pin was requested, but this engine "
                 "is dense (page_size=0) — the pin would silently measure "
                 "the dense path; set page_size too")
+        self.kv_dtype = None
+        if cfg.kv_dtype is not None:
+            if not self.paged:
+                raise ValueError(
+                    f"kv_dtype={cfg.kv_dtype!r} needs a paged KV cache "
+                    "(page_size > 0) — dense caches keep the model dtype")
+            if cfg.kv_dtype not in KV_DTYPES:
+                raise ValueError(
+                    f"unknown kv_dtype {cfg.kv_dtype!r}; choose from "
+                    f"{sorted(KV_DTYPES)}")
+            self.kv_dtype = KV_DTYPES[cfg.kv_dtype]
+        self.quantized = cfg.kv_dtype == "int8"
+        if self.paged:
+            # a paged_decode pin must match the page storage flavor: an fp
+            # impl cannot read int8 codes and a q8 impl needs scales —
+            # fail at construction instead of silently measuring the
+            # wrong kernel (or crashing mid-trace)
+            from repro.kernels import registry
+            pin = None
+            if cfg.attn_impl:
+                pin = registry.LEGACY_ATTN_MAP.get(
+                    cfg.attn_impl, {}).get("paged_decode")
+            if cfg.impls and "paged_decode" in cfg.impls:
+                pin = cfg.impls["paged_decode"]
+            if pin is not None:
+                spec = registry.get_spec("paged_decode", pin)
+                if (spec.supports is not None
+                        and not spec.supports(quantized=self.quantized)):
+                    want = ("pallas_paged_q8/jnp_paged_q8" if self.quantized
+                            else "pallas_paged/jnp_paged")
+                    raise ValueError(
+                        f"paged_decode impl {pin!r} cannot read "
+                        f"kv_dtype={cfg.kv_dtype or 'model-dtype'!r} pages; "
+                        f"pin one of {want} (or drop the pin and let the "
+                        f"registry heuristic pick)")
         if self.paged:
             from repro.serve import kv_pool
             # table/pool headroom: power-of-two segments may overshoot a
@@ -168,6 +217,9 @@ class Engine:
         # pool pages (no row-sized twin state to merge), donated in place
         self._paged_slot_prefill = jax.jit(self._paged_slot_prefill_impl,
                                            donate_argnums=(1, 2))
+        # batched copy-on-write page copy (prefix-cache fork points)
+        self._copy_pages = jax.jit(self._copy_pages_impl,
+                                   donate_argnums=(0,))
 
     # -------------------------------------------------------------- helpers
     @property
@@ -191,7 +243,8 @@ class Engine:
             return {}
         return dict(page_size=self.cfg.page_size,
                     num_pages=self.pool_pages,
-                    table_width=self.table_width)
+                    table_width=self.table_width,
+                    kv_dtype=self.kv_dtype)
 
     def set_page_table(self, state, table) -> Any:
         """Swap the (host-managed) page table into a decode state."""
@@ -275,7 +328,8 @@ class Engine:
                 num_pages, table_width = paged_dims
                 state = self.lm.init_decode_state(
                     b, seq_cap, page_size=cfg.page_size,
-                    num_pages=num_pages, table_width=table_width)
+                    num_pages=num_pages, table_width=table_width,
+                    kv_dtype=self.kv_dtype)
                 state = self.set_page_table(state, table)
             else:
                 state = self.lm.init_decode_state(b, seq_cap)
@@ -413,7 +467,7 @@ class Engine:
         return merged, logits_buf
 
     def _paged_slot_prefill_impl(self, params, state, logits_buf, toks,
-                                 slot, table_row):
+                                 slot, table_row, prefix_len=None):
         """Prefill ONE row straight into the shared page pool.
 
         The row's pages already belong to it (the pool allocated them
@@ -422,48 +476,96 @@ class Engine:
         big page buffers, then the slot's table row, length and logits are
         scattered in.  ``state`` and ``logits_buf`` are donated — admission
         rewrites pages and one table row in place.
+
+        ``prefix_len`` (traced scalar, or None for the plain program): the
+        slot's table already maps a resident shared prefix of that many
+        tokens; ``toks`` holds only the divergent suffix, which prefills
+        at absolute positions ``prefix_len + i`` against the prefix pages
+        (read-only — the token-granular scatter starts past them).
         """
         from repro.models.attention import PagedKVCache
         caches = state["caches"]
-        n_layers, s = caches.length.shape[0], toks.shape[1]
+        n_layers = caches.length.shape[0]
         np_w = caches.page_table.shape[-1]
         row_view = PagedKVCache(
             k_pages=caches.k_pages, v_pages=caches.v_pages,
             page_table=jnp.broadcast_to(table_row[None, None],
                                         (n_layers, 1, np_w)),
-            length=jnp.zeros((n_layers, 1), jnp.int32))
-        row_logits, new_row = self.lm.prefill(
-            params, {"tokens": toks}, {"caches": row_view})
+            length=jnp.zeros((n_layers, 1), jnp.int32),
+            k_scale=caches.k_scale, v_scale=caches.v_scale)
+        batch = {"tokens": toks}
+        if prefix_len is not None:
+            batch["prefix_len"] = prefix_len[None]
+        row_logits, new_row = self.lm.prefill(params, batch,
+                                              {"caches": row_view})
         nc = new_row["caches"]
-        new_caches = PagedKVCache(
+        new_caches = caches._replace(
             k_pages=nc.k_pages, v_pages=nc.v_pages,
+            k_scale=nc.k_scale, v_scale=nc.v_scale,
             page_table=jax.lax.dynamic_update_slice_in_dim(
                 caches.page_table,
                 jnp.broadcast_to(table_row[None, None], (n_layers, 1, np_w)),
                 slot, axis=1),
+            # nc.length is the row's new total (prefix + suffix in suffix
+            # mode, the prompt length otherwise)
             length=jax.lax.dynamic_update_slice_in_dim(
-                caches.length, jnp.full((n_layers, 1), s, jnp.int32),
-                slot, axis=1))
+                caches.length, nc.length.astype(jnp.int32), slot, axis=1))
         logits_buf = jax.lax.dynamic_update_slice_in_dim(
             logits_buf, row_logits.astype(logits_buf.dtype), slot, axis=0)
         return dict(state, caches=new_caches), logits_buf
 
+    def _copy_pages_impl(self, state, src, dst):
+        """Device-side COW page copy: page ``src[i] -> dst[i]`` in every
+        layer's K and V pools (and scale pools when quantized), one
+        donated batched program.  (0, 0) pairs are null-page self-copies —
+        harmless padding so distinct batch sizes can share a trace."""
+        caches = state["caches"]
+
+        def cp(pool):
+            return (None if pool is None
+                    else pool.at[:, dst].set(pool[:, src]))
+
+        new = caches._replace(k_pages=cp(caches.k_pages),
+                              v_pages=cp(caches.v_pages),
+                              k_scale=cp(caches.k_scale),
+                              v_scale=cp(caches.v_scale))
+        return dict(state, caches=new)
+
+    def copy_pages(self, state, pairs: Sequence[Tuple[int, int]]):
+        """Run the batched COW copy for ``pairs`` of (src, dst) physical
+        page ids (padded to a power of two with null-page self-copies so
+        the program count stays logarithmic in batch size)."""
+        if not pairs:
+            return state
+        n = 1 << (len(pairs) - 1).bit_length()
+        arr = np.asarray(list(pairs) + [(0, 0)] * (n - len(pairs)), np.int32)
+        with self._region_timer(PREFILL_REGION):
+            return self._copy_pages(state, jnp.asarray(arr[:, 0]),
+                                    jnp.asarray(arr[:, 1]))
+
     def prefill_slot(self, state, logits_buf, prompt: Sequence[int],
-                     slot: int, table_row=None):
+                     slot: int, table_row=None, prefix_len: int = 0):
         """Admission point: prefill `prompt` into slot `slot` mid-flight.
 
         Paged engines pass the slot's freshly-allocated ``table_row`` and
-        the K/V lands directly in its pool pages; dense engines keep the
-        row-twin prefill + donated scatter-merge.
+        the K/V lands directly in its pool pages; with ``prefix_len > 0``
+        (prefix-cache hit) ``prompt`` is only the divergent suffix and the
+        resident prefix pages are attended, not recomputed.  Dense engines
+        keep the row-twin prefill + donated scatter-merge.
         """
         toks = jnp.asarray([list(prompt)], jnp.int32)
         if self.paged:
             assert table_row is not None, "paged admission needs a table row"
+            pl = (jnp.asarray(prefix_len, jnp.int32) if prefix_len > 0
+                  else None)
             with self._region_timer(PREFILL_REGION), self._impl_ctx():
                 return self._paged_slot_prefill(
                     self.params, state, logits_buf, toks,
                     jnp.asarray(slot, jnp.int32),
-                    jnp.asarray(table_row, jnp.int32))
+                    jnp.asarray(table_row, jnp.int32), pl)
+        if prefix_len:
+            raise ValueError("prefix_len needs a paged engine "
+                             "(dense caches hold no shared prefix)")
         with self._region_timer(PREFILL_REGION), self._impl_ctx():
             row_logits, row_state = self._slot_prefill(self.params, toks)
         return self._merge(state, logits_buf, row_state, row_logits,
@@ -561,8 +663,15 @@ class BatchScheduler:
                                 or engine.cfg.admission_chunk)
         self.queue: collections.deque = collections.deque()
         self.completed: Dict[int, Request] = {}
-        self.metrics: Dict[str, float] = {"segments": 0, "admissions": 0,
-                                          "decode_steps": 0}
+        self.metrics: Dict[str, float] = {
+            "segments": 0, "admissions": 0, "decode_steps": 0,
+            # prefix-cache telemetry (paged engines; zero otherwise)
+            "prefix_hits": 0,        # admissions with a non-empty match
+            "prompt_tokens": 0,      # total prompt tokens submitted
+            "prefilled_tokens": 0,   # tokens actually prefilled (suffixes)
+            "pages_shared": 0,       # full prefix pages mapped read-only
+            "cow_copies": 0,         # copy-on-write page copies issued
+        }
         self.admission_log: List[Tuple[int, int]] = []   # (rid, slot)
         self.pool = None    # KVPool, created per run() on paged engines
 
@@ -587,7 +696,8 @@ class BatchScheduler:
         if eng.paged:
             from repro.serve.kv_pool import KVPool
             self.pool = KVPool(eng.pool_pages, cfg.page_size, nslots,
-                               eng.table_width)
+                               eng.table_width,
+                               prefix_cache=cfg.prefix_cache)
         state = eng.lm.init_decode_state(nslots, cfg.max_seq,
                                          **eng._state_kwargs())
         logits = jnp.zeros((nslots, eng.lm.cfg.vocab), eng.lm.dtype)
@@ -605,21 +715,31 @@ class BatchScheduler:
                 if slots[i] is None and self.queue:
                     req = self.queue[0]
                     table_row = None
+                    prefix_len = 0
+                    cow_pairs: List[Tuple[int, int]] = []
                     if self.pool is not None:
                         # admission allocates exactly ceil(len/page) pages
-                        # for the prompt and RESERVES the request's worst
-                        # case (budget + segment overshoot), so decode
-                        # growth can never exhaust the pool mid-run; a
-                        # full pool defers admission (backpressure)
+                        # for the prompt (minus full-page prefix hits,
+                        # which map read-only by refcount bump) and
+                        # RESERVES the request's worst case (budget +
+                        # segment overshoot), so decode growth can never
+                        # exhaust the pool mid-run; a full pool defers
+                        # admission (backpressure)
                         worst = (len(req.prompt) + req.max_new_tokens
                                  + eng.seg_cap)
-                        if not self.pool.can_reserve(worst):
+                        _, shared = self.pool.match_prefix(req.prompt)
+                        if not self.pool.can_reserve(worst,
+                                                     shared_pages=shared):
                             if not any(s is not None for s in slots):
                                 raise RuntimeError(
                                     f"request {req.rid}: needs more pages "
                                     f"than the whole pool can promise "
                                     f"({self.pool!r})")
                             break
+                        admit = self.pool.admit_prefix(i, req.prompt)
+                        prefix_len = admit.matched_len
+                        if admit.cow is not None:
+                            cow_pairs.append(admit.cow)
                         self.pool.reserve(i, worst)
                         self.pool.alloc(i, len(req.prompt))
                         table_row = self.pool.tables[i]
@@ -632,14 +752,28 @@ class BatchScheduler:
                             state = eng.set_page_table(state,
                                                        self.pool.table())
                             width_restored = True
+                        # the fork page must hold the shared tokens before
+                        # the suffix prefill reads (and partially rewrites)
+                        # it — the copy is issued first, device-ordered
+                        state = eng.copy_pages(state, cow_pairs)
+                        self.metrics["prefix_hits"] += int(prefix_len > 0)
+                        self.metrics["pages_shared"] += admit.shared_full
+                        self.metrics["cow_copies"] += len(cow_pairs)
                     self.queue.popleft()
-                    state, logits = eng.prefill_slot(state, logits,
-                                                     req.prompt, i,
-                                                     table_row=table_row)
+                    state, logits = eng.prefill_slot(
+                        state, logits, req.prompt[prefix_len:], i,
+                        table_row=table_row, prefix_len=prefix_len)
+                    if self.pool is not None:
+                        # index the now-resident full prompt pages so the
+                        # NEXT admission can share them
+                        self.pool.register_prefix(i, req.prompt)
                     slots[i] = req
                     remaining[i] = req.max_new_tokens
                     slot_len[i] = len(req.prompt)
                     self.metrics["admissions"] += 1
+                    self.metrics["prompt_tokens"] += len(req.prompt)
+                    self.metrics["prefilled_tokens"] += (len(req.prompt)
+                                                         - prefix_len)
                     self.admission_log.append((req.rid, i))
 
             active = np.array([s is not None for s in slots])

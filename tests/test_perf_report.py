@@ -58,7 +58,18 @@ def test_family_suite_matches_bench_autotune():
 
 def test_suite_covers_every_registered_family():
     assert set(pr.FAMILY_SUITE) == {"attention", "paged_decode",
-                                    "stream_triad", "jacobi7", "ssd_scan"}
+                                    "paged_decode_q8", "stream_triad",
+                                    "jacobi7", "ssd_scan"}
+
+
+def test_suite_family_splits_reserved_keys():
+    fam, impl, facts = pr.suite_family("paged_decode_q8")
+    assert (fam, impl) == ("paged_decode", "pallas_paged_q8")
+    assert "family" not in facts and "impl" not in facts
+    assert facts["quantized"] is True
+    fam, impl, facts = pr.suite_family("paged_decode")
+    assert (fam, impl) == ("paged_decode", None)
+    assert facts == pr.FAMILY_SUITE["paged_decode"]
 
 
 # ---------------------------------------------------------------------------
@@ -270,14 +281,18 @@ def test_suite_inputs_match_tuned_keys(tmp_path):
     persists (else walls would never attach to rows)."""
     registry.clear_tune_table()
     try:
-        for family in pr.FAMILY_SUITE:
-            _, _, key = pr.suite_inputs(family)
-            ts = registry._tuned_spec(family, None).tune
-            facts = dict(pr.FAMILY_SUITE[family], dtype=jnp.float32)
+        for cell in pr.FAMILY_SUITE:
+            _, _, key = pr.suite_inputs(cell)
+            family, impl, cfacts = pr.suite_family(cell)
+            ts = registry._tuned_spec(family, impl).tune
+            facts = dict(cfacts, dtype=jnp.float32)
             if family == "paged_decode":
-                facts.pop("ctx")
-                facts["page_size"] = 16
+                # the dispatch-site key: page size from the winning
+                # record (here: smallest smoke candidate), ctx = the
+                # suite cell's context (table width x page size)
+                facts["page_size"] = pr._suite_page_size(
+                    (), quantized=facts.get("quantized", False))
             keyf = ts.lookup_key or ts.key
-            assert key == keyf(**facts), family
+            assert key == keyf(**facts), cell
     finally:
         registry.clear_tune_table()
