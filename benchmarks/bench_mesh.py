@@ -1,0 +1,197 @@
+"""Mesh-aware sharded serving: token parity, per-sharding tuning, ft/ degradation.
+
+Three claims, measured (fp32 so greedy argmax is bit-exact):
+
+1. **Parity** — the sharded engine (weights + paged-KV head slices over
+   the ``model`` axis) produces bit-identical greedy tokens to the
+   single-device engine on the same request mix, across every mesh shape
+   the local device count allows.
+2. **Per-sharding tuning** — the autotuner keys on
+   ``(mesh_shape, axis, per_device_heads)``; each sharding sweeps once
+   and warm-starts from the tune table afterwards (a fresh process reads
+   0 sweeps / 0 lowerings — asserted by tests/test_mesh_serve.py, which
+   runs this bench twice).
+3. **Degradation** — killing a simulated device mid-run trips the
+   heartbeat -> governor -> re-mesh path: in-flight requests finish with
+   correct tokens on the survivors, and the event (re-mesh latency, new
+   mesh, token parity after) lands in BENCH_mesh.json.
+
+On CPU, simulate devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.bench_mesh --smoke --json BENCH_mesh.json
+
+With fewer than 3 devices the shapes (and the kill experiment) degrade
+gracefully — the bench reports what it could cover instead of failing.
+"""
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _build(smoke: bool, mesh=None):
+    from repro.core.features import default_features
+    from repro.models.lm import LM, LMConfig
+    from repro.serve import Engine, ServeConfig
+
+    # kvh=4 so the model axis can be 2 (pdh=2) or 4 (pdh=1); fp32 keeps
+    # greedy argmax bit-exact across GSPMD reduction orders
+    cfg = LMConfig(name="mesh-bench", family="dense", vocab=256,
+                   d_model=64 if smoke else 128, n_layers=2,
+                   num_heads=8, num_kv_heads=4, d_ff=128 if smoke else 256)
+    lm = LM(cfg, default_features().with_(remat_policy="none"),
+            dtype=jnp.float32)
+    params = lm.init(jax.random.PRNGKey(0))
+    scfg = ServeConfig(max_seq=256, batch_slots=4, temperature=0.0,
+                       admission_chunk=8, page_size=16)
+    return Engine(lm, params, scfg, mesh=mesh), lm, params, scfg
+
+
+def _requests(vocab, n, plen, max_new):
+    from repro.serve import Request
+    rng = np.random.default_rng(7)
+    return [Request(rid=rid,
+                    prompt=rng.integers(1, vocab, size=plen).tolist(),
+                    max_new_tokens=max_new)
+            for rid in range(n)]
+
+
+def _run_sched(eng, reqs, **sched_kw):
+    from repro.serve import BatchScheduler
+    sched = BatchScheduler(eng, **sched_kw)
+    for r in reqs:
+        sched.submit(r)
+    t0 = time.perf_counter()
+    done = sched.run()
+    dt = time.perf_counter() - t0
+    toks = {rid: list(r.generated) for rid, r in done.items()}
+    return toks, dt, sched
+
+
+def run(csv, session=None, smoke=False):
+    from repro.kernels import registry
+    from repro.launch.mesh import make_serve_mesh
+    from repro.serve import Request
+
+    ndev = len(jax.devices())
+    shapes = [s for s in [(1, 2), (1, 4)] if int(np.prod(s)) <= ndev]
+    print(f"== mesh-aware sharded serving ({ndev} devices; "
+          f"shapes {shapes or '[none — single device]'}) ==")
+
+    eng0, lm, params, scfg = _build(smoke)
+    n_req, plen, max_new = 8, 8, 24
+    mk = lambda: _requests(lm.cfg.vocab, n_req, plen, max_new)  # noqa: E731
+
+    ref_toks, t_ref, _ = _run_sched(eng0, mk())
+    ntok = sum(len(t) for t in ref_toks.values())
+    print(f"single-device: {ntok} tokens in {t_ref:.2f}s "
+          f"({ntok / t_ref:.1f} tok/s)")
+    csv.append(("mesh_serve_single_tok_s", 1e6 * t_ref / max(ntok, 1),
+                f"tok_s={ntok / t_ref:.1f}"))
+
+    head_dim = lm.cfg.d_model // lm.cfg.num_heads
+    summary = {"devices": ndev, "shapes": [], "tune": [],
+               "parity": None, "degradation": None}
+    parity_ok = True
+    for shape in shapes:
+        sm = make_serve_mesh(shape)
+        from repro.serve import Engine
+        eng = Engine(lm, params, scfg, mesh=sm)
+        toks, dt, _ = _run_sched(eng, mk())
+        same = toks == ref_toks
+        parity_ok &= same
+        tps = ntok / dt
+        print(f"mesh {shape}: {tps:10.1f} tok/s  "
+              f"token parity vs single-device: {'OK' if same else 'FAIL'}  "
+              f"facts={eng.mesh_facts}")
+        assert same, f"sharded tokens diverged on mesh {shape}"
+        tag = "x".join(str(s) for s in shape)
+        csv.append((f"mesh_serve_{tag}_tok_s", 1e6 * dt / max(ntok, 1),
+                    f"tok_s={tps:.1f},pdh={eng.mesh_facts['per_device_heads']}"))
+        summary["shapes"].append({
+            "shape": list(shape), "tok_s": tps,
+            "per_device_heads": eng.mesh_facts["per_device_heads"],
+            "parity": same})
+        if session is not None:
+            # per-sharding tune record: the mesh facts join the key, so
+            # THIS sharding's winner persists independently of the others
+            rec = registry.autotune(
+                "attention", session, b=1, h=lm.cfg.num_heads,
+                kvh=lm.cfg.num_kv_heads, sq=plen, sk=plen, dh=head_dim,
+                dtype=lm.dtype, **eng.mesh_facts)
+            print(f"  tune[{tag}]: key={rec.key} choice={tuple(rec.choice)} "
+                  f"({'swept' if rec.swept else 'warm'}, "
+                  f"{rec.lowerings} lowerings)")
+            summary["tune"].append({
+                "shape": list(shape), "key": rec.key,
+                "choice": list(rec.choice), "swept": bool(rec.swept),
+                "lowerings": int(rec.lowerings)})
+    summary["parity"] = parity_ok
+
+    # ---- ft/: kill a device mid-run, finish degraded on the survivors --
+    if ndev > 2:
+        sm = make_serve_mesh((1, 2))
+        from repro.serve import Engine
+        eng = Engine(lm, params, scfg, mesh=sm)
+        from repro.serve import BatchScheduler
+        sched = BatchScheduler(eng, ft_timeout_steps=1, ft_confirm=1)
+        for r in mk():
+            sched.submit(r)
+        sched.inject_failure(sm.device_ids[1], at_segment=1)
+        t0 = time.perf_counter()
+        done = sched.run()
+        dt = time.perf_counter() - t0
+        toks = {rid: list(r.generated) for rid, r in done.items()}
+        same = toks == ref_toks
+        remesh = [e for e in sched.ft_events if e["type"] == "remesh"]
+        assert remesh, "injected failure never triggered a re-mesh"
+        ev = remesh[0]
+        print(f"degradation: killed device {sm.device_ids[1]} after segment "
+              f"{ev['segment']}; re-mesh onto {ev['device_ids']} in "
+              f"{ev['remesh_latency_s'] * 1e3:.0f} ms; post-re-mesh token "
+              f"parity: {'OK' if same else 'FAIL'}")
+        assert same, "tokens diverged after the re-mesh"
+        csv.append(("mesh_serve_remesh_latency_ms",
+                    ev["remesh_latency_s"] * 1e3,
+                    f"failed={ev['failed']},mesh={ev['axis_sizes']}"))
+        summary["degradation"] = {
+            "killed": int(sm.device_ids[1]),
+            "events": sched.ft_events,
+            "remeshes": int(sched.metrics["remeshes"]),
+            "token_parity_after": same,
+            "tok_s_degraded": ntok / dt,
+        }
+    else:
+        print("degradation experiment skipped: needs >2 devices "
+              "(mesh 1x2 + a hot spare)")
+    return summary
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: tiny model, few requests")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the summary here (BENCH_mesh.json)")
+    args = ap.parse_args(argv)
+    from repro.core.session import ProfileSession
+    session = ProfileSession()
+    csv = []
+    summary = run(csv, session=session, smoke=args.smoke)
+    print("name,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.2f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, **summary}, f, indent=1)
+        print(f"[bench_mesh] wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -22,9 +22,9 @@ import traceback
 
 from benchmarks import (bench_autotune, bench_bandwidth_map,
                         bench_flash_prefill, bench_jacobi_traffic,
-                        bench_marker_overhead, bench_paged_decode,
-                        bench_perfctr, bench_serve, bench_stencil_pinning,
-                        bench_stream_pinning)
+                        bench_marker_overhead, bench_mesh,
+                        bench_paged_decode, bench_perfctr, bench_serve,
+                        bench_stencil_pinning, bench_stream_pinning)
 
 BENCHES = {
     "perfctr": bench_perfctr,              # §II-A listing
@@ -34,6 +34,7 @@ BENCHES = {
     "marker_overhead": bench_marker_overhead,  # zero-overhead claim
     "bandwidth_map": bench_bandwidth_map,   # §VI future plans
     "serve": bench_serve,                   # measurement-driven serving loop
+    "mesh": bench_mesh,                    # sharded serving + ft/ degradation
     "flash_prefill": bench_flash_prefill,  # dispatched kernel + autotuner
     "paged_decode": bench_paged_decode,    # paged KV pool: bytes/token
     "autotune": bench_autotune,            # registry tune table warm starts

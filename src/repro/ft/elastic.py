@@ -28,8 +28,52 @@ from jax.sharding import Mesh, NamedSharding
 from repro.core.pin import PinStrategy, apply_skip, get_strategy
 from repro.core.topology import NodeTopology
 
-__all__ = ["RemeshPlan", "plan_remesh", "build_mesh_from_plan",
-           "reshard_tree"]
+__all__ = ["RemeshPlan", "RemeshGovernor", "plan_remesh",
+           "build_mesh_from_plan", "reshard_tree"]
+
+
+class RemeshGovernor:
+    """Flap suppression between detection and the (expensive) re-mesh.
+
+    Heartbeat gaps and slow steps are noisy: a GC pause or one
+    recompilation can make a healthy device look dead for an
+    observation or two, and a re-mesh costs re-jitting every serving
+    program.  The governor sits between the detectors and
+    :func:`plan_remesh`: a device must stay *missing* for
+    ``confirm_missing`` consecutive observations (or *slow* for
+    ``confirm_slow``) before :meth:`observe` confirms it; any tick
+    where it looks healthy resets its counter, so a straggler that
+    recovers before confirmation never triggers a re-mesh.  Confirmed
+    devices stay confirmed (death is sticky) but are reported exactly
+    once — the caller accumulates them into its failed set.
+    """
+
+    def __init__(self, confirm_missing: int = 2, confirm_slow: int = 3):
+        if confirm_missing < 1 or confirm_slow < 1:
+            raise ValueError("confirmation thresholds must be >= 1")
+        self.confirm_missing = confirm_missing
+        self.confirm_slow = confirm_slow
+        self._missing: dict = {}
+        self._slow: dict = {}
+        self.confirmed: set = set()
+
+    def observe(self, missing: Sequence[int] = (),
+                slow: Sequence[int] = ()) -> set:
+        """Feed one observation; returns devices *newly* confirmed dead."""
+        for table, seen, need in (
+                (self._missing, set(missing), self.confirm_missing),
+                (self._slow, set(slow), self.confirm_slow)):
+            for dev in [d for d in table if d not in seen]:
+                del table[dev]               # looked healthy: flap, reset
+            for dev in seen:
+                table[dev] = table.get(dev, 0) + 1
+        fresh = set()
+        for table, need in ((self._missing, self.confirm_missing),
+                            (self._slow, self.confirm_slow)):
+            fresh |= {dev for dev, n in table.items()
+                      if n >= need and dev not in self.confirmed}
+        self.confirmed |= fresh
+        return fresh
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,2 +1,11 @@
-"""Deprecated: see :mod:`repro.kernels.legacy` (migration table there)."""
-from repro.kernels.legacy import *  # noqa: F401,F403
+"""Deprecated: see :mod:`repro.kernels.legacy` (migration table there).
+
+PEP-562 stub: every attribute reached through THIS module name — the
+constants included, which the call-time shims can never warn for — emits
+one DeprecationWarning per symbol, so migration surfaces every legacy
+``kernels.autotune`` import line instead of only the first call.
+"""
+from repro.kernels.legacy import __all__  # noqa: F401  (star-import compat)
+from repro.kernels.legacy import stub_getattr as _stub_getattr
+
+__getattr__ = _stub_getattr(__name__)

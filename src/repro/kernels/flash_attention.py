@@ -115,7 +115,7 @@ def flash_attention_bhsd(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     backend detection (kernels/dispatch.py) instead of assuming interpret.
     """
     if interpret is None:
-        from repro.kernels.dispatch import default_interpret
+        from repro.kernels.registry import default_interpret
         interpret = default_interpret()
     b, h, sq, dh = q.shape
     kvh, sk = k.shape[1], k.shape[2]

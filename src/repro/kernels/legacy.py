@@ -84,15 +84,79 @@ OVERRIDE_IMPLS = ATTENTION_IMPLS + ("paged_decode",)
 _WARNED: set = set()
 
 
-def _deprecated(symbol: str, replacement: str) -> None:
-    """One DeprecationWarning per legacy symbol per process (these shims
-    sit on trace-time hot paths)."""
-    if symbol in _WARNED:
+def _deprecated(symbol: str, replacement: str,
+                module: str = "repro.kernels.legacy") -> None:
+    """One DeprecationWarning per (module, symbol) per process.
+
+    Keyed per symbol — NOT once per process — so migration surfaces
+    every distinct legacy call site (these shims sit on trace-time hot
+    paths, hence the dedup at all); keyed per module too, so reaching
+    ``use_attention_impl`` through ``kernels.dispatch`` and through
+    ``kernels.legacy`` names both spellings."""
+    if (module, symbol) in _WARNED:
         return
-    _WARNED.add(symbol)
+    _WARNED.add((module, symbol))
     warnings.warn(
-        f"repro.kernels.legacy.{symbol} is deprecated; use {replacement}",
+        f"{module}.{symbol} is deprecated; use {replacement}",
         DeprecationWarning, stacklevel=3)
+
+
+#: replacement named in the warning when a symbol is reached through the
+#: ``dispatch.py`` / ``autotune.py`` module stubs (the function shims
+#: below warn with the same strings when CALLED; this table also covers
+#: the constants, which the call-time shims can never warn for)
+_STUB_REPLACEMENTS: Dict[str, str] = {
+    "ATTENTION_IMPLS": 'registry.impls("attention")',
+    "PAGED_DECODE_IMPLS": 'registry.impls("paged_decode")',
+    "OVERRIDE_IMPLS": "registry.LEGACY_ATTN_MAP",
+    "default_interpret": "registry.default_interpret",
+    "select_attention_impl": 'registry.select("attention", ...)',
+    "use_attention_impl": "registry.use_impl(attention=..., "
+                          "paged_decode=...)",
+    "attention_impl_override": 'registry.override_for("attention")',
+    "run_attention": 'registry.run("attention", ..., impl=name)',
+    "select_paged_decode_impl": 'registry.select("paged_decode", ...)',
+    "run_paged_decode": 'registry.run("paged_decode", ..., impl=name)',
+    "DEFAULT_BLOCKS": "registry.DEFAULT_BLOCKS",
+    "DEFAULT_CANDIDATES": "registry.DEFAULT_CANDIDATES",
+    "TuneRecord": "registry.TuneRecord",
+    "vmem_footprint": "registry.attention_vmem",
+    "tune_key": "registry.attention_tune_key",
+    "autotune_flash_blocks": 'registry.autotune("attention", session, ...)',
+    "best_blocks": 'registry.best("attention", ...)',
+    "record_blocks": 'registry.record("attention", key, (bq, bk))',
+    "clear_table": "registry.clear_tune_table()",
+    "DEFAULT_PAGES_PER_BLOCK": "registry.DEFAULT_PAGES_PER_BLOCK",
+    "DEFAULT_PAGED_CANDIDATES": "registry.DEFAULT_PAGED_CANDIDATES",
+    "PagedTuneRecord": "registry.TuneRecord",
+    "paged_tune_key": "registry.paged_lookup_key",
+    "paged_vmem_footprint": "registry.paged_vmem",
+    "autotune_paged_decode": 'registry.autotune("paged_decode", '
+                             'session, ...)',
+    "best_paged_block": 'registry.best("paged_decode", ...)[1]',
+}
+
+
+def stub_getattr(module: str):
+    """PEP-562 ``__getattr__`` factory for the ``dispatch.py`` /
+    ``autotune.py`` re-export stubs.
+
+    The old star-import stubs resolved attributes silently, so ``from
+    repro.kernels.dispatch import ATTENTION_IMPLS`` (or any constant)
+    never warned and the module-level spelling of every call site went
+    unsurfaced.  Routing attribute access through here warns once per
+    (deprecated module, symbol) — every legacy import line names itself
+    exactly once."""
+    def __getattr__(name: str):
+        if name.startswith("__") or name not in __all__:
+            raise AttributeError(
+                f"module {module!r} has no attribute {name!r}")
+        _deprecated(name,
+                    _STUB_REPLACEMENTS.get(
+                        name, f"repro.kernels.registry.{name}"),
+                    module=module)
+        return globals()[name]
+    return __getattr__
 
 
 # ---------------------------------------------------------------------------

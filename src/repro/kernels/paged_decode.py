@@ -131,7 +131,7 @@ def paged_decode_attention_grouped(q4: jnp.ndarray, k_pages: jnp.ndarray,
     rows with ``lengths[b] == 0`` resolve to it but accumulate nothing.
     """
     if interpret is None:
-        from repro.kernels.dispatch import default_interpret
+        from repro.kernels.registry import default_interpret
         interpret = default_interpret()
     b, kvh, g, dh = q4.shape
     p_total, ps, kvh_p, _ = k_pages.shape
@@ -272,7 +272,7 @@ def paged_decode_attention_q8_grouped(q4: jnp.ndarray, k_pages: jnp.ndarray,
     VMEM between the DMA and the QK^T matmul: HBM sees only int8.
     """
     if interpret is None:
-        from repro.kernels.dispatch import default_interpret
+        from repro.kernels.registry import default_interpret
         interpret = default_interpret()
     b, kvh, g, dh = q4.shape
     p_total, ps, kvh_p, _ = k_pages.shape

@@ -68,6 +68,7 @@ __all__ = [
     "use_impl", "parse_impl_spec", "override_for", "select", "run",
     "autotune", "best", "record", "clear_tune_table", "tune_table",
     "dump_tune_table", "default_interpret", "LEGACY_ATTN_MAP",
+    "use_mesh_facts", "mesh_facts", "mesh_key_tag",
 ]
 
 
@@ -291,6 +292,65 @@ def use_impl(spec: Optional[str] = None, **impl_kw: Optional[str]):
         yield
     finally:
         _TLS.impls = prev
+
+
+#: the sharding facts every mesh-aware tune key understands.  Unsharded
+#: call sites simply never set them (``None``), so single-device keys are
+#: byte-identical to the pre-mesh scheme and stay warm.
+MESH_FACTS = ("mesh_shape", "mesh_axis", "per_device_heads")
+
+
+@contextlib.contextmanager
+def use_mesh_facts(**facts):
+    """Ambient sharding facts for everything traced inside the block.
+
+    A mesh-aware engine enters this around its jitted programs so that
+    dispatch-time :func:`best` lookups (which see only the GLOBAL array
+    shapes under GSPMD) key their tune records per sharding:
+    ``use_mesh_facts(mesh_shape=(1, 2), mesh_axis="model",
+    per_device_heads=2)``.  Thread-local, nested contexts merge with
+    inner-wins; ``None`` values are dropped so callers can thread
+    optional config straight through.
+    """
+    wanted = {k: v for k, v in facts.items() if v is not None}
+    unknown = set(wanted) - set(MESH_FACTS)
+    if unknown:
+        raise ValueError(f"unknown mesh facts {sorted(unknown)}; "
+                         f"expected a subset of {MESH_FACTS}")
+    prev = getattr(_TLS, "mesh_facts", None)
+    _TLS.mesh_facts = {**(prev or {}), **wanted}
+    try:
+        yield
+    finally:
+        _TLS.mesh_facts = prev
+
+
+def mesh_facts() -> Dict[str, Any]:
+    """The ambient sharding facts (empty dict when unsharded)."""
+    return dict(getattr(_TLS, "mesh_facts", None) or {})
+
+
+def mesh_key_tag(*, mesh_shape=None, mesh_axis=None,
+                 per_device_heads=None) -> str:
+    """Tune-key component for a sharding: '' unsharded (keys unchanged),
+    ``-mesh1x2.model.pdh2`` under a (1, 2) mesh with the kv heads split
+    over ``model`` leaving 2 per device."""
+    if mesh_shape is None:
+        return ""
+    shape = "x".join(str(int(s)) for s in mesh_shape)
+    pdh = ("" if per_device_heads is None
+           else f".pdh{int(per_device_heads)}")
+    return f"-mesh{shape}.{mesh_axis or 'model'}{pdh}"
+
+
+def _unsharded_fallback(facts: Dict[str, Any]) -> List[Dict[str, Any]]:
+    """Neighbor delta clearing the mesh facts: under a sharding the
+    UNSHARDED key is the fallback neighbor (a single-device sweep is a
+    better prior than the declared default), tried after the same-
+    sharding shape neighbors."""
+    if facts.get("mesh_shape") is None:
+        return []
+    return [{k: None for k in MESH_FACTS}]
 
 
 def override_for(family: str) -> Optional[str]:
@@ -578,6 +638,7 @@ def autotune(family: str, session, *, impl: Optional[str] = None,
     backend = _backend(backend)
     if interpret is None:
         interpret = default_interpret(backend)
+    facts = {**mesh_facts(), **facts}
     facts = dict(facts, backend=backend)
     facts.setdefault("dtype", jnp.float32)
     key = ts.key(**facts)
@@ -712,8 +773,14 @@ def best(family: str, *, impl: Optional[str] = None, **facts) -> Tuple:
     nearest tuned bucket's winner (VMEM-gated for the actual shape),
     else the spec's declared default.  Called by runners at trace time
     on every dispatch; a disk miss is negative-cached so untuned shapes
-    probe the filesystem once per process."""
+    probe the filesystem once per process.
+
+    Ambient :func:`use_mesh_facts` merge in under explicit facts, so a
+    mesh-aware engine's dispatch sites resolve per-sharding records
+    without every kernel threading mesh state by hand; the unsharded key
+    doubles as the fallback neighbor (:func:`_unsharded_fallback`)."""
     ts = _tuned_spec(family, impl).tune
+    facts = {**mesh_facts(), **facts}
     facts = dict(facts, backend=_backend(facts.get("backend")))
     facts.setdefault("dtype", jnp.float32)
     keyf = ts.lookup_key or ts.key
@@ -757,16 +824,22 @@ DEFAULT_CANDIDATES: Tuple[Tuple[int, int], ...] = (
 
 def attention_tune_key(*, b: int, h: int, kvh: int, sq: int, sk: int,
                        dh: int, dtype, causal: bool = True,
-                       backend: Optional[str] = None, **_ignored) -> str:
+                       backend: Optional[str] = None,
+                       mesh_shape=None, mesh_axis=None,
+                       per_device_heads=None, **_ignored) -> str:
     """Per-shape tune key.  ``b`` is bucketed to powers of two (the
     lesson ``paged_tune_key`` learned for table width): the continuous-
     batching scheduler's live mix varies batch from segment to segment,
     and a winning (bq, bk) tiling is a per-row property — keying on the
     exact batch made every serving lookup miss the sweep's record and
-    fall back to DEFAULT_BLOCKS."""
+    fall back to DEFAULT_BLOCKS.  Under a mesh the sharding facts join
+    the key (:func:`mesh_key_tag`): each device runs the kernel over its
+    head slice, so the winning tiling is a per-sharding property."""
     return (f"b{_pow2_up(b)}h{h}kvh{kvh}sq{sq}sk{sk}dh{dh}"
             f"-{_dtype_name(dtype)}-{'causal' if causal else 'full'}"
-            f"-{_backend(backend)}")
+            f"-{_backend(backend)}"
+            + mesh_key_tag(mesh_shape=mesh_shape, mesh_axis=mesh_axis,
+                           per_device_heads=per_device_heads))
 
 
 def attention_vmem(bq: int, bk: int, dh: int, itemsize: int = 4) -> int:
@@ -821,6 +894,7 @@ def _attention_neighbors(*, b: int, sq: int, sk: int, **_facts
         if sq // f >= 1 and sk // f >= 1:
             out.append({"sq": sq // f, "sk": sk // f})
         out.append({"sq": sq * f, "sk": sk * f})
+    out.extend(_unsharded_fallback(_facts))
     return out
 
 
@@ -866,8 +940,13 @@ register_family("attention", heuristic=_attention_heuristic,
 @register_impl("attention", "pallas_flash", tune=_ATTENTION_TUNE,
                layout=_ATTENTION_LAYOUT,
                oracle="repro.kernels.ref.flash_attention",
-               supports=lambda *, differentiable=False, **f:
-                   not differentiable)
+               # mesh fact: the kernel needs at least one whole kv head
+               # per device (per_device_heads=0 marks an indivisible
+               # head sharding — the fused-XLA paths handle that)
+               supports=lambda *, differentiable=False,
+                   per_device_heads=None, **f:
+                   not differentiable and (per_device_heads is None
+                                           or per_device_heads >= 1))
 def _run_pallas_flash(q, k, v, *, q_offset=0, causal: bool = True,
                       kv_len=None, softmax_mode: str = "naive",
                       chunk_size: int = 512, chunk_threshold: int = 2048,
@@ -938,23 +1017,33 @@ def _paged_ctx_bucket(ctx) -> int:
 
 def paged_lookup_key(*, b: int, kvh: int, g: int, dh: int, page_size: int,
                      dtype, ctx: int = 0, backend: Optional[str] = None,
-                     quantized: bool = False, **_ignored) -> str:
+                     quantized: bool = False,
+                     mesh_shape=None, mesh_axis=None,
+                     per_device_heads=None, **_ignored) -> str:
     # keyed on the pow2 ctx BUCKET, not the raw page-table width: the
     # scheduler's live-mix bucket changes segment to segment, and the
     # winning fetch granularity is a per-page property — exact-width keys
-    # would make every serving lookup miss the sweep's record
+    # would make every serving lookup miss the sweep's record.  Mesh
+    # facts join the key: each device walks its kv-head slice of the
+    # page pool, so the fetch granularity is a per-sharding property.
     tag = "q8" if quantized else ""
     return (f"paged{tag}-b{b}kvh{kvh}g{g}dh{dh}ps{page_size}"
             f"ctx{_paged_ctx_bucket(ctx)}"
-            f"-{_dtype_name(dtype)}-{_backend(backend)}")
+            f"-{_dtype_name(dtype)}-{_backend(backend)}"
+            + mesh_key_tag(mesh_shape=mesh_shape, mesh_axis=mesh_axis,
+                           per_device_heads=per_device_heads))
 
 
 def paged_sweep_key(*, b: int, kvh: int, g: int, dh: int, ctx: int, dtype,
                     backend: Optional[str] = None,
-                    quantized: bool = False, **_ignored) -> str:
+                    quantized: bool = False,
+                    mesh_shape=None, mesh_axis=None,
+                    per_device_heads=None, **_ignored) -> str:
     tag = "q8" if quantized else ""
     return (f"paged{tag}-sweep-b{b}kvh{kvh}g{g}dh{dh}ctx{ctx}"
-            f"-{_dtype_name(dtype)}-{_backend(backend)}")
+            f"-{_dtype_name(dtype)}-{_backend(backend)}"
+            + mesh_key_tag(mesh_shape=mesh_shape, mesh_axis=mesh_axis,
+                           per_device_heads=per_device_heads))
 
 
 def paged_vmem(ps: int, ppb: int, g: int, dh: int, itemsize: int = 4) -> int:
@@ -995,9 +1084,13 @@ def _paged_probe(cand, interpret, *, b, kvh, g, dh, ctx, dtype, **facts):
 
 def _paged_record_keys(scores, *, b, kvh, g, dh, dtype, ctx=0, backend=None,
                        quantized: bool = False,
+                       mesh_shape=None, mesh_axis=None,
+                       per_device_heads=None,
                        **facts) -> Dict[str, Tuple[Tuple, float]]:
     """One lookup record per swept page_size: whatever page_size the pool
-    was built with, dispatch finds its winning fetch granularity."""
+    was built with, dispatch finds its winning fetch granularity.  Mesh
+    facts fan out with the sweep's — a per-sharding sweep warms every
+    page_size under that same sharding."""
     per_ps: Dict[int, Tuple[Tuple, float]] = {}
     for (ps, ppb), s in scores.items():
         if s == float("inf"):
@@ -1007,7 +1100,9 @@ def _paged_record_keys(scores, *, b, kvh, g, dh, dtype, ctx=0, backend=None,
             per_ps[ps] = ((ps, ppb), s)
     return {paged_lookup_key(b=b, kvh=kvh, g=g, dh=dh, page_size=ps,
                              ctx=ctx, dtype=dtype, backend=backend,
-                             quantized=quantized): rec
+                             quantized=quantized, mesh_shape=mesh_shape,
+                             mesh_axis=mesh_axis,
+                             per_device_heads=per_device_heads): rec
             for ps, rec in per_ps.items()}
 
 
@@ -1027,6 +1122,7 @@ def _paged_neighbors(*, b: int, ctx: int = 0, **_facts
         if b // f >= 1:
             out.append({"b": b // f})
         out.append({"b": b * f})
+    out.extend(_unsharded_fallback(_facts))
     return out
 
 
@@ -1133,7 +1229,11 @@ def _paged_ctx_fact(page_table, k_pages) -> int:
 
 @register_impl("paged_decode", "pallas_paged", tune=_PAGED_TUNE,
                layout=_PAGED_LAYOUT, oracle="repro.kernels.ref.paged_decode",
-               supports=lambda quantized=False, **f: not quantized)
+               # the table-walking kernel needs a whole kv-head slice per
+               # device (per_device_heads=0 = indivisible head sharding)
+               supports=lambda quantized=False, per_device_heads=None, **f:
+                   not quantized and (per_device_heads is None
+                                      or per_device_heads >= 1))
 def _run_pallas_paged(q, k_pages, v_pages, page_table, length, k_new, v_new,
                       *, pages_per_block: Optional[int] = None,
                       interpret: Optional[bool] = None):
@@ -1163,7 +1263,9 @@ def _run_jnp_paged(q, k_pages, v_pages, page_table, length, k_new, v_new,
 @register_impl("paged_decode", "pallas_paged_q8", tune=_PAGED_Q8_TUNE,
                layout=_PAGED_Q8_LAYOUT,
                oracle="repro.kernels.ref.paged_decode_q8",
-               supports=lambda quantized=False, **f: quantized)
+               supports=lambda quantized=False, per_device_heads=None, **f:
+                   quantized and (per_device_heads is None
+                                  or per_device_heads >= 1))
 def _run_pallas_paged_q8(q, k_pages, v_pages, page_table, length, k_new,
                          v_new, *, k_scale, v_scale,
                          pages_per_block: Optional[int] = None,

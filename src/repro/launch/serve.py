@@ -31,6 +31,18 @@ def main(argv=None) -> int:
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--admission-chunk", type=int, default=8,
                     help="decode steps between admission points")
+    ap.add_argument("--mesh", default=None, metavar="AxB",
+                    help="serve sharded: device mesh shape over axes "
+                         "(data, model) — weights and the paged KV pool "
+                         "shard their kv-head dim over 'model' (e.g. 1x2; "
+                         "on CPU simulate devices with "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+    ap.add_argument("--pin", default="compact",
+                    help="pin strategy ordering mesh devices over the "
+                         "topology (compact | scatter | ring | pinlist)")
+    ap.add_argument("--skip", default="",
+                    help="device ids held out of the mesh as hot spares "
+                         "for the ft/ degradation path, e.g. 6,7")
     cli.add_impl_args(ap, legacy_attn=True)
     cli.add_cache_args(ap)
     cli.add_json_args(ap, what="serve summary")
@@ -79,13 +91,29 @@ def main(argv=None) -> int:
     # and expands it itself); cli.resolve_impls is for the non-serve
     # tools.  The warning path is the shared one.
     cli.warn_legacy_attn_impl(args.attn_impl)
+    serve_mesh = None
+    if args.mesh:
+        from repro.launch.mesh import axis_ici_map, make_serve_mesh
+        shape = tuple(int(p) for p in args.mesh.lower().split("x"))
+        skip = tuple(int(s) for s in args.skip.split(",") if s.strip())
+        serve_mesh = make_serve_mesh(shape, pin_strategy=args.pin,
+                                     skip=skip)
+        print(f"[serve] mesh {args.mesh} (data, model) over devices "
+              f"{list(serve_mesh.device_ids)}, pin={serve_mesh.pin.strategy}"
+              f", spares={list(serve_mesh.spares)}")
+        for row in axis_ici_map(serve_mesh.topo, serve_mesh.device_ids,
+                                shape, serve_mesh.axis_names):
+            lay = ("ICI ring" if row["ring"]
+                   else f"mean {row['mean_hops']:.1f} hops")
+            print(f"[serve]   axis {row['axis']:<6} "
+                  f"size {row['size']:>3}  {lay}")
     eng = Engine(lm, params, ServeConfig(
         max_seq=args.max_seq, batch_slots=args.slots,
         temperature=args.temperature,
         admission_chunk=args.admission_chunk,
         attn_impl=args.attn_impl, impls=impls,
         page_size=args.page_size, pool_pages=args.pool_pages,
-        **cli.kv_config_kwargs(args, ap)))
+        **cli.kv_config_kwargs(args, ap)), mesh=serve_mesh)
     if impls:
         print(f"[serve] kernel impls pinned: {impls}")
     if args.tune:
@@ -94,10 +122,13 @@ def main(argv=None) -> int:
             cfg.d_model // cfg.num_heads
         # tune under the ENGINE's dtype: best() keys on q.dtype at
         # dispatch, so an fp32 sweep would never serve a bf16 model
+        # a sharded engine tunes PER SHARDING: mesh facts join the tune
+        # key, so each (mesh shape, per-device heads) combination sweeps
+        # once and warm-starts forever after
         rec = registry.autotune(
             "attention", sess, b=1, h=cfg.num_heads, kvh=cfg.num_kv_heads,
             sq=args.prompt_len, sk=args.prompt_len, dh=head_dim,
-            dtype=lm.dtype)
+            dtype=lm.dtype, **eng.mesh_facts)
         print(f"[serve] attention tuned: blocks={rec.choice} "
               f"({'swept' if rec.swept else 'warm from tune table'}, "
               f"{rec.lowerings} lowerings)")
@@ -109,7 +140,7 @@ def main(argv=None) -> int:
                 "paged_decode", sess, impl=paged_impl, b=args.slots,
                 kvh=cfg.num_kv_heads, g=cfg.num_heads // cfg.num_kv_heads,
                 dh=head_dim, ctx=args.max_seq, dtype=lm.dtype,
-                quantized=eng.quantized)
+                quantized=eng.quantized, **eng.mesh_facts)
             print(f"[serve] paged decode tuned: (ps, ppb)={rec.choice} "
                   f"({'swept' if rec.swept else 'warm from tune table'}, "
                   f"{rec.lowerings} lowerings)")
@@ -145,6 +176,9 @@ def main(argv=None) -> int:
     print(f"[serve] segments={sched.metrics['segments']:.0f} "
           f"admissions={sched.metrics['admissions']:.0f} "
           f"host_syncs={eng.host_syncs}{ttft_s}")
+    if serve_mesh is not None and sched.ft_events:
+        print(f"[serve] ft: remeshes={sched.metrics['remeshes']:.0f} "
+              f"events={[e['type'] for e in sched.ft_events]}")
     if sched.pool is not None:
         m = sched.metrics
         hit = (m["prompt_tokens"] - m["prefilled_tokens"]) \
@@ -179,6 +213,10 @@ def main(argv=None) -> int:
                 "cow_copies": sched.metrics["cow_copies"],
                 "pool_occupancy": (sched.pool.occupancy()
                                    if sched.pool is not None else None),
+                "mesh": (list(serve_mesh.axis_sizes)
+                         if serve_mesh is not None else None),
+                "remeshes": sched.metrics.get("remeshes"),
+                "ft_events": sched.ft_events,
             }, fh, indent=2, sort_keys=True)
         print(f"[serve] wrote {args.json}")
     return 0

@@ -3,13 +3,41 @@
     PYTHONPATH=src python -m repro.launch.topology            # tables
     PYTHONPATH=src python -m repro.launch.topology -g         # + ASCII art
     PYTHONPATH=src python -m repro.launch.topology --production --multi-pod
+    PYTHONPATH=src python -m repro.launch.topology --mesh 2x4 --pin ring \
+        --json topo.json                     # + mesh-axis -> ICI-ring map
+
+``--mesh AxB[xC]`` additionally shows how the pin strategy lays each mesh
+axis onto the ICI fabric — the same device ordering
+``launch.mesh.make_production_mesh`` / ``make_serve_mesh`` hand to
+``jax.make_mesh``, so what prints here is what the collectives get.
 """
 
 from __future__ import annotations
 
 import argparse
 
+from repro.core import pin as pin_mod
 from repro.core import topology as topo_mod
+from repro.launch import cli
+
+
+def _parse_shape(text: str):
+    try:
+        shape = tuple(int(p) for p in text.lower().split("x"))
+        if not shape or any(s < 1 for s in shape):
+            raise ValueError
+    except ValueError:
+        raise SystemExit(f"--mesh wants AxB[xC] with positive sizes, "
+                         f"got {text!r}")
+    return shape
+
+
+def _axes_for(shape) -> tuple:
+    # match mesh_axes(): trailing axes are (data, model), a third
+    # leading axis is the pod axis
+    names = ("pod", "data", "model")
+    return names[len(names) - len(shape):] if len(shape) <= 3 else tuple(
+        f"ax{i}" for i in range(len(shape) - 2)) + ("data", "model")
 
 
 def main(argv=None) -> int:
@@ -20,6 +48,15 @@ def main(argv=None) -> int:
                     help="describe the modeled production pod instead of "
                          "probing local devices")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", default=None, metavar="AxB[xC]",
+                    help="also print the mesh-axis -> ICI-ring mapping the "
+                         "pin strategy produces for this mesh shape")
+    ap.add_argument("--pin", default="compact",
+                    help="pin strategy ordering the devices (compact | "
+                         "scatter | ring | explicit pinlist)")
+    ap.add_argument("--skip", default="",
+                    help="device ids to hold out as hot spares, e.g. 6,7")
+    cli.add_json_args(ap, what="topology summary")
     args = ap.parse_args(argv)
 
     if args.production:
@@ -29,6 +66,52 @@ def main(argv=None) -> int:
     else:
         topo = topo_mod.probe()
     print(topo.render(graphical=args.graphical))
+
+    mesh_map = None
+    mesh_ids = None
+    shape = None
+    axes = None
+    if args.mesh:
+        from repro.launch.mesh import axis_ici_map
+        import numpy as np
+        shape = _parse_shape(args.mesh)
+        axes = _axes_for(shape)
+        skip = tuple(int(s) for s in args.skip.split(",") if s.strip())
+        order = pin_mod.get_strategy(args.pin)(topo, skip=skip)
+        need = int(np.prod(shape))
+        if len(order.device_ids) < need:
+            raise SystemExit(
+                f"pin[{args.pin}] leaves {len(order.device_ids)} devices; "
+                f"mesh {args.mesh} needs {need}")
+        mesh_ids = order.device_ids[:need]
+        mesh_map = axis_ici_map(topo, mesh_ids, shape, axes)
+        print(f"Mesh {args.mesh} (axes {'x'.join(axes)}, "
+              f"pin={order.strategy}):")
+        for row in mesh_map:
+            ring = "ICI ring" if row["ring"] else (
+                f"mean {row['mean_hops']:.1f} / max {row['max_hops']} hops"
+                + (f", {row['dcn_crossings']} DCN crossings"
+                   if row["dcn_crossings"] else ""))
+            print(f"  axis {row['axis']:<6} size {row['size']:>3}  {ring}")
+
+    if args.json:
+        import json
+        payload = {
+            "chips": len(topo.chips),
+            "hosts": len({c.host for c in topo.chips}),
+            "pods": topo.num_pods,
+            "pod_grid": list(topo.pod_grid),
+            "chips_per_host": topo.chips_per_host,
+        }
+        if mesh_map is not None:
+            payload["mesh"] = {
+                "shape": list(shape), "axes": list(axes),
+                "pin": args.pin, "device_ids": list(mesh_ids),
+                "axis_ici_map": mesh_map,
+            }
+        with open(args.json, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+        print(f"[topology] wrote {args.json}")
     return 0
 
 

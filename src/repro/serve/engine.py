@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import collections
 import contextlib
+import copy
 import dataclasses
 import time
 from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
@@ -53,6 +54,8 @@ from typing import (Any, Callable, Dict, List, Mapping, Optional, Sequence,
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.models.lm import LM
 
@@ -135,9 +138,41 @@ class Request:
 
 class Engine:
     def __init__(self, lm: LM, params: Any, cfg: ServeConfig,
-                 perfctr=None):
+                 perfctr=None, mesh=None):
+        """``mesh``: None (single device — the pre-mesh engine, verbatim),
+        a ``jax.sharding.Mesh`` with a ``model`` axis (sharded serving),
+        or a :class:`repro.launch.mesh.ServeMesh` (sharded serving PLUS
+        the topology/pin/spare provenance the ft/ degradation path needs).
+
+        Under a mesh: attention/MLP weights shard per the LM's sharding
+        rules (heads/ff/vocab over ``model``), the KV cache — dense or
+        paged — shards its kv-head dim over ``model`` so each device
+        holds its head slice, and page tables stay host-side and global.
+        The jitted programs are unchanged; GSPMD partitions them over the
+        mesh, and greedy tokens stay bit-identical to the single-device
+        engine (argmax picks the lowest max index regardless of vocab
+        sharding).
+        """
+        self.serve_mesh = mesh if hasattr(mesh, "topo") else None
+        self.mesh = self.serve_mesh.mesh if self.serve_mesh else mesh
+        if self.mesh is not None:
+            if "model" not in self.mesh.axis_names:
+                raise ValueError(
+                    f"serving mesh needs a 'model' axis, got "
+                    f"{self.mesh.axis_names}")
+            msize = int(self.mesh.shape["model"])
+            if lm.cfg.num_kv_heads % msize != 0:
+                raise ValueError(
+                    f"num_kv_heads={lm.cfg.num_kv_heads} does not divide "
+                    f"over the model axis ({msize} devices) — KV-head "
+                    f"sharding needs whole head slices per device")
+            # private view of the LM: constrain() targets THIS engine's
+            # mesh without leaking into other engines sharing the lm
+            lm = copy.copy(lm)
+            lm.mesh = self.mesh
         self.lm = lm
-        self.params = params
+        self.params = (self._shard_params(params)
+                       if self.mesh is not None else params)
         self.cfg = cfg
         self.perfctr = perfctr          # optional repro.core.perfctr.PerfCtr
         self.host_syncs = 0             # device->host transfers (audited)
@@ -246,6 +281,90 @@ class Engine:
                     table_width=self.table_width,
                     kv_dtype=self.kv_dtype)
 
+    # ------------------------------------------------------- mesh sharding
+    @property
+    def mesh_facts(self) -> Dict[str, Any]:
+        """Sharding facts for the kernel registry's per-sharding tune keys
+        (``registry.use_mesh_facts``); empty when single-device."""
+        if self.mesh is None:
+            return {}
+        msize = int(self.mesh.shape["model"])
+        kvh = self.lm.cfg.num_kv_heads
+        # 0 marks an indivisible head sharding for `supports` predicates;
+        # __init__ validation makes it unreachable from a live engine
+        pdh = kvh // msize if kvh % msize == 0 else 0
+        return dict(mesh_shape=tuple(self.mesh.devices.shape),
+                    mesh_axis="model", per_device_heads=pdh)
+
+    def _shard_params(self, params):
+        from repro.models.layers import shard_params_tree
+        return shard_params_tree(params, self.lm.param_specs(),
+                                 self.lm.rules, self.mesh)
+
+    def _state_spec(self, leaf) -> P:
+        """PartitionSpec for one decode-state leaf: KV storage — dense
+        caches [L,B,S,KVH,Dh] and paged pools [L,P,ps,KVH,Dh] alike —
+        shards its kv-head dim (-2) over ``model``; page tables, lengths
+        and quant scales replicate (the tables are host-planned and
+        global — every device walks the same pages, reading its own head
+        slice)."""
+        msize = int(self.mesh.shape["model"])
+        if leaf.ndim == 5 and leaf.shape[-2] % msize == 0:
+            return P(None, None, None, "model", None)
+        return P()
+
+    def shard_state(self, state):
+        """device_put a decode state with this engine's shardings (no-op
+        single-device).  Also the re-mesh reshard path: committed arrays
+        move from the old mesh to the new one."""
+        if self.mesh is None:
+            return state
+        return jax.tree.map(
+            lambda x: jax.device_put(
+                x, NamedSharding(self.mesh, self._state_spec(x))), state)
+
+    def replicate(self, x):
+        """Replicate an array over the mesh (no-op single-device)."""
+        if self.mesh is None:
+            return x
+        return jax.device_put(x, NamedSharding(self.mesh, P()))
+
+    def _constrain_state(self, state):
+        """In-program twin of :meth:`shard_state` for states created
+        inside jit (fused generate, slot prefill): pins the KV layout at
+        trace time so GSPMD never round-trips the pool."""
+        if self.mesh is None:
+            return state
+        return jax.tree.map(
+            lambda x: jax.lax.with_sharding_constraint(
+                x, NamedSharding(self.mesh, self._state_spec(x))), state)
+
+    def apply_remesh(self, plan):
+        """Rebuild the engine on an ft/ re-mesh plan (device failure).
+
+        ``plan`` is a :class:`repro.ft.elastic.RemeshPlan`; the engine
+        re-device_puts its params onto the surviving mesh and drops every
+        traced program (they bake the old mesh into their shardings).
+        The caller reshards any live decode state via
+        :meth:`shard_state`.  Returns the new mesh.
+        """
+        from repro.ft import elastic
+        mesh = elastic.build_mesh_from_plan(plan)
+        self.mesh = mesh
+        self.lm.mesh = mesh
+        self.params = self._shard_params(self.params)
+        self._fused.clear()
+        self._segments.clear()
+        self._prefill = jax.jit(self.lm.prefill)
+        self._decode = jax.jit(self.lm.decode_step)
+        self._slot_prefill = jax.jit(self._slot_prefill_impl)
+        self._merge = jax.jit(self._merge_impl, donate_argnums=(0, 1))
+        self._paged_slot_prefill = jax.jit(self._paged_slot_prefill_impl,
+                                           donate_argnums=(1, 2))
+        self._copy_pages = jax.jit(self._copy_pages_impl,
+                                   donate_argnums=(0,))
+        return mesh
+
     def set_page_table(self, state, table) -> Any:
         """Swap the (host-managed) page table into a decode state."""
         caches = state["caches"]
@@ -271,13 +390,23 @@ class Engine:
         generate, slot prefill, reference loop, instrument probes)
         resolves to the same implementations.  The legacy single-name
         ``cfg.attn_impl`` enters first, then the per-family ``cfg.impls``
-        mapping on top (inner wins per family).
+        mapping on top (inner wins per family).  A sharded engine also
+        publishes its mesh facts so registry lookups (and the autotuner)
+        key per sharding.
         """
-        from repro.kernels import dispatch, registry
+        from repro.kernels import registry
         stack = contextlib.ExitStack()
-        stack.enter_context(dispatch.use_attention_impl(self.cfg.attn_impl))
+        if self.cfg.attn_impl is not None:
+            mapping = registry.LEGACY_ATTN_MAP.get(self.cfg.attn_impl)
+            if mapping is None:
+                raise ValueError(
+                    f"unknown attention impl {self.cfg.attn_impl!r}; "
+                    f"choose from {tuple(registry.LEGACY_ATTN_MAP)}")
+            stack.enter_context(registry.use_impl(**mapping))
         if self.cfg.impls:
             stack.enter_context(registry.use_impl(**dict(self.cfg.impls)))
+        if self.mesh is not None:
+            stack.enter_context(registry.use_mesh_facts(**self.mesh_facts))
         return stack
 
     def _sample(self, logits: jnp.ndarray, rng) -> jnp.ndarray:
@@ -333,6 +462,7 @@ class Engine:
                 state = self.set_page_table(state, table)
             else:
                 state = self.lm.init_decode_state(b, seq_cap)
+            state = self._constrain_state(state)
             batch = dict(extra, tokens=toks)
             if masked:
                 batch["lengths"] = lens
@@ -447,7 +577,8 @@ class Engine:
     # ------------------------------------- continuous-batching primitives
     def _slot_prefill_impl(self, params, toks):
         """Init + prefill ONE row at its exact prompt length (no padding)."""
-        state = self.lm.init_decode_state(1, self.cfg.max_seq)
+        state = self._constrain_state(
+            self.lm.init_decode_state(1, self.cfg.max_seq))
         return self.lm.prefill(params, {"tokens": toks}, state)
 
     @staticmethod
@@ -657,7 +788,8 @@ class BatchScheduler:
     """
 
     def __init__(self, engine: Engine,
-                 admission_chunk: Optional[int] = None):
+                 admission_chunk: Optional[int] = None,
+                 ft_timeout_steps: int = 3, ft_confirm: int = 2):
         self.engine = engine
         self.admission_chunk = (admission_chunk
                                 or engine.cfg.admission_chunk)
@@ -674,6 +806,29 @@ class BatchScheduler:
         }
         self.admission_log: List[Tuple[int, int]] = []   # (rid, slot)
         self.pool = None    # KVPool, created per run() on paged engines
+        # ---- ft/: per-segment heartbeats -> confirmed failure -> re-mesh
+        # (degraded throughput instead of a killed run).  Only armed on a
+        # ServeMesh-backed engine: the re-mesh plan needs the topology and
+        # pin provenance a bare jax Mesh doesn't carry.
+        self.ft_timeout_steps = ft_timeout_steps
+        self.ft_confirm = ft_confirm
+        self.ft_events: List[Dict[str, Any]] = []
+        self.failed: set = set()              # confirmed-dead device ids
+        self._injected: List[Tuple[int, int]] = []  # (device_id, at_segment)
+        self._dead: set = set()               # injected deaths now active
+        self.heartbeats = None
+        self.straggler = None
+        self.governor = None
+        if engine.serve_mesh is not None:
+            from repro.ft.elastic import RemeshGovernor
+            from repro.ft.heartbeat import HeartbeatMonitor
+            from repro.ft.straggler import StragglerDetector
+            self._hb_ids: List[int] = list(engine.serve_mesh.device_ids)
+            self.heartbeats = HeartbeatMonitor(
+                len(self._hb_ids), timeout_steps=ft_timeout_steps)
+            self.straggler = StragglerDetector()
+            self.governor = RemeshGovernor(confirm_missing=ft_confirm)
+            self.metrics["remeshes"] = 0
 
     def submit(self, req: Request) -> None:
         if req.max_new_tokens < 1:
@@ -688,6 +843,81 @@ class BatchScheduler:
         req.submit_time = time.perf_counter()
         self.queue.append(req)
 
+    # ------------------------------------------------ ft/: degradation path
+    def inject_failure(self, device_id: int, at_segment: int = 0) -> None:
+        """Simulate device death: heartbeats from ``device_id`` stop once
+        ``at_segment`` segments have completed.  Detection, flap-suppressed
+        confirmation and the re-mesh then run exactly as they would for a
+        real failure — this is the test/bench hook for the degradation
+        path, not a separate code path."""
+        if self.heartbeats is None:
+            raise RuntimeError(
+                "inject_failure needs a ServeMesh-backed engine "
+                "(Engine(..., mesh=make_serve_mesh(...)))")
+        self._injected.append((int(device_id), int(at_segment)))
+
+    def _ft_tick(self, state, logits, rng, seg_wall: float):
+        """One fault-tolerance observation per decode segment."""
+        seg = int(self.metrics["segments"])
+        for dev, at in list(self._injected):
+            if seg >= at:
+                self._dead.add(dev)
+                self._injected.remove((dev, at))
+        for idx, dev in enumerate(self._hb_ids):
+            if dev not in self._dead:
+                self.heartbeats.report(idx, seg, seg_wall)
+        verdict = self.straggler.record(seg_wall)
+        if verdict.is_straggler:
+            self.ft_events.append(dict(
+                type="straggler", segment=seg,
+                wall_s=seg_wall, ema_s=verdict.ema))
+        missing = {self._hb_ids[i]
+                   for i in self.heartbeats.missing_hosts()}
+        confirmed = self.governor.observe(missing=missing)
+        if confirmed:
+            state, logits, rng = self._do_remesh(confirmed, state,
+                                                 logits, rng)
+        return state, logits, rng
+
+    def _do_remesh(self, fresh_failures, state, logits, rng):
+        """Degrade onto the survivors: plan against the skip/hot-spare
+        mask, rebuild the engine's sharded programs on the reduced mesh,
+        and move the LIVE decode state over — in-flight requests keep
+        their KV and finish on the new mesh."""
+        from repro.ft import elastic
+        from repro.ft.heartbeat import HeartbeatMonitor
+        eng = self.engine
+        self.failed |= set(fresh_failures)
+        t0 = time.perf_counter()
+        axis_names = tuple(eng.mesh.axis_names)
+        axis_sizes = tuple(int(eng.mesh.shape[a]) for a in axis_names)
+        # model degree is pinned (param shardings stay valid); shrink the
+        # first non-model axis when the spares run out
+        shrink = next((a for a in axis_names if a != "model"),
+                      axis_names[0])
+        plan = elastic.plan_remesh(
+            eng.serve_mesh.topo, sorted(self.failed),
+            axis_names, axis_sizes, shrink_axis=shrink,
+            strategy=eng.serve_mesh.pin.strategy)
+        eng.apply_remesh(plan)
+        state = eng.shard_state(state)
+        logits = eng.replicate(logits)
+        rng = eng.replicate(rng)
+        latency = time.perf_counter() - t0
+        self._hb_ids = list(plan.device_ids)
+        self.heartbeats = HeartbeatMonitor(
+            len(self._hb_ids), timeout_steps=self.ft_timeout_steps)
+        self.metrics["remeshes"] += 1
+        self.ft_events.append(dict(
+            type="remesh", segment=int(self.metrics["segments"]),
+            failed=sorted(self.failed),
+            remesh_latency_s=latency,
+            axis_sizes=list(plan.axis_sizes),
+            device_ids=list(plan.device_ids),
+            spares=[int(d) for d in plan.dropped
+                    if d not in self.failed]))
+        return state, logits, rng
+
     def run(self) -> Dict[int, Request]:
         eng, cfg = self.engine, self.engine.cfg
         if not self.queue:
@@ -698,10 +928,11 @@ class BatchScheduler:
             self.pool = KVPool(eng.pool_pages, cfg.page_size, nslots,
                                eng.table_width,
                                prefix_cache=cfg.prefix_cache)
-        state = eng.lm.init_decode_state(nslots, cfg.max_seq,
-                                         **eng._state_kwargs())
-        logits = jnp.zeros((nslots, eng.lm.cfg.vocab), eng.lm.dtype)
-        rng = jax.random.PRNGKey(cfg.seed)
+        state = eng.shard_state(eng.lm.init_decode_state(
+            nslots, cfg.max_seq, **eng._state_kwargs()))
+        logits = eng.replicate(
+            jnp.zeros((nslots, eng.lm.cfg.vocab), eng.lm.dtype))
+        rng = eng.replicate(jax.random.PRNGKey(cfg.seed))
         slots: List[Optional[Request]] = [None] * nslots
         remaining = np.zeros(nslots, np.int64)
         # device-side row length (includes segment overshoot the request
@@ -797,6 +1028,7 @@ class BatchScheduler:
                 bucket = min(-(-max(width, 1) // 4) * 4, eng.table_width)
                 state = eng.set_page_table(state,
                                            self.pool.table()[:, :bucket])
+            seg_t0 = time.perf_counter()
             with eng._region_timer(DECODE_REGION):
                 toks, logits, state, rng = eng.decode_segment(steps)(
                     eng.params, state, logits, rng)
@@ -805,6 +1037,9 @@ class BatchScheduler:
             self.metrics["segments"] += 1
             self.metrics["decode_steps"] += steps
             now = time.perf_counter()
+            if self.heartbeats is not None:
+                state, logits, rng = self._ft_tick(state, logits, rng,
+                                                   now - seg_t0)
 
             # ---- retire: finished rows release their slots immediately
             for i in np.nonzero(active)[0]:

@@ -1,0 +1,132 @@
+"""ft/elastic re-mesh edge cases (the degradation path's corners):
+spare exhaustion, simultaneous dead hosts, and flap suppression — a
+straggler that recovers before confirmation must never cost a re-mesh."""
+
+import pytest
+
+from repro.core import topology as topo_mod
+from repro.ft.elastic import RemeshGovernor, plan_remesh
+from repro.ft.straggler import StragglerDetector
+
+
+def _topo(n, chips_per_host=1):
+    spec = topo_mod.TopoSpec(
+        num_pods=1, pod_grid=topo_mod._grid_for_count(n),
+        chips_per_host=chips_per_host)
+    return topo_mod.probe(spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# spare exhaustion
+# ---------------------------------------------------------------------------
+
+def test_remesh_spends_spares_before_shrinking():
+    topo = _topo(4)
+    plan = plan_remesh(topo, [3], axis_names=("data", "model"),
+                       axis_sizes=(1, 2))
+    # 3 survivors for a 2-mesh: same shape, one spare left in the mask
+    assert plan.axis_sizes == (1, 2)
+    assert 3 not in plan.device_ids
+    assert len(set(plan.dropped) - {3}) == 1
+
+
+def test_remesh_losing_the_last_hot_spare():
+    topo = _topo(4)
+    plan = plan_remesh(topo, [2, 3], axis_names=("data", "model"),
+                       axis_sizes=(1, 2))
+    # survivors exactly fill the mesh: the dropped set is ONLY the dead —
+    # no spare remains for the next failure
+    assert plan.axis_sizes == (1, 2)
+    assert set(plan.dropped) == {2, 3}
+    assert len(plan.device_ids) == 2
+    # ... and the next failure has nowhere to go: model degree is pinned
+    # and the data axis is already 1
+    with pytest.raises(ValueError, match="cannot shrink data"):
+        plan_remesh(topo, [1, 2, 3], axis_names=("data", "model"),
+                    axis_sizes=(1, 2))
+
+
+def test_remesh_every_device_dead():
+    topo = _topo(4)
+    with pytest.raises(ValueError, match="no surviving devices"):
+        plan_remesh(topo, [0, 1, 2, 3], axis_names=("data", "model"),
+                    axis_sizes=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# simultaneous dead hosts (whole-host draining)
+# ---------------------------------------------------------------------------
+
+def test_remesh_two_simultaneous_dead_hosts():
+    topo = _topo(8, chips_per_host=2)      # 4 hosts x 2 chips
+    h = {i: topo.chip_by_id(i).host for i in range(8)}
+    a, b = 0, 7
+    assert h[a] != h[b]
+    plan = plan_remesh(topo, [a, b], axis_names=("data", "model"),
+                       axis_sizes=(4, 2))
+    # both hosts drain whole: the dead chips' host-mates go too
+    drained = {c.device_id for c in topo.chips
+               if c.host in (h[a], h[b])}
+    assert len(drained) == 4
+    assert drained.isdisjoint(plan.device_ids)
+    # 4 survivors: data shrank, model degree intact
+    assert plan.axis_sizes[1] == 2
+    assert plan.axis_sizes[0] * 2 <= 4
+    assert len(set(plan.device_ids)) == len(plan.device_ids)
+
+
+# ---------------------------------------------------------------------------
+# flap suppression (RemeshGovernor)
+# ---------------------------------------------------------------------------
+
+def test_governor_straggler_that_recovers_never_fires():
+    gov = RemeshGovernor(confirm_missing=2)
+    assert gov.observe(missing={5}) == set()     # first sighting
+    assert gov.observe(missing=set()) == set()   # recovered: counter resets
+    assert gov.observe(missing={5}) == set()     # counting from scratch
+    assert gov.confirmed == set()
+
+
+def test_governor_confirms_after_consecutive_misses_once():
+    gov = RemeshGovernor(confirm_missing=2)
+    assert gov.observe(missing={5}) == set()
+    assert gov.observe(missing={5}) == {5}       # confirmed exactly here
+    assert gov.observe(missing={5}) == set()     # sticky, reported once
+    assert gov.confirmed == {5}
+
+
+def test_governor_slow_path_with_recovery():
+    gov = RemeshGovernor(confirm_slow=3)
+    assert gov.observe(slow={2}) == set()
+    assert gov.observe(slow={2}) == set()
+    assert gov.observe(slow=set()) == set()      # recovered before 3rd
+    assert gov.observe(slow={2}) == set()
+    assert gov.observe(slow={2}) == set()
+    assert gov.observe(slow={2}) == {2}          # 3 consecutive: confirmed
+
+
+def test_governor_tracks_devices_independently():
+    gov = RemeshGovernor(confirm_missing=2)
+    gov.observe(missing={1, 2})
+    assert gov.observe(missing={2}) == {2}       # 1 recovered, 2 confirmed
+    assert gov.confirmed == {2}
+
+
+def test_governor_rejects_bad_thresholds():
+    with pytest.raises(ValueError):
+        RemeshGovernor(confirm_missing=0)
+
+
+def test_straggler_detector_recovery_resets():
+    det = StragglerDetector(alpha=0.3, threshold=3.0, warmup=3,
+                            min_ratio=1.5)
+    for _ in range(6):
+        det.record(1.0)
+    flagged = det.record(10.0).is_straggler      # one outlier flags ...
+    assert flagged
+    assert not det.record(1.0).is_straggler      # ... and recovery clears
+    # a governor driven by per-tick verdicts therefore never confirms
+    gov = RemeshGovernor(confirm_slow=2)
+    assert gov.observe(slow={0} if flagged else set()) == set()
+    assert gov.observe(slow=set()) == set()
+    assert gov.confirmed == set()

@@ -36,8 +36,12 @@ def test_parse_pinlist():
 
 
 def test_parse_pinlist_rejects_duplicates_and_descending():
-    with pytest.raises(ValueError):
+    # the message names the offending device: a duplicated id in a long
+    # --pin list should be findable without bisecting the string
+    with pytest.raises(ValueError, match="device 2 pinned twice"):
         pin_mod.parse_pinlist("0-3,2")
+    with pytest.raises(ValueError, match="device 8 pinned twice"):
+        pin_mod.parse_pinlist("8,8")
     with pytest.raises(ValueError):
         pin_mod.parse_pinlist("5-3")
     with pytest.raises(ValueError):
