@@ -73,10 +73,16 @@ def _run_sched(eng, reqs, **sched_kw):
     return toks, dt, sched
 
 
-def run(csv, session=None, smoke=False):
+def run(csv, session=None, smoke=False, ft=None):
     from repro.kernels import registry
     from repro.launch.mesh import make_serve_mesh
     from repro.serve import Request
+
+    # ft tunables: CLI (--ft-timeout-steps etc. via launch.cli) overrides
+    # the aggressive defaults the degradation experiment wants
+    ft = dict(ft or {})
+    ft.setdefault("ft_timeout_steps", 1)
+    ft.setdefault("ft_confirm", 1)
 
     ndev = len(jax.devices())
     shapes = [s for s in [(1, 2), (1, 4)] if int(np.prod(s)) <= ndev]
@@ -139,7 +145,7 @@ def run(csv, session=None, smoke=False):
         from repro.serve import Engine
         eng = Engine(lm, params, scfg, mesh=sm)
         from repro.serve import BatchScheduler
-        sched = BatchScheduler(eng, ft_timeout_steps=1, ft_confirm=1)
+        sched = BatchScheduler(eng, **ft)
         for r in mk():
             sched.submit(r)
         sched.inject_failure(sm.device_ids[1], at_segment=1)
@@ -178,11 +184,16 @@ def main(argv=None) -> int:
                     help="CI scale: tiny model, few requests")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="write the summary here (BENCH_mesh.json)")
+    from repro.launch import cli as launch_cli
+    launch_cli.add_ft_args(ap)
+    # the degradation experiment wants aggressive detection by default
+    ap.set_defaults(ft_timeout_steps=1, ft_confirm=1)
     args = ap.parse_args(argv)
     from repro.core.session import ProfileSession
     session = ProfileSession()
     csv = []
-    summary = run(csv, session=session, smoke=args.smoke)
+    summary = run(csv, session=session, smoke=args.smoke,
+                  ft=launch_cli.ft_kwargs(args))
     print("name,us_per_call,derived")
     for name, us, derived in csv:
         print(f"{name},{us:.2f},{derived}")

@@ -20,7 +20,7 @@ import sys
 import time
 import traceback
 
-from benchmarks import (bench_autotune, bench_bandwidth_map,
+from benchmarks import (bench_autotune, bench_bandwidth_map, bench_chaos,
                         bench_flash_prefill, bench_jacobi_traffic,
                         bench_marker_overhead, bench_mesh,
                         bench_paged_decode, bench_perfctr, bench_serve,
@@ -35,6 +35,7 @@ BENCHES = {
     "bandwidth_map": bench_bandwidth_map,   # §VI future plans
     "serve": bench_serve,                   # measurement-driven serving loop
     "mesh": bench_mesh,                    # sharded serving + ft/ degradation
+    "chaos": bench_chaos,                  # robustness under fault injection
     "flash_prefill": bench_flash_prefill,  # dispatched kernel + autotuner
     "paged_decode": bench_paged_decode,    # paged KV pool: bytes/token
     "autotune": bench_autotune,            # registry tune table warm starts

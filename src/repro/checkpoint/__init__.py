@@ -1,3 +1,7 @@
 from repro.checkpoint.store import (latest_step, list_steps,  # noqa: F401
                                     restore_checkpoint, save_checkpoint,
                                     wait_pending)
+from repro.checkpoint.store import (SnapshotCorrupt,  # noqa: F401
+                                    latest_snapshot, list_snapshots,
+                                    load_serving_snapshot,
+                                    save_serving_snapshot)

@@ -77,6 +77,7 @@ class CacheStats:
     misses: int = 0
     stores: int = 0
     corrupt_evictions: int = 0
+    quarantined: int = 0
 
     def render(self) -> str:
         total = self.hits + self.misses
@@ -84,7 +85,9 @@ class CacheStats:
         return (f"cache: {self.hits} hits / {self.misses} misses "
                 f"({rate:.0%}), {self.stores} stores"
                 + (f", {self.corrupt_evictions} corrupt evicted"
-                   if self.corrupt_evictions else ""))
+                   if self.corrupt_evictions else "")
+                + (f", {self.quarantined} quarantined"
+                   if self.quarantined else ""))
 
 
 class ArtifactCache:
@@ -130,7 +133,10 @@ class ArtifactCache:
                 self.stats.misses += 1
             return None
         except (json.JSONDecodeError, ValueError, OSError):
-            self._evict(digest)
+            # keep the damaged bytes (renamed aside) for post-mortem
+            # instead of destroying the evidence; the read is a miss and
+            # the caller re-measures, overwriting the healthy path
+            self.quarantine(digest)
             with self._lock:
                 self.stats.corrupt_evictions += 1
                 self.stats.misses += 1
@@ -186,6 +192,32 @@ class ArtifactCache:
                 os.unlink(p)
             except OSError:
                 pass
+
+    def quarantine(self, digest: str) -> bool:
+        """Move a damaged entry aside as ``<path>.corrupt`` (atomic
+        rename; any previous quarantine of the same digest is replaced).
+        The digest then reads as a miss — the caller re-measures and the
+        healthy path is rewritten — while the bad bytes stay inspectable.
+        Returns True if anything was moved."""
+        moved = False
+        for p in (self._entry_path(digest), self._hlo_path(digest)):
+            if not os.path.exists(p):
+                continue
+            try:
+                os.replace(p, p + ".corrupt")
+                moved = True
+            except OSError:
+                # cross-device or permission trouble: fall back to evict
+                # so the corrupt entry can never be served again
+                try:
+                    os.unlink(p)
+                    moved = True
+                except OSError:
+                    pass
+        if moved:
+            with self._lock:
+                self.stats.quarantined += 1
+        return moved
 
     def entries(self) -> Iterator[str]:
         """Digests currently stored (current schema tree only)."""

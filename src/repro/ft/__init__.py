@@ -1,3 +1,4 @@
+from repro.ft.chaos import ChaosEvent, ChaosSchedule  # noqa: F401
 from repro.ft.elastic import (RemeshPlan, build_mesh_from_plan,  # noqa: F401
                               plan_remesh, reshard_tree)
 from repro.ft.heartbeat import Heartbeat, HeartbeatMonitor  # noqa: F401

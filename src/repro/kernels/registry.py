@@ -54,6 +54,7 @@ import dataclasses
 import functools
 import os
 import threading
+import warnings
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -584,6 +585,29 @@ def _rec_to_entry(rec: TuneRecord, candidates: Sequence[Tuple],
     }
 
 
+#: digests already warned about this process — corrupt tune entries warn
+#: ONCE, not per lookup (dispatch consults the table on every call)
+_QUARANTINE_WARNED: set = set()
+_QUARANTINE_LOCK = threading.Lock()
+
+
+def _quarantine_tune_entry(cache: ArtifactCache, digest: str, family: str,
+                           key: str, err: Exception) -> None:
+    """A persisted tune-table entry failed to parse: move it aside as
+    ``*.corrupt`` (post-mortem evidence, never served again), warn once
+    per process, and let the caller fall through to a re-sweep/miss —
+    a damaged cache degrades to a cold cache, never to a crash."""
+    cache.quarantine(digest)
+    with _QUARANTINE_LOCK:
+        if digest in _QUARANTINE_WARNED:
+            return
+        _QUARANTINE_WARNED.add(digest)
+    warnings.warn(
+        f"corrupt tune-table entry for {family}[{key}] "
+        f"({type(err).__name__}: {err}) quarantined to *.corrupt under "
+        f"{cache.root}; re-sweeping", RuntimeWarning, stacklevel=3)
+
+
 def _entry_to_rec(family: str, key: str, entry: Dict[str, Any]) -> TuneRecord:
     return TuneRecord(
         family=family, key=key, choice=tuple(entry["choice"]),
@@ -653,14 +677,24 @@ def autotune(family: str, session, *, impl: Optional[str] = None,
         if (entry is not None
                 and entry.get("candidates") == [list(c) for c in cands]
                 and entry.get("vmem_fraction") == vmem_fraction):
-            rec = _entry_to_rec(family, key, entry)
-            for rkey, sub in entry.get("records", {}).items():
-                _TABLE.put(TuneRecord(
-                    family=family, key=rkey, choice=tuple(sub["choice"]),
-                    score_s=float(sub["score_s"]), scores=rec.scores,
-                    lowerings=0, swept=False,
-                    winner_events=dict(sub.get("winner_events") or {})))
-            return rec
+            try:
+                rec = _entry_to_rec(family, key, entry)
+                subs = [(rkey, tuple(sub["choice"]), float(sub["score_s"]),
+                         dict(sub.get("winner_events") or {}))
+                        for rkey, sub in (entry.get("records") or {}).items()]
+            except (KeyError, TypeError, ValueError, AttributeError) as e:
+                # schema-valid JSON, garbage content (truncated write,
+                # hand edit, version skew): quarantine + fall through to
+                # a fresh sweep instead of crashing dispatch
+                _quarantine_tune_entry(session.cache, digest, family,
+                                       key, e)
+            else:
+                for rkey, rchoice, rscore, rev in subs:
+                    _TABLE.put(TuneRecord(
+                        family=family, key=rkey, choice=rchoice,
+                        score_s=rscore, scores=rec.scores,
+                        lowerings=0, swept=False, winner_events=rev))
+                return rec
 
     itemsize = jnp.dtype(facts["dtype"]).itemsize
     budget = chip.vmem_bytes * vmem_fraction
@@ -720,14 +754,22 @@ def _best_from_disk(family: str, key: str) -> Optional[Tuple]:
     digest = _tune_digest("tune-choice", family, key)
     for cache in _tune_caches():
         entry = cache.get(digest)
-        if entry is not None and "choice" in entry:
+        if entry is None or "choice" not in entry:
+            continue
+        try:
             choice = tuple(entry["choice"])
-            _TABLE.put(TuneRecord(
+            rec = TuneRecord(
                 family=family, key=key, choice=choice,
                 score_s=float(entry.get("score_s", "nan")),
                 scores={}, lowerings=0, swept=False,
-                winner_events=dict(entry.get("winner_events") or {})))
-            return choice
+                winner_events=dict(entry.get("winner_events") or {}))
+        except (TypeError, ValueError, AttributeError) as e:
+            # a damaged persisted winner reads as a miss in THIS cache;
+            # later roots may still hold a healthy copy
+            _quarantine_tune_entry(cache, digest, family, key, e)
+            continue
+        _TABLE.put(rec)
+        return choice
     return None
 
 

@@ -91,6 +91,92 @@ def kv_config_kwargs(args: argparse.Namespace,
             "prefix_cache": not getattr(args, "no_prefix_cache", False)}
 
 
+def add_ft_args(ap: argparse.ArgumentParser) -> None:
+    """Fault-tolerance tunables shared by ``launch/serve.py`` and
+    ``benchmarks/bench_mesh.py`` (consume with :func:`ft_kwargs`)."""
+    g = ap.add_argument_group("fault tolerance")
+    g.add_argument("--ft-timeout-steps", type=int, default=3,
+                   help="segments a device may miss heartbeats before it "
+                        "counts as missing (default 3)")
+    g.add_argument("--ft-confirm", type=int, default=2,
+                   help="consecutive missing observations before the "
+                        "re-mesh governor confirms a death — absorbs "
+                        "single-heartbeat flaps (default 2)")
+    g.add_argument("--straggler-threshold", type=float, default=4.0,
+                   help="EMA deviations a segment wall must exceed to be "
+                        "flagged a straggler (default 4.0)")
+    g.add_argument("--straggler-min-ratio", type=float, default=1.5,
+                   help="minimum wall/EMA ratio for a straggler flag — "
+                        "suppresses noise on fast segments (default 1.5)")
+
+
+def ft_kwargs(args: argparse.Namespace) -> Dict[str, object]:
+    """BatchScheduler kwargs from the :func:`add_ft_args` flags."""
+    return {
+        "ft_timeout_steps": getattr(args, "ft_timeout_steps", 3),
+        "ft_confirm": getattr(args, "ft_confirm", 2),
+        "straggler_threshold": getattr(args, "straggler_threshold", 4.0),
+        "straggler_min_ratio": getattr(args, "straggler_min_ratio", 1.5),
+    }
+
+
+def add_robustness_args(ap: argparse.ArgumentParser) -> None:
+    """Request-plane robustness flags (consume with
+    :func:`robustness_kwargs`): deadlines, bounded admission, snapshots,
+    seeded chaos injection."""
+    g = ap.add_argument_group("request-plane robustness")
+    g.add_argument("--deadline-ms", type=float, default=None,
+                   help="per-request total wall deadline; expired rows "
+                        "retire at the next segment boundary")
+    g.add_argument("--ttft-deadline-ms", type=float, default=None,
+                   help="per-request first-token deadline")
+    g.add_argument("--max-queue", type=int, default=None,
+                   help="bound the admission queue; overload is refused "
+                        "in O(1) with a structured retryable rejection "
+                        "(default: unbounded)")
+    g.add_argument("--shed-policy", default="reject-new",
+                   choices=["reject-new", "shed-lowest"],
+                   help="at --max-queue capacity: refuse the arrival, or "
+                        "evict the newest request of the strictly worst "
+                        "priority class (default reject-new)")
+    g.add_argument("--snapshot-dir", default=None,
+                   help="write crash-safe serving snapshots here (queue, "
+                        "per-request progress, KV prefix index) and on "
+                        "drain/exit")
+    g.add_argument("--snapshot-every", type=int, default=0,
+                   help="snapshot interval in decode segments (0 = only "
+                        "at exit; needs --snapshot-dir)")
+    g.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                   help="drive a seeded ChaosSchedule through the run "
+                        "(fault injection with invariant checks after "
+                        "every event; same seed = same faults)")
+
+
+def robustness_kwargs(args: argparse.Namespace,
+                      ap: Optional[argparse.ArgumentParser] = None
+                      ) -> Dict[str, object]:
+    """BatchScheduler kwargs from :func:`add_robustness_args` (the
+    per-request deadline flags are applied at submit time by the caller,
+    not here).  Validates eagerly: ``--snapshot-every`` without
+    ``--snapshot-dir`` is a usage error."""
+    if getattr(args, "snapshot_every", 0) and \
+            not getattr(args, "snapshot_dir", None):
+        msg = "--snapshot-every needs --snapshot-dir"
+        if ap is not None:
+            ap.error(msg)
+        raise ValueError(msg)
+    out: Dict[str, object] = {
+        "max_queue": getattr(args, "max_queue", None),
+        "shed_policy": getattr(args, "shed_policy", "reject-new"),
+        "snapshot_dir": getattr(args, "snapshot_dir", None),
+        "snapshot_every": getattr(args, "snapshot_every", 0),
+    }
+    if getattr(args, "chaos", None) is not None:
+        from repro.ft.chaos import ChaosSchedule
+        out["chaos"] = ChaosSchedule(seed=args.chaos)
+    return out
+
+
 def add_cache_args(ap: argparse.ArgumentParser) -> None:
     """``--cache-dir`` / ``--no-cache`` (compile-artifact cache)."""
     ap.add_argument("--cache-dir", default=None,

@@ -46,6 +46,11 @@ def main(argv=None) -> int:
     cli.add_impl_args(ap, legacy_attn=True)
     cli.add_cache_args(ap)
     cli.add_json_args(ap, what="serve summary")
+    cli.add_ft_args(ap)
+    cli.add_robustness_args(ap)
+    ap.add_argument("--priority-mix", default=None, metavar="P[,P...]",
+                    help="cycle synthetic requests through these priority "
+                         "classes (lower = more urgent; e.g. 0,1,1,2)")
     ap.add_argument("--page-size", type=int, default=0,
                     help="paged KV cache: tokens per page (0 = dense "
                          "call-sized caches; decode traffic becomes "
@@ -157,14 +162,30 @@ def main(argv=None) -> int:
         eng.instrument(ctr, prompt_len=args.prompt_len)
         print("[serve] instrumented serve.prefill/serve.decode regions")
 
-    sched = BatchScheduler(eng)
+    from repro.serve.admission import AdmissionRejected
+    sched = BatchScheduler(eng, **cli.ft_kwargs(args),
+                           **cli.robustness_kwargs(args, ap))
+    if sched.chaos is not None:
+        print(f"[serve] chaos schedule armed: seed={args.chaos}, "
+              f"{len(sched.chaos.events)} events")
+    prios = ([int(p) for p in args.priority_mix.split(",")]
+             if args.priority_mix else [1])
     rng = np.random.default_rng(0)
     shared = rng.integers(1, cfg.vocab, size=args.shared_prefix).tolist()
     for rid in range(args.requests):
         prompt = shared + rng.integers(1, cfg.vocab,
                                        size=args.prompt_len).tolist()
-        sched.submit(Request(rid=rid, prompt=prompt,
-                             max_new_tokens=args.max_new))
+        try:
+            sched.submit(Request(
+                rid=rid, prompt=prompt, max_new_tokens=args.max_new,
+                priority=prios[rid % len(prios)],
+                deadline_ms=args.deadline_ms,
+                ttft_deadline_ms=args.ttft_deadline_ms))
+        except AdmissionRejected as e:
+            r = e.rejection
+            print(f"[serve] req {rid} rejected ({r.reason}, "
+                  f"depth={r.queue_depth}, "
+                  f"retry_after={r.retry_after_s:.2f}s)")
     t0 = time.perf_counter()
     done = sched.run()
     dt = time.perf_counter() - t0
@@ -179,6 +200,16 @@ def main(argv=None) -> int:
     if serve_mesh is not None and sched.ft_events:
         print(f"[serve] ft: remeshes={sched.metrics['remeshes']:.0f} "
               f"events={[e['type'] for e in sched.ft_events]}")
+    m = sched.metrics
+    if any(m[k] for k in ("expired", "cancelled", "sheds", "rejections",
+                          "snapshots", "restores")):
+        print(f"[serve] robustness: rejections={m['rejections']:.0f} "
+              f"sheds={m['sheds']:.0f} expired={m['expired']:.0f} "
+              f"cancelled={m['cancelled']:.0f} "
+              f"snapshots={m['snapshots']:.0f} "
+              f"restores={m['restores']:.0f}")
+    if sched.chaos is not None:
+        print(f"[serve] chaos: {sched.chaos.summary()}")
     if sched.pool is not None:
         m = sched.metrics
         hit = (m["prompt_tokens"] - m["prefilled_tokens"]) \
@@ -217,6 +248,13 @@ def main(argv=None) -> int:
                          if serve_mesh is not None else None),
                 "remeshes": sched.metrics.get("remeshes"),
                 "ft_events": sched.ft_events,
+                "rejections": sched.metrics["rejections"],
+                "sheds": sched.metrics["sheds"],
+                "expired": sched.metrics["expired"],
+                "cancelled": sched.metrics["cancelled"],
+                "snapshots": sched.metrics["snapshots"],
+                "chaos": (sched.chaos.summary()
+                          if sched.chaos is not None else None),
             }, fh, indent=2, sort_keys=True)
         print(f"[serve] wrote {args.json}")
     return 0

@@ -114,6 +114,10 @@ class ServeConfig:
 KV_DTYPES = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
 
 
+#: Request.status values that end a request's life (no further tokens)
+TERMINAL_STATUSES = ("done", "expired", "cancelled", "shed", "rejected")
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -123,6 +127,25 @@ class Request:
     submit_time: float = 0.0        # set by BatchScheduler.submit
     first_token_time: float = 0.0   # set when the first token reaches host
     finished: bool = False          # set by the scheduler (eos or budget)
+    # ---- request-plane robustness (all optional; defaults = old behavior)
+    priority: int = 1               # lower is more urgent (0 interactive,
+                                    # 1 default, 2 batch); shed-lowest
+                                    # evicts the worst class first
+    deadline_ms: Optional[float] = None       # total wall budget from submit
+    ttft_deadline_ms: Optional[float] = None  # first-token wall budget
+    status: str = "new"             # new|queued|active|done|expired|
+                                    # cancelled|shed|rejected
+    cancel_requested: bool = False  # the cancellation token (see cancel())
+
+    def cancel(self) -> None:
+        """Request-side cancellation token: the scheduler retires the row
+        (or dequeues the request) at the next segment boundary; no token
+        generated after the flag is observed is ever returned."""
+        self.cancel_requested = True
+
+    @property
+    def terminal(self) -> bool:
+        return self.status in TERMINAL_STATUSES
 
     @property
     def done(self) -> bool:
@@ -761,6 +784,12 @@ class Engine:
         with perfctr.marker(DECODE_REGION):
             perfctr.probe(self.lm.decode_step, params_s, tok_s, state_s)
 
+    def restore(self, path: str, **scheduler_kwargs) -> "BatchScheduler":
+        """Rebuild a :class:`BatchScheduler` from a serving snapshot
+        written by a previous run (crash recovery / planned restart).
+        See :meth:`BatchScheduler.restore` for the parity contract."""
+        return BatchScheduler.restore(self, path, **scheduler_kwargs)
+
 
 class BatchScheduler:
     """True continuous batching over an Engine's shared decode state.
@@ -785,16 +814,56 @@ class BatchScheduler:
     active rows to cover its writes and uploads the fresh page table, and
     retirement returns the pages — one long request no longer inflates
     every slot's buffer.
+
+    **Request-plane robustness** (the request lifecycle beyond the happy
+    path):
+
+    * admission is bounded (:class:`repro.serve.admission.AdmissionQueue`):
+      ``max_queue``/``shed_policy`` shed or reject overload in O(1) with a
+      structured retryable error, and a head-of-line request deferred by
+      ``can_reserve`` blocks the queue after ``max_bypass`` bypasses
+      instead of starving;
+    * requests carry deadlines (``deadline_ms``/``ttft_deadline_ms``), a
+      priority class and a cancellation token; expired or cancelled rows
+      are retired at the next segment boundary — slot and pages freed
+      immediately, the in-progress segment's tokens discarded, the event
+      recorded in ``ft_events``;
+    * :meth:`drain` stops admission and finishes in-flight rows;
+      ``run(max_segments=N)`` exits early with active requests re-queued
+      (progress kept) — the controlled-teardown path snapshots build on;
+    * with ``snapshot_dir`` set, a crash-safe serving snapshot (queue,
+      progress, pool index + page contents; see ``checkpoint/store.py``)
+      is written every ``snapshot_every`` segments and at exit;
+      :meth:`restore` rebuilds a scheduler from one — resident prefix
+      pages resume without recompute, everything else replays from the
+      prompt, and fp32 greedy tokens match an uninterrupted run;
+    * a :class:`repro.ft.chaos.ChaosSchedule` passed as ``chaos`` is
+      ticked every segment boundary (fault injection with invariant
+      checks — see ``ft/chaos.py``).
     """
 
     def __init__(self, engine: Engine,
                  admission_chunk: Optional[int] = None,
-                 ft_timeout_steps: int = 3, ft_confirm: int = 2):
+                 ft_timeout_steps: int = 3, ft_confirm: int = 2,
+                 straggler_threshold: float = 4.0,
+                 straggler_min_ratio: float = 1.5,
+                 max_queue: Optional[int] = None,
+                 shed_policy: str = "reject-new",
+                 max_bypass: int = 4,
+                 snapshot_dir: Optional[str] = None,
+                 snapshot_every: int = 0, snapshot_keep: int = 3,
+                 chaos=None):
+        from repro.serve.admission import AdmissionQueue
         self.engine = engine
         self.admission_chunk = (admission_chunk
                                 or engine.cfg.admission_chunk)
-        self.queue: collections.deque = collections.deque()
+        self.queue = AdmissionQueue(max_queue=max_queue,
+                                    shed_policy=shed_policy,
+                                    max_bypass=max_bypass)
+        self.max_bypass = int(max_bypass)
+        self.requests: Dict[int, Request] = {}   # every submitted rid
         self.completed: Dict[int, Request] = {}
+        self.aborted: Dict[int, Request] = {}    # expired/cancelled/shed
         self.metrics: Dict[str, float] = {
             "segments": 0, "admissions": 0, "decode_steps": 0,
             # prefix-cache telemetry (paged engines; zero otherwise)
@@ -803,34 +872,64 @@ class BatchScheduler:
             "prefilled_tokens": 0,   # tokens actually prefilled (suffixes)
             "pages_shared": 0,       # full prefix pages mapped read-only
             "cow_copies": 0,         # copy-on-write page copies issued
+            # request-plane robustness telemetry
+            "expired": 0, "cancelled": 0, "sheds": 0, "rejections": 0,
+            "bypasses": 0, "snapshots": 0, "restores": 0,
         }
         self.admission_log: List[Tuple[int, int]] = []   # (rid, slot)
         self.pool = None    # KVPool, created per run() on paged engines
+        self.draining = False
+        self.snapshot_dir = snapshot_dir
+        self.snapshot_every = int(snapshot_every)
+        self.snapshot_keep = int(snapshot_keep)
+        self.chaos = chaos
+        self._running = False
+        self._wall_inflate = 1.0       # chaos slow/hung segment multiplier
+        self._flap: set = set()        # devices skipping ONE heartbeat
+        self._restore_index = None     # pool index payload from restore()
+        # live run state (instance attrs so drain()/chaos/check() can see
+        # them between segments; only meaningful while _running)
+        self._slots: List[Optional[Request]] = []
+        self._remaining = np.zeros(0, np.int64)
+        self._slot_len = np.zeros(0, np.int64)
         # ---- ft/: per-segment heartbeats -> confirmed failure -> re-mesh
-        # (degraded throughput instead of a killed run).  Only armed on a
-        # ServeMesh-backed engine: the re-mesh plan needs the topology and
-        # pin provenance a bare jax Mesh doesn't carry.
+        # (degraded throughput instead of a killed run).  Heartbeats and
+        # the governor are only armed on a ServeMesh-backed engine (the
+        # re-mesh plan needs topology + pin provenance a bare jax Mesh
+        # doesn't carry); the straggler detector watches segment walls on
+        # EVERY engine so hung/slow segments surface single-device too.
         self.ft_timeout_steps = ft_timeout_steps
         self.ft_confirm = ft_confirm
         self.ft_events: List[Dict[str, Any]] = []
         self.failed: set = set()              # confirmed-dead device ids
         self._injected: List[Tuple[int, int]] = []  # (device_id, at_segment)
         self._dead: set = set()               # injected deaths now active
+        from repro.ft.straggler import StragglerDetector
+        self.straggler = StragglerDetector(threshold=straggler_threshold,
+                                           min_ratio=straggler_min_ratio)
         self.heartbeats = None
-        self.straggler = None
         self.governor = None
         if engine.serve_mesh is not None:
             from repro.ft.elastic import RemeshGovernor
             from repro.ft.heartbeat import HeartbeatMonitor
-            from repro.ft.straggler import StragglerDetector
             self._hb_ids: List[int] = list(engine.serve_mesh.device_ids)
             self.heartbeats = HeartbeatMonitor(
                 len(self._hb_ids), timeout_steps=ft_timeout_steps)
-            self.straggler = StragglerDetector()
             self.governor = RemeshGovernor(confirm_missing=ft_confirm)
             self.metrics["remeshes"] = 0
 
     def submit(self, req: Request) -> None:
+        """Queue one request, or refuse it in O(1).
+
+        Raises ValueError on malformed requests (unchanged) and
+        :class:`repro.serve.admission.AdmissionRejected` — carrying a
+        structured, usually retryable :class:`Rejection` — when the
+        bounded queue refuses the arrival (``reason="queue_full"``), the
+        scheduler is draining, or ``shed-lowest`` found nothing less
+        urgent to evict.  A successful push may instead shed a queued
+        lower-priority request; the victim lands in ``aborted`` with
+        ``status="shed"`` and an ft event."""
+        from repro.serve.admission import AdmissionRejected
         if req.max_new_tokens < 1:
             raise ValueError(
                 f"request {req.rid}: max_new_tokens must be >= 1, got "
@@ -841,7 +940,333 @@ class BatchScheduler:
                 f"({req.max_new_tokens}) exceeds max_seq "
                 f"({self.engine.cfg.max_seq})")
         req.submit_time = time.perf_counter()
-        self.queue.append(req)
+        self.requests[req.rid] = req
+        try:
+            victim = self.queue.push(req)
+        except AdmissionRejected as e:
+            req.status = "rejected"
+            self.metrics["rejections"] += 1
+            self.ft_events.append(dict(
+                type="reject", rid=req.rid, reason=e.rejection.reason,
+                retryable=e.rejection.retryable,
+                retry_after_s=e.rejection.retry_after_s,
+                segment=int(self.metrics["segments"])))
+            raise
+        req.status = "queued"
+        if victim is not None:
+            victim.status = "shed"
+            self.aborted[victim.rid] = victim
+            self.metrics["sheds"] += 1
+            self.ft_events.append(dict(
+                type="shed", rid=victim.rid, priority=victim.priority,
+                by_rid=req.rid, segment=int(self.metrics["segments"])))
+
+    def cancel(self, rid: int) -> bool:
+        """Host-side cancellation: flag ``rid`` for retirement at the next
+        segment boundary (queued requests are dequeued immediately when no
+        run is active).  Returns False for unknown/already-terminal rids —
+        cancelling a finished request is a no-op, not an error."""
+        req = self.requests.get(rid)
+        if req is None or req.terminal:
+            return False
+        req.cancel_requested = True
+        if not self._running and self.queue.remove(req):
+            self._finish_abnormal(req, "cancel")
+        return True
+
+    def drain(self) -> Dict[int, Request]:
+        """Graceful drain: stop admission, finish accepted work.
+
+        Future submits are refused (``reason="draining"``, not retryable
+        — the process is going away); requests already queued or
+        in-flight run to completion, and with ``snapshot_dir`` set a
+        final snapshot is written on exit.  Returns ``completed``."""
+        self.draining = True
+        self.queue.close()
+        if not self._running:
+            return self.run()
+        return self.completed
+
+    # --------------------------------------------- lifecycle bookkeeping
+    def _expiry_reason(self, req: Request, now: float) -> Optional[str]:
+        """Why ``req`` should be expired at this boundary, or None."""
+        age_ms = (now - req.submit_time) * 1e3
+        if req.deadline_ms is not None and age_ms > req.deadline_ms:
+            return "deadline"
+        if (req.ttft_deadline_ms is not None and not req.first_token_time
+                and age_ms > req.ttft_deadline_ms):
+            return "ttft_deadline"
+        return None
+
+    def _finish_abnormal(self, req: Request, reason: str) -> None:
+        """Terminal bookkeeping for a cancelled/expired request: it never
+        reaches ``completed`` and gains no further tokens (tokens already
+        delivered in earlier segments stay — they were observable)."""
+        req.status = "cancelled" if reason == "cancel" else "expired"
+        self.aborted[req.rid] = req
+        kind = "cancel" if reason == "cancel" else "expiry"
+        self.metrics["cancelled" if reason == "cancel" else "expired"] += 1
+        self.ft_events.append(dict(
+            type=kind, rid=req.rid, reason=reason,
+            generated=len(req.generated),
+            segment=int(self.metrics["segments"])))
+
+    def _release_slot(self, i: int) -> None:
+        self._slots[i] = None
+        self._remaining[i] = 0
+        self._slot_len[i] = 0
+        if self.pool is not None:
+            self.pool.release(i)
+
+    def _sweep_queue(self, now: float) -> None:
+        """Drop cancelled/expired requests before they ever prefill."""
+        for req in list(self.queue.ordered()):
+            reason = ("cancel" if req.cancel_requested
+                      else self._expiry_reason(req, now))
+            if reason:
+                self.queue.remove(req)
+                self._finish_abnormal(req, reason)
+
+    def _fits(self, req: Request) -> bool:
+        """Could ``req`` reserve its worst case right now?  (Resume
+        requests measure prompt + progress.)"""
+        if self.pool is None:
+            return True
+        full_len = len(req.prompt) + len(req.generated)
+        worst = (full_len + (req.max_new_tokens - len(req.generated))
+                 + self.engine.seg_cap)
+        _, shared = self.pool.match_prefix(req.prompt + req.generated)
+        return self.pool.can_reserve(worst, shared_pages=shared)
+
+    def _pick_admission(self) -> Optional[Request]:
+        """Next admissible queued request under the bounded-bypass rule:
+        priority-FIFO order, but once the head has been bypassed
+        ``max_bypass`` times the queue blocks until the head fits."""
+        head = self.queue.head()
+        if head is None:
+            return None
+        for idx, req in enumerate(self.queue.ordered()):
+            if self._fits(req):
+                if idx > 0:
+                    self.queue.note_bypass(head)
+                    self.metrics["bypasses"] += 1
+                return req
+            if idx == 0 and self.queue.bypasses(head) >= self.max_bypass:
+                return None           # head blocked: let pages drain to it
+        return None
+
+    def check(self) -> None:
+        """Scheduler-level invariants (the chaos harness calls this after
+        every injected event, on top of ``KVPool.check``)."""
+        live = {r.rid for r in self._slots if r is not None}
+        queued = {r.rid for r in self.queue.ordered()}
+        done = set(self.completed)
+        dead = set(self.aborted)
+        for a, b, what in ((live, queued, "active+queued"),
+                           (live, done, "active+completed"),
+                           (live, dead, "active+aborted"),
+                           (queued, done, "queued+completed"),
+                           (queued, dead, "queued+aborted"),
+                           (done, dead, "completed+aborted")):
+            assert not (a & b), f"request in two states ({what}): {a & b}"
+        for i, req in enumerate(self._slots):
+            if req is None:
+                continue
+            assert req.status == "active", \
+                f"slot {i}: status {req.status!r} while resident"
+            assert len(req.generated) <= req.max_new_tokens, \
+                f"slot {i}: generated past budget"
+            if self.pool is not None:
+                assert self.pool.slot_pages(i) > 0, \
+                    f"slot {i}: active with no pages"
+        for rid in done:
+            assert self.completed[rid].status == "done", \
+                f"completed request {rid} has status " \
+                f"{self.completed[rid].status!r}"
+        if self.pool is not None:
+            self.pool.check()
+
+    # ------------------------------------------------ crash-safe snapshots
+    @staticmethod
+    def _req_to_dict(req: Request) -> Dict[str, Any]:
+        return dict(rid=req.rid, prompt=list(req.prompt),
+                    generated=list(req.generated),
+                    max_new_tokens=req.max_new_tokens,
+                    priority=req.priority, deadline_ms=req.deadline_ms,
+                    ttft_deadline_ms=req.ttft_deadline_ms,
+                    status=req.status, finished=req.finished)
+
+    @staticmethod
+    def _req_from_dict(d: Dict[str, Any]) -> Request:
+        return Request(rid=int(d["rid"]), prompt=list(d["prompt"]),
+                       generated=list(d["generated"]),
+                       max_new_tokens=int(d["max_new_tokens"]),
+                       priority=int(d.get("priority", 1)),
+                       deadline_ms=d.get("deadline_ms"),
+                       ttft_deadline_ms=d.get("ttft_deadline_ms"),
+                       status=str(d.get("status", "queued")),
+                       finished=bool(d.get("finished", False)))
+
+    def _snapshot_config(self) -> Dict[str, Any]:
+        cfg = self.engine.cfg
+        return dict(max_seq=cfg.max_seq, batch_slots=cfg.batch_slots,
+                    temperature=cfg.temperature, eos_token=cfg.eos_token,
+                    seed=cfg.seed, page_size=cfg.page_size,
+                    kv_dtype=cfg.kv_dtype, prefix_cache=cfg.prefix_cache,
+                    pool_pages=(self.engine.pool_pages
+                                if self.engine.paged else None),
+                    vocab=self.engine.lm.cfg.vocab)
+
+    def _export_index(self, state) -> Optional[Dict[str, Any]]:
+        """Serialize the prefix trie + its device page CONTENTS — the
+        part of the KV state a restore can reuse without recompute."""
+        if self.pool is None or not self.engine.cfg.prefix_cache:
+            return None
+        nodes = self.pool.export_index()
+        if not nodes:
+            return None
+        ids = [n["page"] for n in nodes]
+        caches = state["caches"]
+        idx = jnp.asarray(np.asarray(ids, np.int32))
+        fetch = {"k": caches.k_pages[:, idx], "v": caches.v_pages[:, idx]}
+        if caches.k_scale is not None:
+            fetch["k_scale"] = caches.k_scale[:, idx]
+            fetch["v_scale"] = caches.v_scale[:, idx]
+        host = self.engine._fetch(fetch)     # audited device->host sync
+        pages = {k: np.asarray(v) for k, v in host.items()}
+        pages["ids"] = ids
+        return {"nodes": nodes, "pages": pages}
+
+    def _write_snapshot(self, state, reason: str = "interval"
+                        ) -> Optional[str]:
+        """Atomically persist the request plane (see checkpoint/store.py
+        ``save_serving_snapshot``): every non-terminal request with its
+        progress, completed/aborted outcomes, metrics/events, and the
+        reusable prefix-page contents.  Crash-safe by construction —
+        write-temp + rename + CRC, the previous snapshot survives a
+        mid-write kill."""
+        if not self.snapshot_dir:
+            return None
+        import os
+
+        from repro.checkpoint import store
+        seg = int(self.metrics["segments"])
+        # pending order: in-flight first (by admission order), then queue
+        order = {rid: k for k, (rid, _s) in enumerate(self.admission_log)}
+        inflight = sorted((r for r in self._slots if r is not None),
+                          key=lambda r: order.get(r.rid, 0))
+        pending = [self._req_to_dict(r)
+                   for r in list(inflight) + list(self.queue.ordered())]
+        payload = dict(
+            config=self._snapshot_config(), segment=seg, reason=reason,
+            pending=pending,
+            completed=[self._req_to_dict(r)
+                       for r in self.completed.values()],
+            aborted=[self._req_to_dict(r) for r in self.aborted.values()],
+            metrics=dict(self.metrics), ft_events=list(self.ft_events),
+            index=self._export_index(state) if state is not None else None)
+        path = os.path.join(self.snapshot_dir, f"snap_{seg:08d}.snap")
+        store.save_serving_snapshot(path, payload)
+        self.metrics["snapshots"] += 1
+        self.ft_events.append(dict(
+            type="snapshot", segment=seg, path=path, reason=reason,
+            pending=len(pending)))
+        for old in store.list_snapshots(
+                self.snapshot_dir)[:-self.snapshot_keep]:
+            try:
+                os.unlink(old)
+            except OSError:
+                pass
+        return path
+
+    @classmethod
+    def restore(cls, engine: Engine, path: str, **kwargs
+                ) -> "BatchScheduler":
+        """Rebuild a scheduler from a serving snapshot.
+
+        Non-terminal requests re-queue with their progress: at admission
+        each replays ``prompt + generated`` through prefill — hitting the
+        restored prefix-page index for everything the snapshot retained
+        (those tokens never recompute), replaying from the prompt for the
+        rest — then decodes its remaining budget.  fp32 greedy tokens are
+        bit-identical to an uninterrupted run.  Completed/aborted
+        outcomes are pre-populated; deadlines restart from restore time
+        (wall clocks don't survive a process).
+
+        Raises :class:`repro.checkpoint.SnapshotCorrupt` on a damaged
+        file and ValueError when the snapshot's engine config is
+        incompatible (different ``max_seq``/``page_size``/sampling — the
+        tokens could not match).  A pool-size mismatch only drops the
+        page index (replay instead of resume)."""
+        from repro.checkpoint import store
+        snap = store.load_serving_snapshot(path)
+        sc = snap.get("config", {})
+        cfg = engine.cfg
+        for key, actual in (("max_seq", cfg.max_seq),
+                            ("page_size", cfg.page_size),
+                            ("temperature", cfg.temperature),
+                            ("eos_token", cfg.eos_token),
+                            ("seed", cfg.seed),
+                            ("vocab", engine.lm.cfg.vocab)):
+            if sc.get(key) != actual:
+                raise ValueError(
+                    f"snapshot {path}: config mismatch on {key!r} "
+                    f"(snapshot {sc.get(key)!r} != engine {actual!r})")
+        sched = cls(engine, **kwargs)
+        now = time.perf_counter()
+        for d in snap.get("completed", []):
+            req = cls._req_from_dict(d)
+            sched.completed[req.rid] = req
+            sched.requests[req.rid] = req
+        for d in snap.get("aborted", []):
+            req = cls._req_from_dict(d)
+            sched.aborted[req.rid] = req
+            sched.requests[req.rid] = req
+        pending = [cls._req_from_dict(d) for d in snap.get("pending", [])]
+        for req in reversed(pending):
+            req.status = "queued"
+            req.submit_time = now
+            sched.requests[req.rid] = req
+            sched.queue.push_front(req)
+        index = snap.get("index")
+        if index and engine.paged and (
+                sc.get("pool_pages") != engine.pool_pages
+                or not cfg.prefix_cache):
+            index = None                  # page ids invalid: full replay
+        sched._restore_index = index if engine.paged else None
+        sched.metrics["restores"] += 1
+        sched.ft_events.append(dict(
+            type="restore", path=path,
+            snapshot_segment=int(snap.get("segment", 0)),
+            pending=len(pending),
+            index_pages=(len(index["pages"]["ids"]) if index else 0)))
+        return sched
+
+    def _apply_restore_index(self, state):
+        """Adopt the snapshot's prefix trie into the fresh pool and write
+        the saved page contents back into the device state."""
+        index, self._restore_index = self._restore_index, None
+        if not index or self.pool is None:
+            return state
+        adopted = self.pool.adopt_index(index["nodes"])
+        if not adopted:
+            return state
+        pages = index["pages"]
+        idx = jnp.asarray(np.asarray(pages["ids"], np.int32))
+        caches = state["caches"]
+
+        def put(pool_arr, vals):
+            if pool_arr is None or vals is None:
+                return pool_arr
+            return pool_arr.at[:, idx].set(
+                jnp.asarray(vals).astype(pool_arr.dtype))
+
+        caches = caches._replace(
+            k_pages=put(caches.k_pages, pages.get("k")),
+            v_pages=put(caches.v_pages, pages.get("v")),
+            k_scale=put(caches.k_scale, pages.get("k_scale")),
+            v_scale=put(caches.v_scale, pages.get("v_scale")))
+        return self.engine.shard_state(dict(state, caches=caches))
 
     # ------------------------------------------------ ft/: degradation path
     def inject_failure(self, device_id: int, at_segment: int = 0) -> None:
@@ -864,13 +1289,11 @@ class BatchScheduler:
                 self._dead.add(dev)
                 self._injected.remove((dev, at))
         for idx, dev in enumerate(self._hb_ids):
-            if dev not in self._dead:
+            # a flapping device misses exactly ONE heartbeat (chaos
+            # injection); the governor's confirm window must absorb it
+            if dev not in self._dead and dev not in self._flap:
                 self.heartbeats.report(idx, seg, seg_wall)
-        verdict = self.straggler.record(seg_wall)
-        if verdict.is_straggler:
-            self.ft_events.append(dict(
-                type="straggler", segment=seg,
-                wall_s=seg_wall, ema_s=verdict.ema))
+        self._flap.clear()
         missing = {self._hb_ids[i]
                    for i in self.heartbeats.missing_hosts()}
         confirmed = self.governor.observe(missing=missing)
@@ -918,7 +1341,24 @@ class BatchScheduler:
                     if d not in self.failed]))
         return state, logits, rng
 
-    def run(self) -> Dict[int, Request]:
+    def _requeue_active(self) -> int:
+        """Push every in-flight request back onto the queue with its
+        progress (earliest-admitted ends up at the head), releasing slots
+        and pages — the ``run(max_segments=...)`` early-exit path."""
+        order = {rid: k for k, (rid, _s) in enumerate(self.admission_log)}
+        live = [(order.get(r.rid, 0), i, r)
+                for i, r in enumerate(self._slots) if r is not None]
+        for _, i, req in sorted(live, reverse=True):
+            self._release_slot(int(i))
+            req.status = "queued"
+            self.queue.push_front(req)
+        return len(live)
+
+    def run(self, max_segments: Optional[int] = None) -> Dict[int, Request]:
+        """Drive the queue to completion (or for ``max_segments`` decode
+        segments — in-flight requests then re-queue with their progress
+        kept, and with ``snapshot_dir`` set an exit snapshot is written:
+        the controlled half of the kill-and-restore story)."""
         eng, cfg = self.engine, self.engine.cfg
         if not self.queue:
             return self.completed
@@ -933,46 +1373,50 @@ class BatchScheduler:
         logits = eng.replicate(
             jnp.zeros((nslots, eng.lm.cfg.vocab), eng.lm.dtype))
         rng = eng.replicate(jax.random.PRNGKey(cfg.seed))
-        slots: List[Optional[Request]] = [None] * nslots
-        remaining = np.zeros(nslots, np.int64)
+        state = self._apply_restore_index(state)
+        slots = self._slots = [None] * nslots
+        remaining = self._remaining = np.zeros(nslots, np.int64)
         # device-side row length (includes segment overshoot the request
         # never sees — the page a token was WRITTEN to must stay covered)
-        slot_len = np.zeros(nslots, np.int64)
+        slot_len = self._slot_len = np.zeros(nslots, np.int64)
+        self._running = True
+        seg_run = 0     # segments executed by THIS call (max_segments)
 
-        while self.queue or any(s is not None for s in slots):
-            # ---- admission: freed slots take queued requests mid-flight
-            width_restored = False
-            for i in range(nslots):
-                if slots[i] is None and self.queue:
-                    req = self.queue[0]
+        try:
+            while self.queue or any(s is not None for s in slots):
+                now = time.perf_counter()
+                # cancelled/expired requests never reach a slot
+                self._sweep_queue(now)
+                # ---- admission: freed slots take queued requests
+                # mid-flight, in (priority, arrival) order with bounded
+                # head-of-line bypass
+                width_restored = False
+                for i in range(nslots):
+                    if slots[i] is not None:
+                        continue
+                    req = self._pick_admission()
+                    if req is None:
+                        break
+                    full = list(req.prompt) + list(req.generated)
+                    budget = req.max_new_tokens - len(req.generated)
                     table_row = None
                     prefix_len = 0
                     cow_pairs: List[Tuple[int, int]] = []
                     if self.pool is not None:
                         # admission allocates exactly ceil(len/page) pages
-                        # for the prompt (minus full-page prefix hits,
+                        # for the context (minus full-page prefix hits,
                         # which map read-only by refcount bump) and
                         # RESERVES the request's worst case (budget +
                         # segment overshoot), so decode growth can never
-                        # exhaust the pool mid-run; a full pool defers
-                        # admission (backpressure)
-                        worst = (len(req.prompt) + req.max_new_tokens
-                                 + eng.seg_cap)
-                        _, shared = self.pool.match_prefix(req.prompt)
-                        if not self.pool.can_reserve(worst,
-                                                     shared_pages=shared):
-                            if not any(s is not None for s in slots):
-                                raise RuntimeError(
-                                    f"request {req.rid}: needs more pages "
-                                    f"than the whole pool can promise "
-                                    f"({self.pool!r})")
-                            break
-                        admit = self.pool.admit_prefix(i, req.prompt)
+                        # exhaust the pool mid-run.  (_pick_admission
+                        # already proved can_reserve for this request.)
+                        worst = len(full) + budget + eng.seg_cap
+                        admit = self.pool.admit_prefix(i, full)
                         prefix_len = admit.matched_len
                         if admit.cow is not None:
                             cow_pairs.append(admit.cow)
                         self.pool.reserve(i, worst)
-                        self.pool.alloc(i, len(req.prompt))
+                        self.pool.alloc(i, len(full))
                         table_row = self.pool.tables[i]
                         # admission programs key on the FULL table width
                         # (prefill only scatter-writes through the table,
@@ -990,77 +1434,135 @@ class BatchScheduler:
                         self.metrics["prefix_hits"] += int(prefix_len > 0)
                         self.metrics["pages_shared"] += admit.shared_full
                         self.metrics["cow_copies"] += len(cow_pairs)
-                    self.queue.popleft()
+                    self.queue.remove(req)
+                    # resume path (restore / max_segments re-queue):
+                    # ``full`` replays prompt + progress through prefill —
+                    # resident prefix pages are attended, not recomputed —
+                    # and the row decodes only its remaining budget
                     state, logits = eng.prefill_slot(
-                        state, logits, req.prompt[prefix_len:], i,
+                        state, logits, full[prefix_len:], i,
                         table_row=table_row, prefix_len=prefix_len)
                     if self.pool is not None:
-                        # index the now-resident full prompt pages so the
+                        # index the now-resident context pages so the
                         # NEXT admission can share them
-                        self.pool.register_prefix(i, req.prompt)
+                        self.pool.register_prefix(i, full)
+                    req.status = "active"
                     slots[i] = req
-                    remaining[i] = req.max_new_tokens
-                    slot_len[i] = len(req.prompt)
+                    remaining[i] = budget
+                    slot_len[i] = len(full)
                     self.metrics["admissions"] += 1
-                    self.metrics["prompt_tokens"] += len(req.prompt)
-                    self.metrics["prefilled_tokens"] += (len(req.prompt)
+                    self.metrics["prompt_tokens"] += len(full)
+                    self.metrics["prefilled_tokens"] += (len(full)
                                                          - prefix_len)
                     self.admission_log.append((req.rid, i))
 
-            active = np.array([s is not None for s in slots])
-            # requested steps fit the tightest active budget; the engine
-            # quantizes UP to a power of two (so at most log2(chunk)+1
-            # segment programs ever compile) and overshoot is masked
-            # against each request's budget at retire time
-            steps = eng.quantize_steps(
-                min(self.admission_chunk, int(remaining[active].min())))
-            if self.pool is not None:
-                # cover every page this segment can write, then hand the
-                # device a table sliced to the width the LIVE mix needs
-                # (quantized so programs are shared): decode traffic —
-                # and the traffic model's gather window — tracks actual
-                # context, not max_seq.  A long request widens segments
-                # only while it is resident.
-                for i in np.nonzero(active)[0]:
-                    self.pool.ensure(int(i), int(slot_len[i]) + steps)
-                width = max(self.pool.slot_pages(int(i))
-                            for i in np.nonzero(active)[0])
-                bucket = min(-(-max(width, 1) // 4) * 4, eng.table_width)
-                state = eng.set_page_table(state,
-                                           self.pool.table()[:, :bucket])
-            seg_t0 = time.perf_counter()
-            with eng._region_timer(DECODE_REGION):
-                toks, logits, state, rng = eng.decode_segment(steps)(
-                    eng.params, state, logits, rng)
-                toks_np = eng._fetch(toks)       # ONE sync per segment
-            slot_len[active] += steps
-            self.metrics["segments"] += 1
-            self.metrics["decode_steps"] += steps
-            now = time.perf_counter()
-            if self.heartbeats is not None:
-                state, logits, rng = self._ft_tick(state, logits, rng,
-                                                   now - seg_t0)
+                active = np.array([s is not None for s in slots])
+                if not active.any():
+                    if not self.queue:
+                        break
+                    head = self.queue.head()
+                    if self.pool is not None and self.pool.seized:
+                        # chaos pool exhaustion starved admission dry:
+                        # return the seized pages rather than deadlock
+                        freed = self.pool.unseize()
+                        self.ft_events.append(dict(
+                            type="pool_relief", pages=freed,
+                            segment=int(self.metrics["segments"])))
+                        continue
+                    raise RuntimeError(
+                        f"request {head.rid}: needs more pages than the "
+                        f"whole pool can promise ({self.pool!r})")
+                # requested steps fit the tightest active budget; the
+                # engine quantizes UP to a power of two (so at most
+                # log2(chunk)+1 segment programs ever compile) and
+                # overshoot is masked against each request's budget at
+                # retire time
+                steps = eng.quantize_steps(
+                    min(self.admission_chunk, int(remaining[active].min())))
+                if self.pool is not None:
+                    # cover every page this segment can write, then hand
+                    # the device a table sliced to the width the LIVE mix
+                    # needs (quantized so programs are shared): decode
+                    # traffic — and the traffic model's gather window —
+                    # tracks actual context, not max_seq.  A long request
+                    # widens segments only while it is resident.
+                    for i in np.nonzero(active)[0]:
+                        self.pool.ensure(int(i), int(slot_len[i]) + steps)
+                    width = max(self.pool.slot_pages(int(i))
+                                for i in np.nonzero(active)[0])
+                    bucket = min(-(-max(width, 1) // 4) * 4,
+                                 eng.table_width)
+                    state = eng.set_page_table(state,
+                                               self.pool.table()[:, :bucket])
+                seg_t0 = time.perf_counter()
+                with eng._region_timer(DECODE_REGION):
+                    toks, logits, state, rng = eng.decode_segment(steps)(
+                        eng.params, state, logits, rng)
+                    toks_np = eng._fetch(toks)     # ONE sync per segment
+                slot_len[active] += steps
+                self.metrics["segments"] += 1
+                self.metrics["decode_steps"] += steps
+                seg_run += 1
+                now = time.perf_counter()
+                # chaos slow/hung-segment injection inflates the OBSERVED
+                # wall (the detector path under test) without sleeping
+                seg_wall = (now - seg_t0) * self._wall_inflate
+                self._wall_inflate = 1.0
+                # the straggler detector watches segment walls on EVERY
+                # engine (hung/slow segments surface single-device too)
+                verdict = self.straggler.record(seg_wall)
+                if verdict.is_straggler:
+                    self.ft_events.append(dict(
+                        type="straggler",
+                        segment=int(self.metrics["segments"]),
+                        wall_s=seg_wall, ema_s=verdict.ema))
+                if self.heartbeats is not None:
+                    state, logits, rng = self._ft_tick(state, logits, rng,
+                                                       seg_wall)
 
-            # ---- retire: finished rows release their slots immediately
-            for i in np.nonzero(active)[0]:
-                req = slots[i]
-                if not req.generated and not req.first_token_time:
-                    req.first_token_time = now
-                take = toks_np[i][:remaining[i]]   # mask segment overshoot
-                finished = False
-                if cfg.eos_token >= 0:
-                    hits = np.nonzero(take == cfg.eos_token)[0]
-                    if hits.size:
-                        take = take[:hits[0] + 1]
-                        finished = True
-                req.generated.extend(int(t) for t in take)
-                remaining[i] = req.max_new_tokens - len(req.generated)
-                if finished or remaining[i] <= 0:
-                    req.finished = True
-                    self.completed[req.rid] = req
-                    slots[i] = None
-                    remaining[i] = 0
-                    slot_len[i] = 0
-                    if self.pool is not None:
-                        self.pool.release(int(i))
+                # ---- retire: finished/expired/cancelled rows release
+                # their slots immediately
+                for i in np.nonzero(active)[0]:
+                    req = slots[i]
+                    reason = ("cancel" if req.cancel_requested
+                              else self._expiry_reason(req, now))
+                    if reason:
+                        # the in-progress segment's tokens are DISCARDED:
+                        # nothing generated after the flag/deadline was
+                        # observed is ever returned
+                        self._release_slot(int(i))
+                        self._finish_abnormal(req, reason)
+                        continue
+                    if not req.generated and not req.first_token_time:
+                        req.first_token_time = now
+                    take = toks_np[i][:remaining[i]]   # mask overshoot
+                    finished = False
+                    if cfg.eos_token >= 0:
+                        hits = np.nonzero(take == cfg.eos_token)[0]
+                        if hits.size:
+                            take = take[:hits[0] + 1]
+                            finished = True
+                    req.generated.extend(int(t) for t in take)
+                    remaining[i] = req.max_new_tokens - len(req.generated)
+                    if finished or remaining[i] <= 0:
+                        req.finished = True
+                        req.status = "done"
+                        self.completed[req.rid] = req
+                        self._release_slot(int(i))
+                        self.queue.note_service_time(now - req.submit_time)
+
+                if (self.snapshot_dir and self.snapshot_every
+                        and int(self.metrics["segments"])
+                        % self.snapshot_every == 0):
+                    self._write_snapshot(state)
+                if self.chaos is not None:
+                    self.chaos.tick(self, int(self.metrics["segments"]))
+                if max_segments is not None and seg_run >= max_segments:
+                    break
+        finally:
+            self._running = False
+        requeued = self._requeue_active()
+        if self.snapshot_dir:
+            self._write_snapshot(
+                state, reason="exit" if not requeued else "early_exit")
         return self.completed

@@ -132,6 +132,9 @@ class KVPool:
         # LIFO free list: recently-released pages are re-used first (their
         # contents are dead anyway and they are likelier cache-warm)
         self.free: Deque[int] = collections.deque(range(1, num_pages))
+        # pages withheld from allocation by the chaos harness (simulated
+        # external memory pressure): refcount 0 but NOT free — see seize()
+        self.seized: List[int] = []
         self.owned: List[List[int]] = [[] for _ in range(slots)]
         self.reserved: List[int] = [0] * slots   # worst-case pages promised
         self.tables = np.zeros((slots, table_width), np.int32)
@@ -376,6 +379,73 @@ class KVPool:
         self._root.clear()
         return freed
 
+    # ------------------------------------------------- chaos: seized pages
+    def seize(self, n: int) -> int:
+        """Withhold up to ``n`` FREE pages from allocation (the chaos
+        harness's simulated external memory pressure).  Seized pages stay
+        refcount 0 but leave the free list, so every admission gate and
+        ensure() sees a genuinely smaller pool; :meth:`check` accounts
+        for them.  Returns the number actually seized."""
+        taken = 0
+        while taken < n and self.free:
+            self.seized.append(self.free.pop())
+            taken += 1
+        return taken
+
+    def unseize(self) -> int:
+        """Return every seized page to the free list (pressure relief)."""
+        n = len(self.seized)
+        self.free.extend(self.seized)
+        self.seized.clear()
+        return n
+
+    # -------------------------------------------- snapshot: index transfer
+    def export_index(self) -> List[Dict]:
+        """Serialize the prefix trie for a serving snapshot: one dict per
+        node — physical page id, its full-page token chunk, and the
+        parent's page id (None at the root) — in parent-before-child
+        order, so :meth:`adopt_index` can rebuild linkage in one pass."""
+        out: List[Dict] = []
+        stack = [(node, None) for node in self._root.values()]
+        while stack:
+            node, parent_page = stack.pop()
+            out.append({"page": int(node.page),
+                        "chunk": [int(t) for t in node.chunk],
+                        "parent": parent_page})
+            stack.extend((c, int(node.page))
+                         for c in node.children.values())
+        return out
+
+    def adopt_index(self, nodes: Sequence[Dict]) -> int:
+        """Rebuild a previously exported trie into THIS (empty) pool.
+
+        The restore path: page ids in ``nodes`` refer to physical pages
+        of a same-sized pool, so each adopted page leaves the free list
+        and gains the trie's refcount.  The caller is responsible for
+        writing the page *contents* back into the device state.  Returns
+        the number of pages adopted."""
+        assert all(not o for o in self.owned) and not self._node_of, \
+            "adopt_index needs an empty pool"
+        if not self.prefix_cache or not nodes:
+            return 0
+        adopt = {int(n["page"]) for n in nodes}
+        assert all(0 < p < self.num_pages for p in adopt), \
+            f"snapshot page ids out of range for a {self.num_pages}-page pool"
+        self.free = collections.deque(p for p in self.free
+                                      if p not in adopt)
+        stamp = next(self._clock)
+        for nd in nodes:
+            pid = int(nd["page"])
+            chunk = tuple(int(t) for t in nd["chunk"])
+            parent = (self._node_of[int(nd["parent"])]
+                      if nd["parent"] is not None else None)
+            node = _Node(chunk, pid, parent, stamp)
+            siblings = parent.children if parent is not None else self._root
+            siblings[chunk] = node
+            self._node_of[pid] = node
+            self.refcnt[pid] = 1
+        return len(adopt)
+
     # ----------------------------------------------------------- lifecycle
     def ensure(self, slot: int, tokens: int) -> int:
         """Grow slot ``slot`` to cover ``tokens`` total tokens; returns the
@@ -427,6 +497,13 @@ class KVPool:
         free_set = set(self.free)
         assert len(free_set) == len(self.free), "double-free in the free list"
         assert 0 not in free_set, "null page leaked into the free list"
+        seized_set = set(self.seized)
+        assert len(seized_set) == len(self.seized), "page seized twice"
+        assert not (seized_set & free_set), "page both seized and free"
+        assert 0 not in seized_set, "null page seized"
+        for pid in seized_set:
+            assert self.refcnt[pid] == 0, \
+                f"seized page {pid} has refcount {self.refcnt[pid]}"
         slot_refs: collections.Counter = collections.Counter()
         for slot, pages in enumerate(self.owned):
             assert len(pages) == len(set(pages)), \
@@ -445,7 +522,8 @@ class KVPool:
                 (f"page {pid}: refcount {self.refcnt[pid]} != "
                  f"{slot_refs[pid]} slot refs + "
                  f"{int(pid in self._node_of)} index refs")
-            assert (self.refcnt[pid] == 0) == (pid in free_set), \
+            assert (self.refcnt[pid] == 0) == (pid in free_set
+                                               or pid in seized_set), \
                 f"page {pid}: refcount {self.refcnt[pid]} vs free-list skew"
         assert self.refcnt[0] == 0, "null page refcounted"
         # trie structure: reverse map exact, linkage consistent, and the
