@@ -1,0 +1,182 @@
+"""Speculative decoding: accept-rate + tok/s vs target-only decode.
+
+Three claims, measured (fp32 greedy so every parity check is bit-exact):
+
+1. **Lossless** — speculative greedy tokens are bit-identical to
+   target-only decode on the SAME ragged prompt batch, on a
+   high-acceptance AND a low-acceptance draft pairing (asserted):
+   verification makes drafting an optimization, never an approximation.
+2. **High-acceptance pairing pays** — a draft distilled from the target
+   (here: the target's own first block, which IS the full model because
+   the upper blocks carry zeroed residuals) accepts ~every proposal and
+   decodes >= 1.5x target-only tok/s (asserted, --smoke included): one
+   multi-token verify amortizes the deep model over K+1 tokens.
+3. **Low-acceptance pairing is safe** — an unrelated random draft
+   accepts ~nothing, yet the output stays bit-identical; the cost is
+   wasted draft work, reported as accept-rate + tok/s, never wrong
+   tokens.
+
+The high-acceptance construction is exact, not statistical: the target
+has ``n_layers`` blocks but every block past the first has all-zero
+params, so its residual contribution is exactly ``+0.0`` and the
+target's logits equal a one-block computation bit-for-bit.  The draft
+is that one-block model (same embeddings / final norm / head), so it
+proposes the target's own argmax chain at ~1/n_layers the depth.
+
+    PYTHONPATH=src python -m benchmarks.bench_spec --smoke --json BENCH_spec.json
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _target_cfg(smoke: bool):
+    from repro.models.lm import LMConfig
+    return LMConfig(name="spec-bench-target", family="dense", vocab=256,
+                    d_model=64 if smoke else 128,
+                    n_layers=6 if smoke else 8,
+                    num_heads=8, num_kv_heads=4,
+                    d_ff=128 if smoke else 256)
+
+
+def _build(smoke: bool):
+    """Target LM with zeroed upper blocks + the matched one-block draft."""
+    from repro.core.features import default_features
+    from repro.models.lm import LM
+
+    feats = default_features().with_(remat_policy="none")
+    tcfg = _target_cfg(smoke)
+    dcfg = dataclasses.replace(tcfg, name="spec-bench-draft", n_layers=1)
+    lm = LM(tcfg, feats, dtype=jnp.float32)
+    dlm = LM(dcfg, feats, dtype=jnp.float32)
+    tp = lm.init(jax.random.PRNGKey(0))
+    # zero every block past the first: residual contributions become an
+    # exact +0.0, so the target's logits ARE the one-block computation
+    tp = dict(tp, blocks=jax.tree.map(
+        lambda a: a.at[1:].set(jnp.zeros_like(a[1:])), tp["blocks"]))
+    # matched draft: the target's first block + shared embed/norm/head
+    dp_hi = dict(dlm.init(jax.random.PRNGKey(1)),
+                 embed=tp["embed"], final_norm=tp["final_norm"],
+                 lm_head=tp["lm_head"],
+                 blocks=jax.tree.map(lambda a: a[:1], tp["blocks"]))
+    # unrelated draft: same shapes, independent init (low acceptance)
+    dp_lo = dlm.init(jax.random.PRNGKey(123))
+    return lm, tp, tcfg, dcfg, dp_hi, dp_lo
+
+
+def _prompts(vocab, n, max_len):
+    rng = np.random.default_rng(11)
+    return [rng.integers(1, vocab,
+                         size=int(rng.integers(3, max_len))).tolist()
+            for _ in range(n)]
+
+
+def _timed_generate(eng, prompts, max_new):
+    eng.generate(prompts, max_new)          # warm: compile + cache
+    t0 = time.perf_counter()
+    out = eng.generate(prompts, max_new)
+    dt = time.perf_counter() - t0
+    ntok = sum(len(t) for t in out)
+    return out, ntok / dt
+
+
+def run(csv, session=None, smoke=False, spec=None):
+    """``spec``: an optional :class:`SpecConfig` (from ``--draft``) that
+    replaces the low-acceptance leg's pairing; the high-acceptance leg
+    always uses the distilled one-block draft the bench constructs."""
+    from repro.serve import Engine, ServeConfig
+    from repro.serve.spec import SpecConfig
+
+    lm, tp, tcfg, dcfg, dp_hi, dp_lo = _build(smoke)
+    k = spec.num_draft_tokens if spec is not None else 4
+    max_new = 48 if smoke else 128
+    scfg = ServeConfig(max_seq=256, batch_slots=4, temperature=0.0,
+                       page_size=16)
+    prompts = _prompts(tcfg.vocab, 4, 12)
+    summary = {"k": k, "n_layers": tcfg.n_layers, "max_new": max_new}
+
+    # ---- target-only baseline ----------------------------------------
+    base = Engine(lm, tp, scfg)
+    ref, base_tok_s = _timed_generate(base, prompts, max_new)
+    print(f"target-only: {base_tok_s:.1f} tok/s "
+          f"({tcfg.n_layers}-layer fp32 greedy)")
+    summary["target_only"] = {"tok_s": base_tok_s}
+
+    # ---- high-acceptance: the distilled one-block draft --------------
+    hi_spec = SpecConfig(draft_config=dcfg, num_draft_tokens=k)
+    hi = Engine(lm, tp, scfg, spec=hi_spec, draft_params=dp_hi)
+    out_hi, hi_tok_s = _timed_generate(hi, prompts, max_new)
+    hi_stats = dict(hi.spec_stats)
+    speedup = hi_tok_s / base_tok_s
+    parity_hi = out_hi == ref
+    print(f"spec high-acceptance: {hi_tok_s:.1f} tok/s = {speedup:.2f}x, "
+          f"accept_rate={hi_stats['accept_rate']:.3f} "
+          f"({hi_stats['accepted']}/{hi_stats['proposed']}), "
+          f"parity: {'OK' if parity_hi else 'FAIL'}")
+    assert parity_hi, "speculative greedy tokens diverged from target-only"
+    assert hi_stats["accept_rate"] > 0.95, \
+        f"distilled draft should accept ~all: {hi_stats['accept_rate']}"
+    assert speedup >= 1.5, \
+        f"high-acceptance speedup {speedup:.2f}x below the 1.5x bar"
+    csv.append(("spec_high_tok_s", 1e6 / hi_tok_s,
+                f"speedup={speedup:.2f},accept={hi_stats['accept_rate']:.3f}"))
+    summary["high"] = {"tok_s": hi_tok_s, "speedup": speedup,
+                       "parity": parity_hi, **hi_stats}
+
+    # ---- low-acceptance: an unrelated draft (or --draft's pairing) ---
+    lo_spec = spec or SpecConfig(draft_config=dcfg, num_draft_tokens=k)
+    lo = Engine(lm, tp, scfg, spec=lo_spec, draft_params=dp_lo)
+    out_lo, lo_tok_s = _timed_generate(lo, prompts, max_new)
+    lo_stats = dict(lo.spec_stats)
+    parity_lo = out_lo == ref
+    print(f"spec low-acceptance: {lo_tok_s:.1f} tok/s = "
+          f"{lo_tok_s / base_tok_s:.2f}x, "
+          f"accept_rate={lo_stats['accept_rate']:.3f}, "
+          f"parity: {'OK' if parity_lo else 'FAIL'}")
+    assert parity_lo, \
+        "low-acceptance speculative tokens diverged from target-only"
+    assert lo_stats["accept_rate"] < hi_stats["accept_rate"], \
+        "unrelated draft accepted as much as the distilled one"
+    csv.append(("spec_low_tok_s", 1e6 / lo_tok_s,
+                f"accept={lo_stats['accept_rate']:.3f},parity=1"))
+    summary["low"] = {"tok_s": lo_tok_s,
+                      "speedup": lo_tok_s / base_tok_s,
+                      "parity": parity_lo, **lo_stats}
+    return summary
+
+
+def main(argv=None) -> int:
+    from repro.launch import cli
+    from repro.serve import ServeConfig
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: tiny model, short generations")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the summary here (BENCH_spec.json)")
+    cli.add_spec_args(ap)
+    args = ap.parse_args(argv)
+    # eager validation against the bench's target; {} without --draft
+    spec_kw = cli.spec_kwargs(args, _target_cfg(args.smoke),
+                              ServeConfig(temperature=0.0, page_size=16),
+                              ap)
+    csv = []
+    summary = run(csv, smoke=args.smoke, spec=spec_kw.get("spec"))
+    print("name,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.2f},{derived}")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"smoke": args.smoke, **summary}, f, indent=1)
+        print(f"[bench_spec] wrote {args.json}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

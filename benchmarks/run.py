@@ -24,7 +24,8 @@ from benchmarks import (bench_autotune, bench_bandwidth_map, bench_chaos,
                         bench_flash_prefill, bench_jacobi_traffic,
                         bench_marker_overhead, bench_mesh,
                         bench_paged_decode, bench_perfctr, bench_serve,
-                        bench_stencil_pinning, bench_stream_pinning)
+                        bench_spec, bench_stencil_pinning,
+                        bench_stream_pinning)
 
 BENCHES = {
     "perfctr": bench_perfctr,              # §II-A listing
@@ -36,6 +37,7 @@ BENCHES = {
     "serve": bench_serve,                   # measurement-driven serving loop
     "mesh": bench_mesh,                    # sharded serving + ft/ degradation
     "chaos": bench_chaos,                  # robustness under fault injection
+    "spec": bench_spec,                    # speculative decoding vs target-only
     "flash_prefill": bench_flash_prefill,  # dispatched kernel + autotuner
     "paged_decode": bench_paged_decode,    # paged KV pool: bytes/token
     "autotune": bench_autotune,            # registry tune table warm starts

@@ -59,6 +59,13 @@ FAMILY_SUITE: Dict[str, Dict[str, Any]] = {
     "stream_triad": dict(n=128 * 512),
     "jacobi7": dict(shape=(24, 16, 16), sweeps=2),
     "ssd_scan": dict(b=2, s=128, h=2, dk=16, dv=16, normalize=False),
+    # the sampling cells pin the Pallas blockwise-argmax impls: the tune
+    # key is method-specific (filtering changes the reduction's input),
+    # so top-k and top-p each get a row and a baseline gate of their own
+    "sampling_topk": dict(family="sampling", impl="pallas_topk",
+                          b=8, v=2048, method="top_k"),
+    "sampling_topp": dict(family="sampling", impl="pallas_topp",
+                          b=8, v=2048, method="top_p"),
 }
 
 #: smoke candidate subsets — part of the persisted record identity too
@@ -70,6 +77,8 @@ _SMOKE_CANDIDATES: Dict[str, Tuple[Tuple[int, ...], ...]] = {
     "stream_triad": ((128,), (256,)),
     "jacobi7": ((4,), (8,)),
     "ssd_scan": ((32,), (64,)),
+    "sampling_topk": ((8, 128), (8, 256)),
+    "sampling_topp": ((8, 128), (8, 256)),
 }
 
 
@@ -473,6 +482,18 @@ def suite_inputs(family: str, records: Sequence[Dict[str, Any]] = ()
         key = registry.jacobi_tune_key(shape=shape, sweeps=sweeps,
                                        dtype=jnp.float32)
         return (x,), {"sweeps": sweeps}, key
+    if family in ("sampling_topk", "sampling_topp"):
+        from repro.kernels.sampling import sampling_tune_key
+        b, v, method = facts["b"], facts["v"], facts["method"]
+        logits = jax.random.normal(rng, (b, v), jnp.float32)
+        raw = jax.random.key_data(jax.random.key(1)).astype(jnp.uint32)
+        kwargs: Dict[str, Any] = dict(method=method, temperature=1.0)
+        if method == "top_k":
+            kwargs["k"] = 8                 # matches the tune probe's k
+        else:
+            kwargs["p"] = 0.9               # matches the tune probe's p
+        key = sampling_tune_key(b=b, v=v, method=method, dtype=jnp.float32)
+        return (logits, raw), kwargs, key
     if family == "ssd_scan":
         b, s, h = facts["b"], facts["s"], facts["h"]
         dk, dv = facts["dk"], facts["dv"]

@@ -29,6 +29,14 @@ kind                      what it exercises
                           snapshot and asserts the loader REFUSES it
                           (:class:`repro.checkpoint.SnapshotCorrupt`) —
                           corruption is detected, never restored
+``cancel_request``        fires an in-flight request's cancellation token
+                          (preferring a speculative row of a mixed batch,
+                          mid-verify) — the retire path must release the
+                          slot AND its draft-namespace pages, with no
+                          token past the flag ever returned
+``expire_request``        forces an in-flight request's deadline into the
+                          past (same spec-row preference) — the expiry
+                          path under speculative decoding
 ========================  ==================================================
 
 After applying each event — and again at the end of every tick — the
@@ -49,10 +57,15 @@ import os
 import random
 from typing import Dict, List, Optional, Tuple
 
-__all__ = ["ChaosEvent", "ChaosSchedule", "KINDS"]
+__all__ = ["ChaosEvent", "ChaosSchedule", "KINDS", "ALL_KINDS"]
 
+# KINDS is frozen: the seeded default schedule draws from it with
+# rng.choice, so appending here would silently re-deal every historical
+# seed.  New kinds join ALL_KINDS (valid in explicit schedules and in a
+# ``kinds=`` override) instead.
 KINDS = ("pool_exhaust", "slow_segment", "hung_segment", "heartbeat_flap",
          "device_death", "snapshot_corrupt")
+ALL_KINDS = KINDS + ("cancel_request", "expire_request")
 
 
 @dataclasses.dataclass
@@ -88,9 +101,9 @@ class ChaosSchedule:
                  horizon: int = 24, rate: float = 0.35,
                  kinds: Tuple[str, ...] = KINDS):
         for k in kinds:
-            if k not in KINDS:
+            if k not in ALL_KINDS:
                 raise ValueError(f"unknown chaos kind {k!r}; "
-                                 f"choose from {KINDS}")
+                                 f"choose from {ALL_KINDS}")
         self.seed = int(seed)
         if events is None:
             rng = random.Random(self.seed)
@@ -192,6 +205,24 @@ class ChaosSchedule:
             ev.note = f"device {dev} heartbeats stop"
         elif ev.kind == "snapshot_corrupt":
             ev.note = self._corrupt_snapshot(sched)
+        elif ev.kind in ("cancel_request", "expire_request"):
+            # lifecycle faults against a RESIDENT request, preferring a
+            # speculative row so mixed-batch chaos exercises the draft
+            # namespace teardown (pages in two pool slots, mid-verify)
+            live = [r for r in sched._slots if r is not None]
+            pick_from = [r for r in live if r.spec] or live
+            if not pick_from:
+                ev.note = "skipped: no request in flight"
+                self.skipped.append(ev.kind)
+                return
+            req = pick_from[ev.device % len(pick_from)]
+            row = "spec row" if req.spec else "plain row"
+            if ev.kind == "cancel_request":
+                req.cancel()
+                ev.note = f"rid {req.rid} cancelled in flight ({row})"
+            else:
+                req.deadline_ms = 0.0
+                ev.note = f"rid {req.rid} deadline forced past ({row})"
         else:                                           # pragma: no cover
             raise ValueError(f"unknown chaos kind {ev.kind!r}")
 
@@ -236,6 +267,6 @@ class ChaosSchedule:
         return dict(seed=self.seed,
                     events=len(self.events), applied=len(applied),
                     by_kind={k: sum(1 for e in applied if e.kind == k)
-                             for k in KINDS
+                             for k in ALL_KINDS
                              if any(e.kind == k for e in applied)},
                     skipped=list(self.skipped), checks=self.checks)

@@ -10,6 +10,8 @@ flash_attention.py        32k-prefill hot-spot for the LM zoo (blockwise
                           online-softmax GQA)
 paged_decode.py           decode attention over the serve/kv_pool pages
 ssd_scan.py               mLSTM / Mamba2 chunked gated linear attention
+sampling.py               greedy/top-k/top-p token sampling (blockwise
+                          argmax reduction + seeded gumbel PRNG contract)
 ========================  ===================================================
 
 ops.py holds the jit'd layout adapters; ref.py the pure-jnp oracles every
@@ -17,7 +19,8 @@ kernel is allclose-tested against (interpret=True on this CPU container).
 
 registry.py is the ONE entry point over all of them: every implementation
 is a declarative ``KernelSpec`` registered into a family (``attention``,
-``paged_decode``, ``stream_triad``, ``jacobi7``, ``ssd_scan``) with a
+``paged_decode``, ``stream_triad``, ``jacobi7``, ``ssd_scan``,
+``sampling``) with a
 static capability predicate, layout contract, oracle link and tune
 space; ``registry.select/run`` dispatch through a single per-family
 override ladder (``use_impl`` context > ``REPRO_IMPL`` env > legacy
@@ -29,4 +32,5 @@ docstring); dispatch.py and autotune.py are two-line re-export stubs
 over it.
 """
 
-from repro.kernels import dispatch, legacy, ops, ref, registry  # noqa: F401
+from repro.kernels import (dispatch, legacy, ops, ref, registry,  # noqa: F401
+                           sampling)

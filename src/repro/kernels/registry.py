@@ -1640,3 +1640,10 @@ def _run_jnp_ssd(q, k, v, log_f, log_i, *, chunk: Optional[int] = None,
                                      chunk_size=_ssd_chunk(q, v, chunk,
                                                            normalize),
                                      normalize=normalize)
+
+
+# ===========================================================================
+# family: sampling (greedy / top-k / top-p) — registered by its own module
+# ===========================================================================
+
+from repro.kernels import sampling  # noqa: E402,F401  (registration side-effect)

@@ -12,6 +12,11 @@ with divergent spellings; these helpers make the surface uniform:
 * :func:`add_kv_args` — ``--kv-dtype {fp32,bf16,int8}`` and
   ``--no-prefix-cache`` over the paged KV cache (consume with
   :func:`kv_config_kwargs`, which validates eagerly).
+* :func:`add_spec_args` — ``--draft CONFIG --spec-tokens K
+  --accept-policy`` speculative-decoding pairing (consume with
+  :func:`spec_kwargs`, which validates the draft/target pairing eagerly:
+  vocab mismatch, encoder-decoder families, spec + beam search and a
+  missing paged cache fail before any weights are initialised).
 * :func:`add_cache_args` — ``--cache-dir`` / ``--no-cache`` over the
   compile-artifact cache.
 * :func:`add_json_args` — ``--json PATH`` machine-readable summary.
@@ -118,6 +123,69 @@ def ft_kwargs(args: argparse.Namespace) -> Dict[str, object]:
         "straggler_threshold": getattr(args, "straggler_threshold", 4.0),
         "straggler_min_ratio": getattr(args, "straggler_min_ratio", 1.5),
     }
+
+
+def add_spec_args(ap: argparse.ArgumentParser) -> None:
+    """Speculative-decoding flags shared by ``launch/serve.py`` and
+    ``benchmarks/bench_spec.py`` (consume with :func:`spec_kwargs`)."""
+    g = ap.add_argument_group("speculative decoding")
+    g.add_argument("--draft", default=None, metavar="CONFIG",
+                   help="pair this config-zoo arch as the draft model "
+                        "(e.g. --arch qwen2-7b --draft qwen2-0.5b): the "
+                        "engine drafts K tokens per round and verifies "
+                        "them with the target in one multi-token segment "
+                        "(needs --page-size; greedy fp32 tokens stay "
+                        "bit-identical to target-only decode)")
+    g.add_argument("--spec-tokens", type=int, default=4, metavar="K",
+                   help="draft lookahead per speculative round "
+                        "(default 4)")
+    g.add_argument("--accept-policy", default="auto",
+                   choices=["auto", "greedy", "rejection"],
+                   help="draft acceptance rule: greedy exact-prefix match "
+                        "(temperature 0), rejection-sampling correction "
+                        "(temperature > 0), or auto by temperature "
+                        "(default auto)")
+
+
+def spec_kwargs(args: argparse.Namespace, target_cfg,
+                serve_cfg=None,
+                ap: Optional[argparse.ArgumentParser] = None
+                ) -> Dict[str, object]:
+    """``Engine(spec=...)`` kwargs from the :func:`add_spec_args` flags,
+    validated EAGERLY: draft/target vocab mismatch, non-decoder (encdec)
+    families, spec + beam search, and a missing paged cache are usage
+    errors raised before any params init or tracing.  Returns ``{}``
+    when ``--draft`` was not passed."""
+    def fail(msg: str):
+        if ap is not None:
+            ap.error(msg)
+        raise ValueError(msg)
+
+    draft = getattr(args, "draft", None)
+    if not draft:
+        if getattr(args, "spec_tokens", 4) != 4 \
+                or getattr(args, "accept_policy", "auto") != "auto":
+            fail("--spec-tokens/--accept-policy need --draft (no draft "
+                 "model, no speculative decoding)")
+        return {}
+    if getattr(args, "beam_width", 1) not in (None, 1):
+        fail("--draft (speculative decoding) is incompatible with beam "
+             "search: verification accepts one sampled continuation per "
+             "row, not a frontier")
+    from repro.configs import get_arch
+    from repro.serve.spec import SpecConfig
+    arch = get_arch(draft)
+    dcfg = (arch.smoke if getattr(args, "smoke_dims", False)
+            else arch.config)
+    spec = SpecConfig(draft_config=dcfg,
+                      num_draft_tokens=getattr(args, "spec_tokens", 4),
+                      accept_policy=getattr(args, "accept_policy",
+                                            "auto"))
+    try:
+        spec.validate(target_cfg, serve_cfg)
+    except ValueError as e:
+        fail(str(e))
+    return {"spec": spec}
 
 
 def add_robustness_args(ap: argparse.ArgumentParser) -> None:

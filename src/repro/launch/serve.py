@@ -48,6 +48,7 @@ def main(argv=None) -> int:
     cli.add_json_args(ap, what="serve summary")
     cli.add_ft_args(ap)
     cli.add_robustness_args(ap)
+    cli.add_spec_args(ap)
     ap.add_argument("--priority-mix", default=None, metavar="P[,P...]",
                     help="cycle synthetic requests through these priority "
                          "classes (lower = more urgent; e.g. 0,1,1,2)")
@@ -112,13 +113,25 @@ def main(argv=None) -> int:
                    else f"mean {row['mean_hops']:.1f} hops")
             print(f"[serve]   axis {row['axis']:<6} "
                   f"size {row['size']:>3}  {lay}")
-    eng = Engine(lm, params, ServeConfig(
+    serve_cfg = ServeConfig(
         max_seq=args.max_seq, batch_slots=args.slots,
         temperature=args.temperature,
         admission_chunk=args.admission_chunk,
         attn_impl=args.attn_impl, impls=impls,
         page_size=args.page_size, pool_pages=args.pool_pages,
-        **cli.kv_config_kwargs(args, ap)), mesh=serve_mesh)
+        **cli.kv_config_kwargs(args, ap))
+    # --draft validates the pairing eagerly (vocab/family/page-size/beam
+    # errors surface here, before any weights are initialised)
+    spec_kw = cli.spec_kwargs(args, cfg, serve_cfg, ap)
+    draft_params = None
+    if spec_kw:
+        dlm = LM(spec_kw["spec"].draft_config, feats)
+        draft_params = dlm.init(jax.random.PRNGKey(1))
+        print(f"[serve] speculative decoding: draft={args.draft} "
+              f"K={spec_kw['spec'].num_draft_tokens} "
+              f"policy={spec_kw['spec'].resolve_policy(args.temperature)}")
+    eng = Engine(lm, params, serve_cfg, mesh=serve_mesh,
+                 draft_params=draft_params, **spec_kw)
     if impls:
         print(f"[serve] kernel impls pinned: {impls}")
     if args.tune:
@@ -180,7 +193,8 @@ def main(argv=None) -> int:
                 rid=rid, prompt=prompt, max_new_tokens=args.max_new,
                 priority=prios[rid % len(prios)],
                 deadline_ms=args.deadline_ms,
-                ttft_deadline_ms=args.ttft_deadline_ms))
+                ttft_deadline_ms=args.ttft_deadline_ms,
+                spec=bool(spec_kw)))
         except AdmissionRejected as e:
             r = e.rejection
             print(f"[serve] req {rid} rejected ({r.reason}, "
@@ -210,6 +224,13 @@ def main(argv=None) -> int:
               f"restores={m['restores']:.0f}")
     if sched.chaos is not None:
         print(f"[serve] chaos: {sched.chaos.summary()}")
+    if spec_kw:
+        m = sched.metrics
+        rate = m["draft_accepted"] / max(m["draft_proposed"], 1)
+        print(f"[serve] speculative: rounds={m['spec_rounds']:.0f} "
+              f"proposed={m['draft_proposed']:.0f} "
+              f"accepted={m['draft_accepted']:.0f} "
+              f"accept_rate={rate:.2f}")
     if sched.pool is not None:
         m = sched.metrics
         hit = (m["prompt_tokens"] - m["prefilled_tokens"]) \
@@ -255,6 +276,13 @@ def main(argv=None) -> int:
                 "snapshots": sched.metrics["snapshots"],
                 "chaos": (sched.chaos.summary()
                           if sched.chaos is not None else None),
+                "spec": ({"draft": args.draft,
+                          "k": spec_kw["spec"].num_draft_tokens,
+                          "rounds": sched.metrics["spec_rounds"],
+                          "accept_rate": (
+                              sched.metrics["draft_accepted"]
+                              / max(sched.metrics["draft_proposed"], 1))}
+                         if spec_kw else None),
             }, fh, indent=2, sort_keys=True)
         print(f"[serve] wrote {args.json}")
     return 0

@@ -448,8 +448,8 @@ class LM:
             return tuple([None] * x.ndim)
         return jax.tree.map(spec_for, state)
 
-    def prefill(self, p: Params, batch: Batch, state: Any
-                ) -> Tuple[jnp.ndarray, Any]:
+    def prefill(self, p: Params, batch: Batch, state: Any,
+                all_logits: bool = False) -> Tuple[jnp.ndarray, Any]:
         """Process the prompt; returns (last-token logits [B,V], state).
 
         ``batch["lengths"]`` [B] (optional) marks each row's true prompt
@@ -461,6 +461,11 @@ class LM:
         equal-length-wave semantics (serve equal lengths, or admit rows one
         at a time through the continuous-batching scheduler, which prefills
         each prompt at its exact length).
+
+        ``all_logits=True`` returns the full per-position head ``[B,S,V]``
+        instead of the last-token gather — the multi-token verify gather of
+        speculative decoding (every suffix position's next-token
+        distribution from ONE forward pass).
         """
         cfg, feats = self.cfg, self.features
         tokens = batch["tokens"]
@@ -499,6 +504,8 @@ class LM:
             x, new_state = self._hybrid_prefill(p, x, state)
         elif fam == "encdec":
             x, new_state = self._encdec_prefill(p, x, batch, state)
+        if all_logits:
+            return self._head(p, x), new_state
         if lengths is not None and fam in ("dense", "moe", "vlm"):
             # per-row last REAL token (pads are masked context, not input)
             idx = jnp.maximum(lengths - 1, 0)[:, None, None]

@@ -78,6 +78,13 @@ class ServeConfig:
     max_seq: int = 1024
     batch_slots: int = 4
     temperature: float = 0.0        # 0 -> greedy
+    # sampled decode (temperature > 0) filtering, dispatched through the
+    # registry's "sampling" kernel family: top_k > 0 keeps the k best
+    # logits, else top_p < 1.0 keeps the nucleus; the defaults (0, 1.0)
+    # are plain categorical sampling, bit-identical to the pre-family
+    # jax.random.categorical(rng, logits / temperature)
+    top_k: int = 0
+    top_p: float = 1.0
     eos_token: int = -1             # -1 -> never stop early
     seed: int = 0
     admission_chunk: int = 8        # decode steps between admission points
@@ -136,6 +143,11 @@ class Request:
     status: str = "new"             # new|queued|active|done|expired|
                                     # cancelled|shed|rejected
     cancel_requested: bool = False  # the cancellation token (see cancel())
+    spec: bool = False              # opt this request into speculative
+                                    # decoding (spec-engine schedulers only;
+                                    # ignored elsewhere).  Mixed batches are
+                                    # fine: spec rows commit up to K+1
+                                    # tokens per segment, plain rows 1.
 
     def cancel(self) -> None:
         """Request-side cancellation token: the scheduler retires the row
@@ -161,7 +173,7 @@ class Request:
 
 class Engine:
     def __init__(self, lm: LM, params: Any, cfg: ServeConfig,
-                 perfctr=None, mesh=None):
+                 perfctr=None, mesh=None, spec=None, draft_params=None):
         """``mesh``: None (single device — the pre-mesh engine, verbatim),
         a ``jax.sharding.Mesh`` with a ``model`` axis (sharded serving),
         or a :class:`repro.launch.mesh.ServeMesh` (sharded serving PLUS
@@ -175,6 +187,12 @@ class Engine:
         mesh, and greedy tokens stay bit-identical to the single-device
         engine (argmax picks the lowest max index regardless of vocab
         sharding).
+
+        ``spec``: a :class:`repro.serve.spec.SpecConfig` pairing a draft
+        model with this target for speculative decoding (paged engines
+        only); ``draft_params`` are the draft model's weights.  Draft KV
+        pages live in the same pool as the target's, in a second slot
+        namespace (slot ``batch_slots + i`` mirrors target slot ``i``).
         """
         self.serve_mesh = mesh if hasattr(mesh, "topo") else None
         self.mesh = self.serve_mesh.mesh if self.serve_mesh else mesh
@@ -240,9 +258,9 @@ class Engine:
             if cfg.impls and "paged_decode" in cfg.impls:
                 pin = cfg.impls["paged_decode"]
             if pin is not None:
-                spec = registry.get_spec("paged_decode", pin)
-                if (spec.supports is not None
-                        and not spec.supports(quantized=self.quantized)):
+                pin_spec = registry.get_spec("paged_decode", pin)
+                if (pin_spec.supports is not None
+                        and not pin_spec.supports(quantized=self.quantized)):
                     want = ("pallas_paged_q8/jnp_paged_q8" if self.quantized
                             else "pallas_paged/jnp_paged")
                     raise ValueError(
@@ -250,14 +268,42 @@ class Engine:
                         f"kv_dtype={cfg.kv_dtype or 'model-dtype'!r} pages; "
                         f"pin one of {want} (or drop the pin and let the "
                         f"registry heuristic pick)")
+        # ---- speculative decoding: draft model riding in the same pool
+        self.spec = spec
+        self.draft_lm = None
+        self.draft_params = None
+        if spec is not None:
+            spec.validate(lm.cfg, cfg)
+            if self.mesh is not None:
+                raise ValueError(
+                    "speculative decoding on a sharded engine is not "
+                    "supported yet — build the spec engine single-device")
+            if draft_params is None:
+                raise ValueError(
+                    "Engine(spec=...) needs draft_params (the draft "
+                    "model's weights)")
+            self.draft_lm = LM(spec.draft_config, lm.features,
+                               dtype=lm.dtype)
+            self.draft_params = draft_params
+        self.spec_policy = (spec.resolve_policy(cfg.temperature)
+                            if spec is not None else None)
         if self.paged:
             from repro.serve import kv_pool
             # table/pool headroom: power-of-two segments may overshoot a
-            # request's budget by up to one segment of writes
+            # request's budget by up to one segment of writes; a spec
+            # round additionally writes up to K+1 verify tokens past the
+            # committed length before the rewind
+            headroom = self.seg_cap
+            if spec is not None:
+                headroom = max(headroom, spec.num_draft_tokens + 1)
             self.table_width = kv_pool.table_width_for(
-                cfg.max_seq, cfg.page_size, self.seg_cap)
-            self.pool_pages = cfg.pool_pages or kv_pool.recommended_pages(
-                cfg.batch_slots, cfg.max_seq, cfg.page_size, self.seg_cap)
+                cfg.max_seq, cfg.page_size, headroom)
+            base_pages = kv_pool.recommended_pages(
+                cfg.batch_slots, cfg.max_seq, cfg.page_size, headroom)
+            # draft pages mirror the target's token-for-token: the second
+            # namespace doubles the pool's worst case
+            self.pool_pages = cfg.pool_pages or (
+                2 * base_pages if spec is not None else base_pages)
         self._prefill = jax.jit(lm.prefill)
         self._decode = jax.jit(lm.decode_step)
         # fused generate programs: keyed by max_new (dense) or by
@@ -278,6 +324,11 @@ class Engine:
         # batched copy-on-write page copy (prefix-cache fork points)
         self._copy_pages = jax.jit(self._copy_pages_impl,
                                    donate_argnums=(0,))
+        # speculative decoding programs (spec engines only): the draft
+        # twin of the paged slot prefill, and the one-round spec segment
+        self._draft_slot_prefill = jax.jit(self._draft_slot_prefill_impl,
+                                           donate_argnums=(1,))
+        self._spec_seg = None
 
     # -------------------------------------------------------------- helpers
     @property
@@ -386,6 +437,9 @@ class Engine:
                                            donate_argnums=(1, 2))
         self._copy_pages = jax.jit(self._copy_pages_impl,
                                    donate_argnums=(0,))
+        self._draft_slot_prefill = jax.jit(self._draft_slot_prefill_impl,
+                                           donate_argnums=(1,))
+        self._spec_seg = None
         return mesh
 
     def set_page_table(self, state, table) -> Any:
@@ -432,11 +486,25 @@ class Engine:
             stack.enter_context(registry.use_mesh_facts(**self.mesh_facts))
         return stack
 
-    def _sample(self, logits: jnp.ndarray, rng) -> jnp.ndarray:
-        if self.cfg.temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1)
-        return jax.random.categorical(rng, logits / self.cfg.temperature,
-                                      axis=-1)
+    @property
+    def sampling_method(self) -> str:
+        """The registry "sampling" family method this engine decodes with."""
+        cfg = self.cfg
+        if cfg.temperature <= 0.0:
+            return "greedy"
+        return "top_k" if cfg.top_k else "top_p"
+
+    def _sample(self, logits: jnp.ndarray, rng=None) -> jnp.ndarray:
+        """One sampling step through the registry's "sampling" family
+        (``ServeConfig.impls`` may pin an impl; the heuristic picks the
+        jnp oracle on CPU, the Pallas blockwise argmax on TPU).  The
+        seeded-PRNG contract keeps tokens bit-identical to the historic
+        ``argmax`` / ``jax.random.categorical(rng, logits / T)``."""
+        from repro.kernels import sampling
+        cfg = self.cfg
+        return sampling.sample(logits, rng, method=self.sampling_method,
+                               temperature=max(cfg.temperature, 1e-6),
+                               k=cfg.top_k, p=cfg.top_p)
 
     def _pad_prompts(self, prompts: Sequence[Sequence[int]]
                      ) -> Tuple[np.ndarray, np.ndarray]:
@@ -520,10 +588,28 @@ class Engine:
     # ----------------------------------------------------------------- API
     def generate(self, prompts: Sequence[Sequence[int]],
                  max_new_tokens: int = 32,
-                 extra_batch: Optional[Dict[str, np.ndarray]] = None
-                 ) -> List[List[int]]:
-        """Static-batch generation: one dispatch, one host sync."""
+                 extra_batch: Optional[Dict[str, np.ndarray]] = None,
+                 stream_cb: Optional[Callable] = None) -> List[List[int]]:
+        """Static-batch generation: one dispatch, one host sync.
+
+        ``stream_cb(row, tokens, done)`` opts into streaming: it fires
+        once per row per *segment* with the newly committed tokens —
+        per verified block (up to K+1 tokens) on a speculative engine,
+        per token on a plain one — and trades the single host sync for
+        one per segment.  Tokens delivered through the callback are the
+        same stream the fused path returns.
+        """
         cfg = self.cfg
+        if self.spec is not None:
+            extra = ({k: jnp.asarray(v) for k, v in extra_batch.items()}
+                     if extra_batch else {})
+            return self._generate_spec(prompts, max_new_tokens, extra,
+                                       stream_cb)
+        if stream_cb is not None:
+            extra = ({k: jnp.asarray(v) for k, v in extra_batch.items()}
+                     if extra_batch else {})
+            return self._generate_stream(prompts, max_new_tokens, extra,
+                                         stream_cb)
         toks, lens = self._pad_prompts(prompts)
         if toks.shape[1] + max_new_tokens > cfg.max_seq:
             raise ValueError(
@@ -556,7 +642,7 @@ class Engine:
         self.fused_calls += 1
         with self._region_timer(DECODE_REGION), self._impl_ctx():
             out, n = fused(self.params, jnp.asarray(toks), jnp.asarray(lens),
-                           jax.random.PRNGKey(cfg.seed), extra, *args)
+                           jax.random.key(cfg.seed), extra, *args)
             out_np, n_np = self._fetch((out, n))    # the ONE sync
         return [out_np[i, :n_np[i]].tolist() for i in range(len(prompts))]
 
@@ -580,7 +666,7 @@ class Engine:
             batch.update({k: jnp.asarray(v) for k, v in extra_batch.items()})
         with self._impl_ctx():
             logits, state = self._prefill(self.params, batch, state)
-        rng = jax.random.PRNGKey(cfg.seed)
+        rng = jax.random.key(cfg.seed)
         out = [list() for _ in range(b)]
         done = np.zeros(b, bool)
         for t in range(max_new_tokens):
@@ -758,6 +844,369 @@ class Engine:
             fn = self._segments[steps] = jax.jit(seg, donate_argnums=(1, 2))
         return fn
 
+    # ------------------------------------------- speculative decoding (jit)
+    @property
+    def slot_headroom(self) -> int:
+        """Tokens a slot's device length can grow past its budget in one
+        segment: a quantized decode segment for plain engines, one K+1
+        verify window for spec engines (rounds are the segments there)."""
+        if self.spec is not None:
+            return self.spec.num_draft_tokens + 1
+        return self.seg_cap
+
+    @staticmethod
+    def _with_lengths(state, lengths):
+        """Rewrite a paged state's per-row lengths (the rollback: rejected
+        draft positions simply fall out of the attended/committed window;
+        their pages are overwritten by the next round's writes)."""
+        caches = state["caches"]
+        new = jnp.broadcast_to(lengths[None].astype(jnp.int32),
+                               caches.length.shape)
+        return dict(state, caches=caches._replace(length=new))
+
+    def _draft_slot_prefill_impl(self, dparams, dstate, toks, slot,
+                                 table_row):
+        """Draft twin of :meth:`_paged_slot_prefill_impl`: prefill ONE
+        row's full context into the draft page namespace.  No prefix
+        sharing (draft pages never enter the trie) and the logits are
+        discarded — rounds derive the pending token from the carried
+        TARGET logits."""
+        from repro.models.attention import PagedKVCache
+        caches = dstate["caches"]
+        n_layers = caches.length.shape[0]
+        np_w = caches.page_table.shape[-1]
+        row_view = PagedKVCache(
+            k_pages=caches.k_pages, v_pages=caches.v_pages,
+            page_table=jnp.broadcast_to(table_row[None, None],
+                                        (n_layers, 1, np_w)),
+            length=jnp.zeros((n_layers, 1), jnp.int32),
+            k_scale=caches.k_scale, v_scale=caches.v_scale)
+        _logits, new_row = self.draft_lm.prefill(dparams, {"tokens": toks},
+                                                 {"caches": row_view})
+        nc = new_row["caches"]
+        new_caches = caches._replace(
+            k_pages=nc.k_pages, v_pages=nc.v_pages,
+            k_scale=nc.k_scale, v_scale=nc.v_scale,
+            page_table=jax.lax.dynamic_update_slice_in_dim(
+                caches.page_table,
+                jnp.broadcast_to(table_row[None, None],
+                                 (n_layers, 1, np_w)),
+                slot, axis=1),
+            length=jax.lax.dynamic_update_slice_in_dim(
+                caches.length, nc.length.astype(jnp.int32), slot, axis=1))
+        return dict(dstate, caches=new_caches)
+
+    def draft_prefill_slot(self, dstate, prompt: Sequence[int], slot: int,
+                           table_row):
+        """Admission hook: land ``prompt``'s draft KV in its pool pages."""
+        toks = jnp.asarray([list(prompt)], jnp.int32)
+        with self._region_timer(PREFILL_REGION), self._impl_ctx():
+            return self._draft_slot_prefill(
+                self.draft_params, dstate, toks,
+                jnp.asarray(slot, jnp.int32),
+                jnp.asarray(table_row, jnp.int32))
+
+    def _spec_round(self, params, dparams, state, dstate, logits, rng,
+                    spec_mask):
+        """One draft -> verify -> accept -> rewind round (traced).
+
+        Returns ``(seg [B,K+1], counts [B], logits', state', dstate',
+        rng')``: ``seg[:, 0]`` is the committed pending token ``y``
+        sampled from the carried logits, ``seg[:, 1:counts]`` the
+        accepted draft tokens (``counts = a+1``), and ``logits'`` carries
+        the next round's corrected distribution (see serve/spec.py).
+        Rows with ``spec_mask=False`` force ``a = 0``: they commit
+        exactly one token per round.
+        """
+        from repro.serve.spec import accept_speculative
+        k = self.spec.num_draft_tokens
+        rng, k_y, k_d, k_acc = jax.random.split(rng, 4)
+        y = self._sample(logits, k_y).astype(jnp.int32)
+        cur_len = state["caches"].length[0]           # [B], y not included
+
+        def dbody(carry, _):
+            cur, dstate, rng = carry
+            lg, dstate = self.draft_lm.decode_step(dparams, cur[:, None],
+                                                   dstate)
+            rng, sub = jax.random.split(rng)
+            nxt = self._sample(lg, sub).astype(jnp.int32)
+            return (nxt, dstate, rng), (nxt, lg)
+
+        # K+1 draft steps: the last one only lands d_K's KV so the draft
+        # cache covers every position the rewind can keep (a = K)
+        (_, dstate, _), (ds, qs) = jax.lax.scan(
+            dbody, (y, dstate, k_d), None, length=k + 1)
+        drafts = ds[:k].T                               # [B,K]
+        qlogits = jnp.moveaxis(qs[:k], 0, 1)            # [B,K,V]
+        suffix = jnp.concatenate([y[:, None], drafts], axis=1)
+        # target verify: the WHOLE suffix in one multi-token segment
+        # through the chunked-prefill path — K+1 next-token distributions
+        # for one forward pass
+        o, state = self.lm.prefill(
+            params, {"tokens": suffix, "prefix_len": cur_len}, state,
+            all_logits=True)                            # [B,K+1,V]
+        acc, carry = accept_speculative(
+            drafts, qlogits, o, k_acc, policy=self.spec_policy,
+            temperature=self.cfg.temperature, spec_mask=spec_mask)
+        new_len = cur_len + acc + 1
+        return (suffix, acc + 1, carry,
+                self._with_lengths(state, new_len),
+                self._with_lengths(dstate, new_len), rng)
+
+    def spec_segment(self) -> Callable:
+        """The jitted spec segment for the scheduler: one spec round per
+        dispatch, up to K+1 tokens per spec row and exactly 1 per
+        non-spec row of a mixed batch.  Same donation contract as
+        :meth:`decode_segment` (state, draft state and the logits buffer
+        alias segment-to-segment)."""
+        if self._spec_seg is None:
+            def seg(params, dparams, state, dstate, logits, rng,
+                    spec_mask):
+                return self._spec_round(params, dparams, state, dstate,
+                                        logits, rng, spec_mask)
+
+            self._spec_seg = jax.jit(seg, donate_argnums=(2, 3, 4))
+        return self._spec_seg
+
+    def _spec_plan(self, prompts: Sequence[Sequence[int]], max_new: int):
+        """Call-sized page plan for one spec namespace: every row gets
+        pages for prompt + budget + the K+1 verify overshoot."""
+        from repro.serve.kv_pool import pages_for
+        cfg = self.cfg
+        k = self.spec.num_draft_tokens
+        per_row = [pages_for(len(p) + max_new + k + 1, cfg.page_size)
+                   for p in prompts]
+        table_width = max(per_row)
+        num_pages = -(-(1 + sum(per_row)) // 16) * 16
+        table = np.zeros((len(prompts), table_width), np.int32)
+        nxt = 1
+        for i, npg in enumerate(per_row):
+            table[i, :npg] = np.arange(nxt, nxt + npg)
+            nxt += npg
+        return (num_pages, table_width), table
+
+    def _make_spec_fused(self, max_new: int, paged_dims, draft_dims
+                         ) -> Callable:
+        """The fused speculative generate: prefill both models + the
+        whole round loop in ONE jitted program (one dispatch, one sync).
+        Returns (out [B,max_new], counts [B], proposed, accepted)."""
+        cfg = self.cfg
+        k = self.spec.num_draft_tokens
+
+        def fused(params, dparams, toks, lens, rng, extra, table, dtable):
+            b = toks.shape[0]
+            need = toks.shape[1] + max_new + k + 1
+            seq_cap = -(-need // 32) * 32
+            num_pages, table_width = paged_dims
+            state = self.lm.init_decode_state(
+                b, seq_cap, page_size=cfg.page_size, num_pages=num_pages,
+                table_width=table_width, kv_dtype=self.kv_dtype)
+            state = self.set_page_table(state, table)
+            dnum, dwidth = draft_dims
+            dstate = self.draft_lm.init_decode_state(
+                b, seq_cap, page_size=cfg.page_size, num_pages=dnum,
+                table_width=dwidth, kv_dtype=self.kv_dtype)
+            dstate = self.set_page_table(dstate, dtable)
+            logits, state = self.lm.prefill(
+                params, dict(extra, tokens=toks, lengths=lens), state)
+            _dl, dstate = self.draft_lm.prefill(
+                dparams, {"tokens": toks, "lengths": lens}, dstate)
+            spec_mask = jnp.ones((b,), bool)
+
+            def cond(c):
+                return (c[0] < max_new) & jnp.logical_not(c[6].all())
+
+            def body(c):
+                t, rng, logits, state, dstate, out, done, n, prop, accn = c
+                old_len = state["caches"].length[0]
+                old_dlen = dstate["caches"].length[0]
+                old_logits = logits
+                seg, counts, logits, state, dstate, rng = self._spec_round(
+                    params, dparams, state, dstate, logits, rng, spec_mask)
+                emit = jnp.logical_not(done)
+                j = jnp.arange(k + 1)[None, :]
+                within = j < counts[:, None]
+                if cfg.eos_token >= 0:
+                    iseos = (seg == cfg.eos_token) & within
+                    first = jnp.min(jnp.where(iseos, j, k + 1), axis=1)
+                else:
+                    first = jnp.full((b,), k + 1, jnp.int32)
+                # tokens delivered this round: through the first eos, and
+                # never past the budget
+                allowed = jnp.minimum(counts, first + 1)
+                inc = jnp.where(emit,
+                                jnp.minimum(allowed,
+                                            jnp.maximum(max_new - n, 0)),
+                                0)
+                valid = j < inc[:, None]
+                pos = n[:, None] + j
+                rows = jnp.arange(b)[:, None]
+                out = out.at[rows, jnp.where(valid, pos, max_new)].set(
+                    jnp.where(valid, seg, 0), mode="drop")
+                n = n + inc
+                done = done | (emit & ((first < counts) | (n >= max_new)))
+                # freeze finished rows (their junk rounds stop moving the
+                # carried logits and the committed lengths)
+                state = self._with_lengths(
+                    state, jnp.where(emit, state["caches"].length[0],
+                                     old_len))
+                dstate = self._with_lengths(
+                    dstate, jnp.where(emit, dstate["caches"].length[0],
+                                      old_dlen))
+                logits = jnp.where(emit[:, None], logits, old_logits)
+                prop = prop + jnp.where(emit & spec_mask, k, 0).sum()
+                accn = accn + jnp.where(emit & spec_mask, counts - 1,
+                                        0).sum()
+                return (t + 1, rng, logits, state, dstate, out, done, n,
+                        prop, accn)
+
+            carry = (jnp.zeros((), jnp.int32), rng, logits, state, dstate,
+                     jnp.zeros((b, max_new), jnp.int32),
+                     jnp.zeros((b,), bool), jnp.zeros((b,), jnp.int32),
+                     jnp.zeros((), jnp.int32), jnp.zeros((), jnp.int32))
+            carry = jax.lax.while_loop(cond, body, carry)
+            return carry[5], carry[7], carry[8], carry[9]
+
+        return jax.jit(fused)
+
+    def _generate_spec(self, prompts, max_new_tokens, extra, stream_cb):
+        """Speculative generate: fully fused (one sync) without a
+        callback, host-segmented (one sync + one ``stream_cb`` wave per
+        round) with one.  ``self.spec_stats`` records the accept rate."""
+        cfg = self.cfg
+        toks, lens = self._pad_prompts(prompts)
+        if toks.shape[1] + max_new_tokens > cfg.max_seq:
+            raise ValueError(
+                f"prompt ({toks.shape[1]}) + max_new ({max_new_tokens}) "
+                f"exceeds max_seq ({cfg.max_seq})")
+        pd, table = self._spec_plan(prompts, max_new_tokens)
+        dd, dtable = self._spec_plan(prompts, max_new_tokens)
+        b = len(prompts)
+        rng = jax.random.key(cfg.seed)
+        if stream_cb is None:
+            key = ("spec", max_new_tokens, pd, dd)
+            fused = self._fused.get(key)
+            if fused is None:
+                fused = self._fused[key] = self._make_spec_fused(
+                    max_new_tokens, pd, dd)
+            self.fused_calls += 1
+            with self._region_timer(DECODE_REGION), self._impl_ctx():
+                out, n, prop, accn = fused(
+                    self.params, self.draft_params, jnp.asarray(toks),
+                    jnp.asarray(lens), rng, extra, jnp.asarray(table),
+                    jnp.asarray(dtable))
+                out_np, n_np, prop_np, accn_np = self._fetch(
+                    (out, n, prop, accn))                # the ONE sync
+            self.spec_stats = dict(
+                proposed=int(prop_np), accepted=int(accn_np),
+                accept_rate=(float(accn_np) / max(int(prop_np), 1)))
+            return [out_np[i, :n_np[i]].tolist() for i in range(b)]
+        # ---- streaming: one jitted round per sync, tokens surface as
+        # soon as the target verifies them (blockwise streaming contract:
+        # stream_cb(row, accepted_tokens, done) once per row per round
+        # that delivered tokens; host_syncs grows O(rounds))
+        k = self.spec.num_draft_tokens
+        pkey = ("spec_prefill", toks.shape[1], pd, dd)
+        prefill = self._fused.get(pkey)
+        if prefill is None:
+            def _prefill(params, dparams, toks, lens, extra, tbl, dtbl):
+                need = toks.shape[1] + max_new_tokens + k + 1
+                seq_cap = -(-need // 32) * 32
+                state = self.lm.init_decode_state(
+                    b, seq_cap, page_size=cfg.page_size,
+                    num_pages=pd[0], table_width=pd[1],
+                    kv_dtype=self.kv_dtype)
+                state = self.set_page_table(state, tbl)
+                dstate = self.draft_lm.init_decode_state(
+                    b, seq_cap, page_size=cfg.page_size,
+                    num_pages=dd[0], table_width=dd[1],
+                    kv_dtype=self.kv_dtype)
+                dstate = self.set_page_table(dstate, dtbl)
+                logits, state = self.lm.prefill(
+                    params, dict(extra, tokens=toks, lengths=lens), state)
+                _dl, dstate = self.draft_lm.prefill(
+                    dparams, {"tokens": toks, "lengths": lens}, dstate)
+                return logits, state, dstate
+
+            prefill = self._fused[pkey] = jax.jit(_prefill)
+        with self._region_timer(PREFILL_REGION), self._impl_ctx():
+            logits, state, dstate = prefill(
+                self.params, self.draft_params, jnp.asarray(toks),
+                jnp.asarray(lens), extra, jnp.asarray(table),
+                jnp.asarray(dtable))
+        seg_fn = self.spec_segment()
+        spec_mask = jnp.ones((b,), bool)
+        outs: List[List[int]] = [[] for _ in range(b)]
+        done = np.zeros(b, bool)
+        proposed = accepted = 0
+        with self._region_timer(DECODE_REGION), self._impl_ctx():
+            for _round in range(max_new_tokens):
+                if done.all():
+                    break
+                seg, counts, logits, state, dstate, rng = seg_fn(
+                    self.params, self.draft_params, state, dstate, logits,
+                    rng, spec_mask)
+                seg_np, counts_np = self._fetch((seg, counts))
+                for i in range(b):
+                    if done[i]:
+                        continue
+                    proposed += k
+                    accepted += int(counts_np[i]) - 1
+                    take = seg_np[i][:counts_np[i]]
+                    room = max_new_tokens - len(outs[i])
+                    take = take[:room]
+                    if cfg.eos_token >= 0:
+                        hits = np.nonzero(take == cfg.eos_token)[0]
+                        if hits.size:
+                            take = take[:hits[0] + 1]
+                            done[i] = True
+                    outs[i].extend(int(t) for t in take)
+                    if len(outs[i]) >= max_new_tokens:
+                        done[i] = True
+                    if take.size:
+                        stream_cb(i, [int(t) for t in take], bool(done[i]))
+        self.spec_stats = dict(
+            proposed=proposed, accepted=accepted,
+            accept_rate=accepted / max(proposed, 1))
+        return outs
+
+    def _generate_stream(self, prompts, max_new_tokens, extra, stream_cb):
+        """Plain-engine streaming: the wave-mode loop with a callback per
+        token (spec engines stream blockwise per verified segment).  The
+        rng split schedule matches the fused loop, so the streamed tokens
+        are the fused path's tokens."""
+        cfg = self.cfg
+        toks, lens = self._pad_prompts(prompts)
+        b = toks.shape[0]
+        state = self.lm.init_decode_state(b, cfg.max_seq)
+        batch = dict(extra, tokens=jnp.asarray(toks))
+        if self.lm.cfg.family in MASKED_FAMILIES:
+            batch["lengths"] = jnp.asarray(lens)
+        with self._region_timer(PREFILL_REGION), self._impl_ctx():
+            logits, state = self._prefill(self.params, batch, state)
+        rng = jax.random.key(cfg.seed)
+        out: List[List[int]] = [list() for _ in range(b)]
+        done = np.zeros(b, bool)
+        with self._region_timer(DECODE_REGION), self._impl_ctx():
+            for _t in range(max_new_tokens):
+                rng, sub = jax.random.split(rng)
+                nxt = self._sample(logits, sub)
+                nxt_np = self._fetch(nxt)
+                for i in range(b):
+                    if done[i]:
+                        continue
+                    out[i].append(int(nxt_np[i]))
+                    if cfg.eos_token >= 0 and nxt_np[i] == cfg.eos_token:
+                        done[i] = True
+                    if len(out[i]) >= max_new_tokens:
+                        done[i] = True
+                    stream_cb(i, [int(nxt_np[i])], bool(done[i]))
+                if done.all():
+                    break
+                logits, state = self._decode(self.params, nxt[:, None],
+                                             state)
+        return out
+
     # ------------------------------------------------------ instrumentation
     def instrument(self, perfctr, prompt_len: int = 16) -> None:
         """Attach a PerfCtr and probe the serving regions (wrapper mode).
@@ -876,6 +1325,11 @@ class BatchScheduler:
             "expired": 0, "cancelled": 0, "sheds": 0, "rejections": 0,
             "bypasses": 0, "snapshots": 0, "restores": 0,
         }
+        if engine.spec is not None:
+            # speculative decoding telemetry (accept_rate =
+            # draft_accepted / draft_proposed over spec rows)
+            self.metrics.update(spec_rounds=0, draft_proposed=0,
+                                draft_accepted=0)
         self.admission_log: List[Tuple[int, int]] = []   # (rid, slot)
         self.pool = None    # KVPool, created per run() on paged engines
         self.draining = False
@@ -1017,6 +1471,11 @@ class BatchScheduler:
         self._slot_len[i] = 0
         if self.pool is not None:
             self.pool.release(i)
+            if self.engine.spec is not None:
+                # the row's draft-namespace twin goes with it — a leaked
+                # draft page would strand half the pool (KVPool.check()
+                # audits the shared free list across both namespaces)
+                self.pool.release(self.engine.cfg.batch_slots + i)
 
     def _sweep_queue(self, now: float) -> None:
         """Drop cancelled/expired requests before they ever prefill."""
@@ -1034,8 +1493,15 @@ class BatchScheduler:
             return True
         full_len = len(req.prompt) + len(req.generated)
         worst = (full_len + (req.max_new_tokens - len(req.generated))
-                 + self.engine.seg_cap)
+                 + self.engine.slot_headroom)
         _, shared = self.pool.match_prefix(req.prompt + req.generated)
+        if self.engine.spec is not None:
+            # spec engines admit into BOTH namespaces: the draft twin
+            # reserves the same worst case with no prefix sharing
+            from repro.serve.kv_pool import pages_for
+            per_ns = min(pages_for(worst, self.pool.page_size),
+                         self.pool.table_width)
+            return (2 * per_ns - shared) <= self.pool.unpromised()
         return self.pool.can_reserve(worst, shared_pages=shared)
 
     def _pick_admission(self) -> Optional[Request]:
@@ -1079,6 +1545,10 @@ class BatchScheduler:
             if self.pool is not None:
                 assert self.pool.slot_pages(i) > 0, \
                     f"slot {i}: active with no pages"
+                if self.engine.spec is not None:
+                    ds = self.engine.cfg.batch_slots + i
+                    assert self.pool.slot_pages(ds) > 0, \
+                        f"slot {i}: active with no draft pages"
         for rid in done:
             assert self.completed[rid].status == "done", \
                 f"completed request {rid} has status " \
@@ -1094,7 +1564,8 @@ class BatchScheduler:
                     max_new_tokens=req.max_new_tokens,
                     priority=req.priority, deadline_ms=req.deadline_ms,
                     ttft_deadline_ms=req.ttft_deadline_ms,
-                    status=req.status, finished=req.finished)
+                    status=req.status, finished=req.finished,
+                    spec=req.spec)
 
     @staticmethod
     def _req_from_dict(d: Dict[str, Any]) -> Request:
@@ -1105,7 +1576,8 @@ class BatchScheduler:
                        deadline_ms=d.get("deadline_ms"),
                        ttft_deadline_ms=d.get("ttft_deadline_ms"),
                        status=str(d.get("status", "queued")),
-                       finished=bool(d.get("finished", False)))
+                       finished=bool(d.get("finished", False)),
+                       spec=bool(d.get("spec", False)))
 
     def _snapshot_config(self) -> Dict[str, Any]:
         cfg = self.engine.cfg
@@ -1115,7 +1587,9 @@ class BatchScheduler:
                     kv_dtype=cfg.kv_dtype, prefix_cache=cfg.prefix_cache,
                     pool_pages=(self.engine.pool_pages
                                 if self.engine.paged else None),
-                    vocab=self.engine.lm.cfg.vocab)
+                    vocab=self.engine.lm.cfg.vocab,
+                    spec=(self.engine.spec.signature()
+                          if self.engine.spec is not None else None))
 
     def _export_index(self, state) -> Optional[Dict[str, Any]]:
         """Serialize the prefix trie + its device page CONTENTS — the
@@ -1212,6 +1686,16 @@ class BatchScheduler:
                 raise ValueError(
                     f"snapshot {path}: config mismatch on {key!r} "
                     f"(snapshot {sc.get(key)!r} != engine {actual!r})")
+        snap_spec = sc.get("spec")
+        eng_spec = (engine.spec.signature() if engine.spec is not None
+                    else None)
+        if ((tuple(snap_spec) if snap_spec else None)
+                != (tuple(eng_spec) if eng_spec else None)):
+            raise ValueError(
+                f"snapshot {path}: config mismatch on 'spec' "
+                f"(snapshot {snap_spec!r} != engine {eng_spec!r}) — "
+                f"restoring under a different draft pairing could not "
+                f"reproduce the token stream")
         sched = cls(engine, **kwargs)
         now = time.perf_counter()
         for d in snap.get("completed", []):
@@ -1365,14 +1849,22 @@ class BatchScheduler:
         nslots = cfg.batch_slots
         if eng.paged:
             from repro.serve.kv_pool import KVPool
-            self.pool = KVPool(eng.pool_pages, cfg.page_size, nslots,
+            # spec engines run TWO page namespaces over one free list:
+            # pool slot i is row i's target pages, slot nslots+i its
+            # draft pages (never indexed in the prefix trie)
+            pool_slots = 2 * nslots if eng.spec is not None else nslots
+            self.pool = KVPool(eng.pool_pages, cfg.page_size, pool_slots,
                                eng.table_width,
                                prefix_cache=cfg.prefix_cache)
         state = eng.shard_state(eng.lm.init_decode_state(
             nslots, cfg.max_seq, **eng._state_kwargs()))
+        dstate = None
+        if eng.spec is not None:
+            dstate = eng.draft_lm.init_decode_state(
+                nslots, cfg.max_seq, **eng._state_kwargs())
         logits = eng.replicate(
             jnp.zeros((nslots, eng.lm.cfg.vocab), eng.lm.dtype))
-        rng = eng.replicate(jax.random.PRNGKey(cfg.seed))
+        rng = eng.replicate(jax.random.key(cfg.seed))
         state = self._apply_restore_index(state)
         slots = self._slots = [None] * nslots
         remaining = self._remaining = np.zeros(nslots, np.int64)
@@ -1410,7 +1902,7 @@ class BatchScheduler:
                         # segment overshoot), so decode growth can never
                         # exhaust the pool mid-run.  (_pick_admission
                         # already proved can_reserve for this request.)
-                        worst = len(full) + budget + eng.seg_cap
+                        worst = len(full) + budget + eng.slot_headroom
                         admit = self.pool.admit_prefix(i, full)
                         prefix_len = admit.matched_len
                         if admit.cow is not None:
@@ -1418,14 +1910,22 @@ class BatchScheduler:
                         self.pool.reserve(i, worst)
                         self.pool.alloc(i, len(full))
                         table_row = self.pool.tables[i]
+                        if eng.spec is not None:
+                            # the draft twin: full context, no sharing
+                            self.pool.reserve(nslots + i, worst)
+                            self.pool.alloc(nslots + i, len(full))
                         # admission programs key on the FULL table width
                         # (prefill only scatter-writes through the table,
                         # and writes its own slot's row on device; one
                         # width-restoring upload per round suffices — the
                         # next segment re-slices to the live mix)
                         if not width_restored:
+                            tbl = self.pool.table()
                             state = eng.set_page_table(state,
-                                                       self.pool.table())
+                                                       tbl[:nslots])
+                            if eng.spec is not None:
+                                dstate = eng.set_page_table(dstate,
+                                                            tbl[nslots:])
                             width_restored = True
                         # the fork page must hold the shared tokens before
                         # the suffix prefill reads (and partially rewrites)
@@ -1442,6 +1942,10 @@ class BatchScheduler:
                     state, logits = eng.prefill_slot(
                         state, logits, full[prefix_len:], i,
                         table_row=table_row, prefix_len=prefix_len)
+                    if eng.spec is not None:
+                        dstate = eng.draft_prefill_slot(
+                            dstate, full, i,
+                            self.pool.tables[nslots + i])
                     if self.pool is not None:
                         # index the now-resident context pages so the
                         # NEXT admission can share them
@@ -1477,31 +1981,76 @@ class BatchScheduler:
                 # log2(chunk)+1 segment programs ever compile) and
                 # overshoot is masked against each request's budget at
                 # retire time
-                steps = eng.quantize_steps(
-                    min(self.admission_chunk, int(remaining[active].min())))
-                if self.pool is not None:
-                    # cover every page this segment can write, then hand
-                    # the device a table sliced to the width the LIVE mix
-                    # needs (quantized so programs are shared): decode
-                    # traffic — and the traffic model's gather window —
-                    # tracks actual context, not max_seq.  A long request
-                    # widens segments only while it is resident.
+                if eng.spec is not None:
+                    # one spec round per segment: every row's device
+                    # length can grow by up to K+1 (exactly `counts[i]`,
+                    # fetched below); cover BOTH namespaces first
+                    grow = eng.spec.num_draft_tokens + 1
                     for i in np.nonzero(active)[0]:
-                        self.pool.ensure(int(i), int(slot_len[i]) + steps)
-                    width = max(self.pool.slot_pages(int(i))
+                        self.pool.ensure(int(i), int(slot_len[i]) + grow)
+                        self.pool.ensure(nslots + int(i),
+                                         int(slot_len[i]) + grow)
+                    width = max(max(self.pool.slot_pages(int(i)),
+                                    self.pool.slot_pages(nslots + int(i)))
                                 for i in np.nonzero(active)[0])
                     bucket = min(-(-max(width, 1) // 4) * 4,
                                  eng.table_width)
-                    state = eng.set_page_table(state,
-                                               self.pool.table()[:, :bucket])
-                seg_t0 = time.perf_counter()
-                with eng._region_timer(DECODE_REGION):
-                    toks, logits, state, rng = eng.decode_segment(steps)(
-                        eng.params, state, logits, rng)
-                    toks_np = eng._fetch(toks)     # ONE sync per segment
-                slot_len[active] += steps
-                self.metrics["segments"] += 1
-                self.metrics["decode_steps"] += steps
+                    tbl = self.pool.table()
+                    state = eng.set_page_table(
+                        state, tbl[:nslots, :bucket])
+                    dstate = eng.set_page_table(
+                        dstate, tbl[nslots:, :bucket])
+                    spec_mask = jnp.asarray(
+                        [s is not None and s.spec for s in slots])
+                    seg_t0 = time.perf_counter()
+                    with eng._region_timer(DECODE_REGION):
+                        (toks, counts, logits, state, dstate,
+                         rng) = eng.spec_segment()(
+                            eng.params, eng.draft_params, state, dstate,
+                            logits, rng, spec_mask)
+                        # ONE sync per segment
+                        toks_np, counts_np = eng._fetch((toks, counts))
+                    produced = counts_np.astype(np.int64)
+                    slot_len[active] += produced[active]
+                    self.metrics["segments"] += 1
+                    self.metrics["decode_steps"] += 1
+                    self.metrics["spec_rounds"] += 1
+                    for i in np.nonzero(active)[0]:
+                        if slots[i] is not None and slots[i].spec:
+                            self.metrics["draft_proposed"] += \
+                                eng.spec.num_draft_tokens
+                            self.metrics["draft_accepted"] += \
+                                int(produced[i]) - 1
+                else:
+                    steps = eng.quantize_steps(
+                        min(self.admission_chunk,
+                            int(remaining[active].min())))
+                    if self.pool is not None:
+                        # cover every page this segment can write, then
+                        # hand the device a table sliced to the width the
+                        # LIVE mix needs (quantized so programs are
+                        # shared): decode traffic — and the traffic
+                        # model's gather window — tracks actual context,
+                        # not max_seq.  A long request widens segments
+                        # only while it is resident.
+                        for i in np.nonzero(active)[0]:
+                            self.pool.ensure(int(i),
+                                             int(slot_len[i]) + steps)
+                        width = max(self.pool.slot_pages(int(i))
+                                    for i in np.nonzero(active)[0])
+                        bucket = min(-(-max(width, 1) // 4) * 4,
+                                     eng.table_width)
+                        state = eng.set_page_table(
+                            state, self.pool.table()[:, :bucket])
+                    seg_t0 = time.perf_counter()
+                    with eng._region_timer(DECODE_REGION):
+                        toks, logits, state, rng = eng.decode_segment(
+                            steps)(eng.params, state, logits, rng)
+                        toks_np = eng._fetch(toks)  # ONE sync per segment
+                    produced = np.full(nslots, steps, np.int64)
+                    slot_len[active] += steps
+                    self.metrics["segments"] += 1
+                    self.metrics["decode_steps"] += steps
                 seg_run += 1
                 now = time.perf_counter()
                 # chaos slow/hung-segment injection inflates the OBSERVED
@@ -1535,7 +2084,9 @@ class BatchScheduler:
                         continue
                     if not req.generated and not req.first_token_time:
                         req.first_token_time = now
-                    take = toks_np[i][:remaining[i]]   # mask overshoot
+                    # mask overshoot: at most this segment's real tokens
+                    # (spec rows: the accepted count), never past budget
+                    take = toks_np[i][:min(produced[i], remaining[i])]
                     finished = False
                     if cfg.eos_token >= 0:
                         hits = np.nonzero(take == cfg.eos_token)[0]

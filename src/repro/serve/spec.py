@@ -1,0 +1,201 @@
+"""Speculative decoding: draft/target pairing, accept policies, round math.
+
+The subsystem couples a small *draft* model with the serving *target*
+model inside one jitted program.  A **spec round** (built by
+``Engine._spec_round``, math here) is:
+
+1. sample the pending token ``y`` from the carried logits,
+2. draft ``K = num_draft_tokens`` candidates ``d_1..d_K`` with the
+   draft model (K+1 decode steps so the draft cache also covers
+   ``d_K``'s position and rewinds uniformly),
+3. verify the whole suffix ``[y, d_1..d_K]`` with the target model in
+   ONE multi-token segment through the chunked-prefill path
+   (``lm.prefill(..., prefix_len=row_lengths, all_logits=True)``) —
+   K+1 next-token distributions ``o_0..o_K`` for one forward pass,
+4. accept the longest prefix ``d_1..d_a`` the policy admits, rewind
+   both models' per-row cache lengths to ``len + a + 1`` (rejected
+   draft tokens simply fall out of the attended window; their pages are
+   overwritten by the next round's writes),
+5. carry logits that make the NEXT round's ``y`` the correct
+   "extra" token (bonus / residual / rollback sample).
+
+Accept policies (``SpecConfig.accept_policy``):
+
+* ``greedy`` (temperature 0): ``d_i`` is accepted iff it equals
+  ``argmax(o_{i-1})``; the carried logits are ``o_a`` verbatim, so every
+  emitted token is the argmax of a target-model logit row at the exact
+  context target-only decode would have used — greedy speculative tokens
+  are **bit-identical** to target-only decode.
+* ``rejection`` (temperature > 0): the standard speculative-sampling
+  correction.  ``d_i ~ q_i`` is accepted with probability
+  ``min(1, p_i(d_i) / q_i(d_i))``; on the first rejection the carried
+  distribution is the residual ``norm(max(p_a - q_{a+1}, 0))``, after K
+  acceptances it is the bonus ``p_K``.  The carried logits are
+  ``T * log(dist)`` so the engine's ordinary
+  ``categorical(logits / T)`` sample IS the residual/bonus draw — the
+  emitted token stream is distributed exactly as target-only sampling
+  (testable against the target distribution on a seeded grid).
+* ``auto``: resolves to ``greedy`` when ``temperature <= 0`` else
+  ``rejection``.
+
+Mixed batches: rows with ``spec_mask=False`` force ``a = 0`` and carry
+the plain target distribution ``p_0`` (NOT the residual — that would
+skew a non-spec row's sampling), so a non-spec row emits exactly one
+token per round while spec rows emit up to K+1.
+"""
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SpecConfig", "accept_speculative", "ACCEPT_POLICIES"]
+
+ACCEPT_POLICIES = ("auto", "greedy", "rejection")
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Draft/target pairing for speculative decoding.
+
+    ``draft_config`` is the draft model's LMConfig (the config zoo spans
+    qwen2-0.5b .. mistral-123b — exactly a draft/target pair);
+    ``num_draft_tokens`` is K, the draft lookahead per round.
+    """
+    draft_config: Any                  # models.lm.LMConfig of the draft
+    num_draft_tokens: int = 4
+    accept_policy: str = "auto"        # auto | greedy | rejection
+
+    def resolve_policy(self, temperature: float) -> str:
+        if self.accept_policy != "auto":
+            return self.accept_policy
+        return "greedy" if temperature <= 0.0 else "rejection"
+
+    def signature(self) -> Tuple:
+        """Snapshot-compat identity: restoring under a different pairing
+        could not reproduce the token stream."""
+        return (getattr(self.draft_config, "name", "?"),
+                int(self.num_draft_tokens), self.accept_policy)
+
+    def validate(self, target_cfg, serve_cfg=None) -> None:
+        """Eager construction-time checks (Engine init and launch/cli.py
+        both call this, so a bad pairing fails before any tracing)."""
+        from repro.serve.engine import MASKED_FAMILIES
+        k = int(self.num_draft_tokens)
+        if k < 1:
+            raise ValueError(f"num_draft_tokens must be >= 1, got {k}")
+        if self.accept_policy not in ACCEPT_POLICIES:
+            raise ValueError(
+                f"unknown accept_policy {self.accept_policy!r}; choose "
+                f"from {ACCEPT_POLICIES}")
+        dc = self.draft_config
+        if dc.vocab != target_cfg.vocab:
+            raise ValueError(
+                f"draft/target vocab mismatch: draft {dc.name!r} has "
+                f"vocab={dc.vocab}, target {target_cfg.name!r} has "
+                f"vocab={target_cfg.vocab} — verified tokens index one "
+                f"shared vocabulary")
+        for role, cfg in (("draft", dc), ("target", target_cfg)):
+            if cfg.family not in MASKED_FAMILIES:
+                raise ValueError(
+                    f"speculative decoding needs an attention-cache "
+                    f"decoder family ({MASKED_FAMILIES}); {role} config "
+                    f"{cfg.name!r} is {cfg.family!r}"
+                    + (" — encoder-decoder configs are unsupported"
+                       if cfg.family == "encdec" else ""))
+        if serve_cfg is not None:
+            if serve_cfg.page_size <= 0:
+                raise ValueError(
+                    "speculative decoding needs a paged engine "
+                    "(ServeConfig.page_size > 0): verify runs through the "
+                    "paged suffix-prefill path and rollback rewinds "
+                    "per-row page lengths")
+            policy = self.resolve_policy(serve_cfg.temperature)
+            if policy == "greedy" and serve_cfg.temperature > 0.0:
+                raise ValueError(
+                    "accept_policy='greedy' needs temperature 0 (exact "
+                    "prefix match against the target argmax)")
+            if policy == "rejection" and serve_cfg.temperature <= 0.0:
+                raise ValueError(
+                    "accept_policy='rejection' needs temperature > 0 "
+                    "(use 'greedy' or 'auto' for deterministic decode)")
+            if policy == "rejection" and (
+                    getattr(serve_cfg, "top_k", 0)
+                    or getattr(serve_cfg, "top_p", 1.0) < 1.0):
+                raise ValueError(
+                    "speculative rejection sampling supports "
+                    "temperature-only sampling: the carried residual "
+                    "distribution is already corrected, so a top-k/top-p "
+                    "refilter of it would skew the accepted stream")
+
+
+def accept_speculative(draft_tokens: jnp.ndarray,
+                       draft_logits: jnp.ndarray,
+                       target_logits: jnp.ndarray,
+                       key=None, *, policy: str,
+                       temperature: float = 0.0,
+                       spec_mask: Optional[jnp.ndarray] = None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Longest-accepted-prefix + carried logits for one spec round.
+
+    Args:
+      draft_tokens: [B, K] int32 — ``d_1..d_K`` sampled from the draft.
+      draft_logits: [B, K, V] — draft logits ``q_1..q_K`` each ``d_i``
+        was sampled from (pre-temperature, as produced by the model).
+      target_logits: [B, K+1, V] — verify logits ``o_0..o_K``; ``o_i``
+        conditions on ``y, d_1..d_i``.
+      key: PRNG key for the rejection draws (unused for greedy).
+      policy: "greedy" | "rejection" (resolved — not "auto").
+      temperature: sampling temperature (rejection only).
+      spec_mask: [B] bool; False rows force ``a=0`` and carry the plain
+        target distribution (mixed spec/non-spec batches).
+
+    Returns ``(accepted [B] int32 in [0..K], carry_logits [B, V])`` where
+    sampling the engine's usual way from ``carry_logits`` (argmax for
+    greedy, ``categorical(carry / T)`` for rejection) produces the
+    round's final token with the exact corrected distribution.
+    """
+    b, k = draft_tokens.shape
+    if spec_mask is None:
+        spec_mask = jnp.ones((b,), bool)
+    if policy == "greedy":
+        tgt = jnp.argmax(target_logits, axis=-1).astype(jnp.int32)
+        flags = (draft_tokens == tgt[:, :k]) & spec_mask[:, None]
+        acc = jnp.cumprod(flags.astype(jnp.int32), axis=1).sum(axis=1)
+        carry = jnp.take_along_axis(
+            target_logits, acc[:, None, None], axis=1)[:, 0]
+        return acc, carry
+    if policy != "rejection":
+        raise ValueError(f"unresolved accept policy {policy!r}")
+    from repro.kernels.sampling import filtered_logits
+    t = float(temperature)
+    q = jax.nn.softmax(filtered_logits(draft_logits, temperature=t),
+                       axis=-1)                               # [B,K,V]
+    p = jax.nn.softmax(filtered_logits(target_logits, temperature=t),
+                       axis=-1)                               # [B,K+1,V]
+    u = jax.random.uniform(key, (b, k))
+    q_tok = jnp.take_along_axis(q, draft_tokens[..., None],
+                                axis=-1)[..., 0]              # [B,K]
+    p_tok = jnp.take_along_axis(p[:, :k], draft_tokens[..., None],
+                                axis=-1)[..., 0]
+    # accept d_i with prob min(1, p/q): u*q < p avoids the div (q>0 by
+    # construction — the draft sampled d_i from q)
+    ok = (u * q_tok < p_tok) & spec_mask[:, None]
+    acc = jnp.cumprod(ok.astype(jnp.int32), axis=1).sum(axis=1)
+    p_a = jnp.take_along_axis(p, acc[:, None, None], axis=1)[:, 0]
+    # residual needs q at the REJECTED position; pad q with zeros at K so
+    # full acceptance (a=K) degenerates to the bonus draw from p_K
+    q_pad = jnp.concatenate([q, jnp.zeros_like(q[:, :1])], axis=1)
+    q_a = jnp.take_along_axis(q_pad, acc[:, None, None], axis=1)[:, 0]
+    # non-spec rows carry the PLAIN target distribution p_0 (their a is
+    # forced to 0 above; subtracting q_1 would skew an ordinary sample)
+    q_a = jnp.where(spec_mask[:, None], q_a, 0.0)
+    dist = jnp.maximum(p_a - q_a, 0.0)
+    norm = dist.sum(axis=-1, keepdims=True)
+    # degenerate all-zero residual (p == q to fp rounding): fall back to
+    # the target distribution itself — identical in the limit
+    dist = jnp.where(norm > 0.0, dist, p_a)
+    # carried as T*log(dist): the engine's categorical(carry / T) then
+    # samples exactly from dist
+    return acc, t * jnp.log(dist)

@@ -59,7 +59,8 @@ def test_family_suite_matches_bench_autotune():
 def test_suite_covers_every_registered_family():
     assert set(pr.FAMILY_SUITE) == {"attention", "paged_decode",
                                     "paged_decode_q8", "stream_triad",
-                                    "jacobi7", "ssd_scan"}
+                                    "jacobi7", "ssd_scan",
+                                    "sampling_topk", "sampling_topp"}
 
 
 def test_suite_family_splits_reserved_keys():

@@ -1,0 +1,175 @@
+"""Sampling kernel family (kernels/sampling.py): greedy / top-k / top-p.
+
+The contracts speculative decoding leans on:
+
+* the Pallas blockwise argmax is token-identical to ``jnp.argmax``
+  (strict-``>`` tie-break to the lowest index, across block boundaries);
+* unfiltered top-p at temperature T is BIT-identical to
+  ``jax.random.categorical(key, logits / T)`` (the gumbel-argmax trick
+  with jax's own gumbel draw);
+* every impl of a method agrees with the pure-jnp oracle under the same
+  key (either side can verify the other);
+* dispatch picks by method + backend, and the tune space warm-starts
+  with zero sweeps / zero lowerings from a shared cache.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.session import ProfileSession
+from repro.kernels import registry, sampling
+
+B, V = 8, 384
+
+
+def _logits(key=0, b=B, v=V):
+    return jax.random.normal(jax.random.PRNGKey(key), (b, v), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# the Pallas argmax reduction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block", [(8, 128), (8, 256), (16, 128)])
+def test_block_argmax_matches_jnp(block):
+    x = _logits(3)
+    got = sampling.block_argmax(x, block_rows=block[0],
+                                block_vocab=block[1], interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.argmax(x, axis=-1)))
+
+
+def test_block_argmax_ties_pick_lowest_index():
+    # quantize so equal maxima straddle block boundaries
+    x = jnp.round(_logits(4) * 2.0) / 2.0
+    got = sampling.block_argmax(x, block_rows=8, block_vocab=128,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.argmax(x, axis=-1)))
+
+
+def test_block_argmax_ragged_shapes():
+    x = _logits(5, b=3, v=130)                # forces row + vocab padding
+    got = sampling.block_argmax(x, block_rows=8, block_vocab=128,
+                                interpret=True)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jnp.argmax(x, axis=-1)))
+
+
+# ---------------------------------------------------------------------------
+# the PRNG contract
+# ---------------------------------------------------------------------------
+
+def test_unfiltered_topp_bit_identical_to_categorical():
+    logits, t = _logits(6), 0.7
+    key = jax.random.PRNGKey(9)
+    want = jax.random.categorical(key, logits / t)
+    got = sampling.sample_ref(logits, key, method="top_p", temperature=t,
+                              p=1.0)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # the Pallas impl under the same key emits the same tokens
+    got_pl = registry.run("sampling", logits, key, impl="pallas_topp",
+                          method="top_p", temperature=t, p=1.0,
+                          interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_pl), np.asarray(want))
+
+
+def test_raw_and_typed_keys_equivalent():
+    logits = _logits(7)
+    typed = jax.random.key(5)
+    raw = jax.random.key_data(typed).astype(jnp.uint32)
+    a = sampling.sample_ref(logits, typed, method="top_k", k=8)
+    b = sampling.sample_ref(logits, raw, method="top_k", k=8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("method,kw", [("top_k", {"k": 8}),
+                                       ("top_p", {"p": 0.9})])
+def test_pallas_jnp_token_parity(method, kw):
+    logits = _logits(8)
+    for seed in range(4):
+        key = jax.random.PRNGKey(100 + seed)
+        want = registry.run("sampling", logits, key,
+                            impl=f"jnp_{method.replace('_', '')}",
+                            method=method, temperature=0.8, **kw)
+        got = registry.run("sampling", logits, key,
+                           impl=f"pallas_{method.replace('_', '')}",
+                           method=method, temperature=0.8, interpret=True,
+                           **kw)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_topk_samples_stay_in_the_topk_set():
+    logits, k = _logits(10), 4
+    top = np.asarray(jax.lax.top_k(logits, k)[1])
+    for seed in range(8):
+        tok = np.asarray(sampling.sample_ref(
+            logits, jax.random.PRNGKey(seed), method="top_k", k=k))
+        for row in range(logits.shape[0]):
+            assert tok[row] in top[row]
+
+
+def test_topp_filter_keeps_nucleus_only():
+    logits, p = _logits(11), 0.5
+    x = sampling.filtered_logits(logits, p=p)
+    probs = np.asarray(jax.nn.softmax(logits, axis=-1))
+    kept = np.asarray(jnp.isfinite(x))
+    for row in range(logits.shape[0]):
+        # the kept set is the smallest prefix of the sorted probs >= p
+        order = np.argsort(-probs[row])
+        csum = np.cumsum(probs[row][order])
+        n = int(np.searchsorted(csum, p) + 1)
+        assert set(np.flatnonzero(kept[row])) == set(order[:n])
+
+
+def test_greedy_ignores_key():
+    logits = _logits(12)
+    a = sampling.sample(logits, jax.random.PRNGKey(0), method="greedy")
+    b = sampling.sample(logits, None, method="greedy")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a),
+                                  np.asarray(jnp.argmax(logits, axis=-1)))
+
+
+# ---------------------------------------------------------------------------
+# dispatch + tuning
+# ---------------------------------------------------------------------------
+
+def test_dispatch_selects_by_method_and_backend():
+    for method, suffix in [("greedy", "greedy"), ("top_k", "topk"),
+                           ("top_p", "topp")]:
+        impl = registry.select("sampling", method=method)
+        want = "pallas_" if jax.default_backend() == "tpu" else "jnp_"
+        assert impl == want + suffix
+    with pytest.raises(Exception):
+        registry.run("sampling", _logits(), None, method="nope")
+
+
+def test_autotune_cold_then_warm_zero_lowerings(tmp_path):
+    facts = dict(b=8, v=512, method="top_k", dtype=jnp.float32)
+    cands = ((8, 128), (8, 256))
+    cold = ProfileSession(cache_dir=str(tmp_path / "c"))
+    rec = registry.autotune("sampling", cold, impl="pallas_topk",
+                            candidates=cands, **facts)
+    assert rec.swept and rec.choice in cands
+    warm = ProfileSession(cache_dir=str(tmp_path / "c"))
+    rec2 = registry.autotune("sampling", warm, impl="pallas_topk",
+                             candidates=cands, **facts)
+    assert not rec2.swept and rec2.lowerings == 0
+    assert warm.lowerings == 0
+    assert rec2.choice == rec.choice
+
+
+def test_suite_cells_cover_topk_and_topp():
+    from repro.core import perf_report as pr
+    for cell in ("sampling_topk", "sampling_topp"):
+        family, impl, facts = pr.suite_family(cell)
+        assert family == "sampling" and impl.startswith("pallas_")
+        args, kwargs, key = pr.suite_inputs(cell)
+        assert args[0].shape == (facts["b"], facts["v"])
+        assert kwargs["method"] == facts["method"]
+        assert key == sampling.sampling_tune_key(
+            b=facts["b"], v=facts["v"], method=facts["method"],
+            dtype=jnp.float32)
